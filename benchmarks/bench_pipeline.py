@@ -1,0 +1,39 @@
+# Data-pipeline benchmark: tokens/sec through the forelem-optimized ingest
+# (filter → dictionary-encode → pack) and loader batch throughput.
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.data.pipeline import PipelineConfig, ShardedLoader, build_dataset
+
+
+def _corpus(n_docs: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    words = [f"w{i}" for i in range(5000)]
+    docs = []
+    for _ in range(n_docs):
+        n = int(rng.integers(5, 400))
+        docs.append(" ".join(words[i] for i in rng.integers(0, len(words), n)))
+    return docs
+
+
+def run() -> List[Tuple[str, float, str]]:
+    out: List[Tuple[str, float, str]] = []
+    docs = _corpus(2000)
+    t0 = time.perf_counter()
+    ds = build_dataset(docs, PipelineConfig(seq_len=512, min_doc_tokens=8))
+    t = time.perf_counter() - t0
+    out.append(("pipeline_build_2kdocs", t * 1e6, f"{ds.n_tokens/t/1e3:.0f}ktok/s"))
+
+    loader = ShardedLoader(ds, global_batch=32, n_shards=4, shard=0)
+    t0 = time.perf_counter()
+    n = 0
+    for step in range(50):
+        b = loader.shard_slice(loader.batch(step))
+        n += b["tokens"].size
+    t = time.perf_counter() - t0
+    out.append(("pipeline_loader_50steps", t * 1e6, f"{n/t/1e6:.1f}Mtok/s"))
+    return out

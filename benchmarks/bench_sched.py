@@ -1,0 +1,45 @@
+# Loop-scheduling benchmark (paper §III-A2/A3): makespans of static vs
+# dynamic policies under heterogeneity, stragglers and failures, plus the
+# hybrid fault-tolerant scheduler.  derived = speedup vs static / recovery
+# overhead.
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.sched.loop_schedule import make_policy, simulate_schedule
+from repro.sched.fault_tolerant import HybridFaultTolerantScheduler, verify_coverage
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    out: List[Tuple[str, float, str]] = []
+    costs = rng.uniform(0.5, 1.5, 20000)
+    speeds = [1.0] * 7 + [0.35]  # one straggler node
+
+    t0 = time.perf_counter()
+    st = simulate_schedule(make_policy("static", len(costs), 8), costs, 8, worker_speed=speeds)
+    for name in ("gss", "tss", "factoring", "feedback"):
+        r = simulate_schedule(make_policy(name, len(costs), 8), costs, 8,
+                              worker_speed=speeds, dispatch_overhead=0.05)
+        out.append((f"sched_{name}_straggler", r.makespan * 1e6, f"{st.makespan/r.makespan:.2f}x_vs_static"))
+    out.append(("sched_static_straggler", st.makespan * 1e6, "1.0x"))
+
+    # failure recovery: 2 of 8 workers die mid-run
+    r_fail = simulate_schedule(make_policy("gss", len(costs), 8), costs, 8,
+                               failures={2: 200.0, 5: 500.0}, dispatch_overhead=0.05)
+    r_base = simulate_schedule(make_policy("gss", len(costs), 8), costs, 8, dispatch_overhead=0.05)
+    out.append(("sched_gss_2failures", r_fail.makespan * 1e6,
+                f"overhead_{(r_fail.makespan/r_base.makespan-1)*100:.0f}%_rescheduled_{r_fail.rescheduled_iters}"))
+
+    # hybrid FT scheduler end-to-end
+    s = HybridFaultTolerantScheduler(8000, 16, iter_cost=0.01, checkpoint_period=5.0)
+    res = s.run(failures={1: 2.0, 5: 4.0, 9: 6.0}, joins={16: 8.0})
+    assert verify_coverage(res, 8000)
+    out.append(("sched_hybrid_ft_3failures_1join", res.makespan * 1e6,
+                f"lost_{res.lost_work}_dup_{res.duplicated_work}_ckpt_{res.checkpoints}"))
+    wall = time.perf_counter() - t0
+    out.append(("sched_bench_wall", wall * 1e6, "-"))
+    return out

@@ -1,0 +1,37 @@
+# Benchmark harness: one module per paper table/figure + substrate benches.
+# Prints ``name,us_per_call,derived`` CSV (and tees a copy under runs/).
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    rows = []
+    from . import bench_fig2, bench_kernels, bench_pipeline, bench_sched
+
+    suites = [
+        ("fig2", bench_fig2.run),
+        ("kernels", bench_kernels.run),
+        ("sched", bench_sched.run),
+        ("pipeline", bench_pipeline.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        try:
+            for row in fn():
+                rows.append(row)
+                print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+        except Exception as e:
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    os.makedirs("runs", exist_ok=True)
+    with open("runs/bench_latest.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in rows:
+            f.write(f"{r[0]},{r[1]:.1f},{r[2]}\n")
+
+
+if __name__ == "__main__":
+    main()

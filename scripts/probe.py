@@ -1,0 +1,13 @@
+# Hillclimb probe runner: decompose peak memory / terms across variants.
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS","")
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+
+arch, shape, tag = sys.argv[1], sys.argv[2], sys.argv[3]
+probe = json.loads(sys.argv[4]) if len(sys.argv) > 4 else {}
+rec = run_cell(arch, shape, False, "runs/probe", probe=probe, tag=tag)
+h = rec.get("hlo", {})
+print(f"{tag}: peak {rec['memory']['peak_device_bytes']/1e9:.2f} GB | "
+      f"dot {h.get('dot_flops',0):.3e} | traffic {h.get('traffic_bytes',0):.3e} | "
+      f"coll {sum(h.get('collective_bytes',{}).values()):.3e} | compile {rec['t_compile_s']}s")

@@ -1,0 +1,45 @@
+# The paper's primary contribution — the forelem single intermediate
+# representation: one IR in which query optimization, classic compiler
+# optimization, parallelization, data distribution and data reformatting are
+# all carried out (Rietveld & Wijshoff, 2022).
+from .ir import (  # noqa: F401
+    Accumulate,
+    ArrayRead,
+    BinOp,
+    Blocked,
+    CombinePartials,
+    Const,
+    Distinct,
+    Expr,
+    FieldMatch,
+    FieldRef,
+    Filtered,
+    ForValue,
+    Forall,
+    Forelem,
+    FullSet,
+    IndexSet,
+    MultisetDecl,
+    Program,
+    RangePart,
+    ResultAppend,
+    ScalarAssign,
+    Stmt,
+    TupleExpr,
+    TupleSchema,
+    ValueRange,
+    Var,
+    program_str,
+)
+from .lower import (  # noqa: F401
+    CodegenChoices,
+    JaxLowering,
+    Plan,
+    ReferenceInterpreter,
+    UnsupportedProgram,
+)
+from .passes import OptimizeOptions, OptimizeResult, optimize  # noqa: F401
+from . import transforms  # noqa: F401
+from . import partition  # noqa: F401
+from . import distribution  # noqa: F401
+from . import reformat  # noqa: F401

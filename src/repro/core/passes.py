@@ -1,0 +1,111 @@
+# The "super-optimizer" (paper §I: "all problems can be expressed in this
+# single intermediate representation, allowing a single 'super'-optimizer to
+# be employed").  One entry point runs query optimization, classic loop
+# optimization, parallelization, distribution selection and reformatting on
+# any frontend-produced program.
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.data.multiset import Database
+from .ir import Program, program_str
+from . import transforms as T
+from .partition import partition_direct, partition_indirect
+from .distribution import optimize_distribution, DistributionReport
+from .reformat import auto_reformat, ReformatPlan
+from .lower import CodegenChoices, Plan
+
+
+@dataclass
+class OptimizeOptions:
+    n_parts: int = 1                   # target parallel width (forall N)
+    partition: str = "indirect"        # 'direct' | 'indirect' | 'none'
+    partition_field: Optional[Tuple[str, str]] = None  # (table, field)
+    mesh_axis: Optional[str] = None
+    reformat: bool = True
+    expected_runs: int = 10
+    agg_method: str = "dense"
+    parallel_exec: str = "vmap"        # 'none' | 'vmap' | 'shard_map'
+    mesh: Any = None
+    trace: bool = False
+
+
+@dataclass
+class OptimizeResult:
+    program: Program
+    db: Database
+    plan: Plan
+    distribution: Optional[DistributionReport]
+    reformat: Optional[ReformatPlan]
+    trace: List[str] = field(default_factory=list)
+
+
+def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = None) -> OptimizeResult:
+    """The full pass pipeline (paper §II–§III):
+
+    1. query optimization:  interchange (push selections out), DCE, fusion
+    2. data reformatting:   dict-encode / prune / compress (amortized)
+    3. parallelization:     direct or indirect partitioning to n_parts
+    4. iteration-space expansion (privatized accumulators) + code motion
+    5. distribution:        conflict resolution by reorder+fusion
+    6. codegen:             index-set materialization + parallel execution
+    """
+    opts = opts or OptimizeOptions()
+    trace: List[str] = []
+
+    def log(stage: str, p: Program) -> None:
+        if opts.trace:
+            trace.append(f"=== {stage} ===\n{program_str(p)}")
+
+    p = program
+    log("input", p)
+
+    # -- 1. query optimization ------------------------------------------------
+    p = T.loop_interchange(p)
+    p = T.dead_code_elimination(p)
+    p = T.loop_fusion(p)
+    log("query-optimized", p)
+
+    # -- 2. data reformatting ---------------------------------------------------
+    ref_plan = None
+    if opts.reformat:
+        db, ref_plan = auto_reformat(p, db, opts.expected_runs)
+
+    # -- 3/4. parallelization ---------------------------------------------------
+    if opts.n_parts > 1 and opts.partition != "none":
+        if opts.partition == "direct":
+            p = partition_direct(p, opts.n_parts, mesh_axis=opts.mesh_axis)
+        else:
+            tf = opts.partition_field
+            if tf is None:
+                tf = _default_partition_field(p)
+            if tf is not None:
+                p = partition_indirect(p, tf[0], tf[1], opts.n_parts, mesh_axis=opts.mesh_axis)
+        p = T.iteration_space_expansion(p)
+        log("parallelized", p)
+
+    # -- 5. distribution ---------------------------------------------------------
+    dist_report = None
+    p, dist_report = optimize_distribution(p, db=db)
+    log("distributed", p)
+
+    # -- 6. codegen ----------------------------------------------------------------
+    choices = CodegenChoices(
+        agg_method=opts.agg_method,
+        parallel=opts.parallel_exec if opts.n_parts > 1 else "none",
+        mesh=opts.mesh,
+    )
+    plan = Plan(p, db, choices)
+    return OptimizeResult(p, db, plan, dist_report, ref_plan, trace)
+
+
+def _default_partition_field(p: Program) -> Optional[Tuple[str, str]]:
+    """Pick the first aggregation key as the indirect-partition field (the
+    paper's X = Access.url choice)."""
+    from .ir import Accumulate, FieldRef, walk
+
+    for s in walk(p.body):
+        if isinstance(s, Accumulate) and isinstance(s.key, FieldRef):
+            return (s.key.table, s.key.field)
+    return None

@@ -1,0 +1,200 @@
+# Columnar storage for multisets of tuples (paper §III-C1: the compiler owns
+# the physical layout — row files, column stores, compressed columns,
+# dictionary encoding).
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.ir import MultisetDecl, TupleSchema
+
+# ---------------------------------------------------------------------------
+# Column encodings
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PlainColumn:
+    """Physically stored values (numpy array; ints/floats — or object array
+    of strings for the *unreformatted* 'hadoop layout' baseline)."""
+
+    values: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    def materialize(self) -> np.ndarray:
+        return self.values
+
+    @property
+    def nbytes(self) -> int:
+        if self.values.dtype == object:
+            return int(sum(len(str(v)) for v in self.values))
+        return int(self.values.nbytes)
+
+
+@dataclass
+class CompressedRangeColumn:
+    """A column enumerating a range is not physically stored in full; only a
+    description (start, step, length) is stored and reconstructed on read
+    (paper §III-C1 'compressed column schemes')."""
+
+    start: int
+    step: int
+    length: int
+    dtype: Any = np.int32
+
+    def __len__(self) -> int:
+        return self.length
+
+    def materialize(self) -> np.ndarray:
+        return (self.start + self.step * np.arange(self.length)).astype(self.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return 24  # the description only
+
+
+@dataclass
+class DictColumn:
+    """Dictionary-encoded column: integer codes + a value dictionary
+    (paper §IV: 'the strings ... have been replaced with integer keys ...
+    the data model has been made relational')."""
+
+    codes: np.ndarray  # int32 codes
+    dictionary: np.ndarray  # code -> original value (object array ok)
+
+    def __len__(self) -> int:
+        return len(self.codes)
+
+    def materialize(self) -> np.ndarray:
+        return self.codes  # compute on codes; decode() recovers values
+
+    def decode(self) -> np.ndarray:
+        return self.dictionary[self.codes]
+
+    @property
+    def num_keys(self) -> int:
+        return int(len(self.dictionary))
+
+    @property
+    def nbytes(self) -> int:
+        d = sum(len(str(v)) for v in self.dictionary) if self.dictionary.dtype == object else self.dictionary.nbytes
+        return int(self.codes.nbytes) + int(d)
+
+
+Column = Any  # PlainColumn | CompressedRangeColumn | DictColumn
+
+
+def dict_encode(values: np.ndarray) -> DictColumn:
+    dictionary, codes = np.unique(np.asarray(values), return_inverse=True)
+    return DictColumn(codes.astype(np.int32), dictionary)
+
+
+# ---------------------------------------------------------------------------
+# Multiset (columnar table)
+# ---------------------------------------------------------------------------
+
+
+class Multiset:
+    """A multiset of tuples, stored column-wise."""
+
+    def __init__(self, name: str, columns: Dict[str, Column]):
+        self.name = name
+        self.columns = dict(columns)
+        lens = {len(c) for c in columns.values()}
+        if len(lens) > 1:
+            raise ValueError(f"ragged columns in multiset {name}: {lens}")
+        self._len = lens.pop() if lens else 0
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def from_records(name: str, records: Sequence[Tuple], fields: Sequence[str]) -> "Multiset":
+        cols: Dict[str, Column] = {}
+        for i, f in enumerate(fields):
+            vals = [r[i] for r in records]
+            arr = np.array(vals)
+            cols[f] = PlainColumn(arr)
+        return Multiset(name, cols)
+
+    @staticmethod
+    def from_columns(name: str, **cols: np.ndarray) -> "Multiset":
+        return Multiset(name, {k: PlainColumn(np.asarray(v)) for k, v in cols.items()})
+
+    # -- access -------------------------------------------------------------
+    def __len__(self) -> int:
+        return self._len
+
+    def field(self, name: str) -> np.ndarray:
+        """Materialized computational view of a column (codes for dict cols)."""
+        return self.columns[name].materialize()
+
+    def field_names(self) -> List[str]:
+        return list(self.columns)
+
+    def decl(self) -> MultisetDecl:
+        fields = []
+        for n, c in self.columns.items():
+            arr = c.materialize() if not isinstance(c, DictColumn) else c.codes
+            dt = "key" if isinstance(c, DictColumn) else str(np.asarray(arr).dtype)
+            fields.append((n, dt))
+        return MultisetDecl(self.name, TupleSchema(tuple(fields)))
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.nbytes for c in self.columns.values())
+
+    # -- reformatting (paper §III-C1) ---------------------------------------
+    def reformat_dict_encode(self, fields: Optional[Sequence[str]] = None) -> "Multiset":
+        """Replace string/object columns (or the given fields) by
+        dictionary-encoded integer-key columns."""
+        out: Dict[str, Column] = {}
+        for n, c in self.columns.items():
+            sel = fields is None or n in fields
+            if sel and isinstance(c, PlainColumn) and c.values.dtype == object:
+                out[n] = dict_encode(c.values)
+            elif sel and fields is not None and n in fields and isinstance(c, PlainColumn):
+                out[n] = dict_encode(c.values)
+            else:
+                out[n] = c
+        return Multiset(self.name, out)
+
+    def reformat_prune(self, keep: Sequence[str]) -> "Multiset":
+        """Drop dead fields (paper: 'removing unused structure fields')."""
+        return Multiset(self.name, {n: c for n, c in self.columns.items() if n in keep})
+
+    def reformat_compress_ranges(self) -> "Multiset":
+        """Detect arithmetic-progression integer columns and store only the
+        range description."""
+        out: Dict[str, Column] = {}
+        for n, c in self.columns.items():
+            out[n] = c
+            if isinstance(c, PlainColumn) and np.issubdtype(c.values.dtype, np.integer) and len(c) >= 2:
+                v = c.values
+                step = int(v[1]) - int(v[0])
+                if np.all(np.diff(v) == step):
+                    out[n] = CompressedRangeColumn(int(v[0]), step, len(v), v.dtype)
+        return Multiset(self.name, out)
+
+
+class Database:
+    """Named multisets — the program's data environment."""
+
+    def __init__(self, tables: Optional[Dict[str, Multiset]] = None):
+        self.tables: Dict[str, Multiset] = dict(tables or {})
+
+    def add(self, ms: Multiset) -> "Database":
+        self.tables[ms.name] = ms
+        return self
+
+    def __getitem__(self, name: str) -> Multiset:
+        return self.tables[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.tables
+
+    def decls(self) -> Tuple[MultisetDecl, ...]:
+        return tuple(ms.decl() for ms in self.tables.values())

@@ -1,0 +1,442 @@
+# SQL frontend (paper §II, §IV): "SQL statements can be parsed into an AST
+# automatically" — queries are *expanded into forelem loops* inside the
+# application IR instead of being shipped to a DBMS.
+#
+# Supported subset (enough for every query in the paper + the benchmark
+# suite):   SELECT <items> FROM <table> [alias] [, <table> [alias]]
+#           [WHERE <pred>] [GROUP BY <col>]
+# items:    col | tab.col | COUNT(col|*) | SUM(expr) | MIN/MAX(expr) | AVG(expr)
+# pred:     conjunctions/disjunctions of comparisons over columns, numeric
+#           literals, string literals and :params;  equi-join predicates
+#           (a.x = b.y) become nested forelem loops (Fig. 1).
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.ir import (
+    Accumulate,
+    ArrayRead,
+    BinOp,
+    Const,
+    Distinct,
+    Expr,
+    FieldMatch,
+    FieldRef,
+    Filtered,
+    Forelem,
+    FullSet,
+    MultisetDecl,
+    Program,
+    ResultAppend,
+    ScalarAssign,
+    TupleExpr,
+    TupleSchema,
+    Var,
+)
+
+# ---------------------------------------------------------------------------
+# Tokenizer
+# ---------------------------------------------------------------------------
+
+_TOKEN_RE = re.compile(
+    r"""
+    (?P<ws>\s+)
+  | (?P<str>'[^']*')
+  | (?P<num>\d+\.\d+|\d+)
+  | (?P<param>:\w+)
+  | (?P<op><=|>=|!=|<>|=|<|>|\(|\)|,|\*|\+|-|/|\.)
+  | (?P<word>\w+)
+    """,
+    re.VERBOSE,
+)
+
+_KEYWORDS = {
+    "select", "from", "where", "group", "by", "and", "or", "as",
+    "count", "sum", "min", "max", "avg", "join", "on",
+}
+
+
+def tokenize(sql: str) -> List[Tuple[str, str]]:
+    out: List[Tuple[str, str]] = []
+    pos = 0
+    while pos < len(sql):
+        m = _TOKEN_RE.match(sql, pos)
+        if not m:
+            raise SQLError(f"bad token at {sql[pos:pos+20]!r}")
+        pos = m.end()
+        kind = m.lastgroup
+        text = m.group()
+        if kind == "ws":
+            continue
+        if kind == "word" and text.lower() in _KEYWORDS:
+            out.append(("kw", text.lower()))
+        else:
+            out.append((kind, text))
+    out.append(("eof", ""))
+    return out
+
+
+class SQLError(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# AST (SQL level — translated to forelem below)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SelectItem:
+    kind: str          # 'col' | 'agg'
+    agg: Optional[str]  # count/sum/min/max/avg
+    expr: Any          # ('col', tab_or_None, name) or arithmetic tree or '*'
+    alias: Optional[str] = None
+
+
+@dataclass
+class Query:
+    items: List[SelectItem]
+    tables: List[Tuple[str, Optional[str]]]  # (table, alias)
+    where: Optional[Any]
+    group_by: Optional[Tuple[Optional[str], str]]  # (tab, col)
+
+
+class Parser:
+    def __init__(self, tokens: List[Tuple[str, str]]):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self) -> Tuple[str, str]:
+        return self.toks[self.i]
+
+    def next(self) -> Tuple[str, str]:
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def expect(self, kind: str, text: Optional[str] = None) -> str:
+        k, t = self.next()
+        if k != kind or (text is not None and t != text):
+            raise SQLError(f"expected {kind}:{text}, got {k}:{t}")
+        return t
+
+    def accept(self, kind: str, text: Optional[str] = None) -> bool:
+        k, t = self.peek()
+        if k == kind and (text is None or t == text):
+            self.i += 1
+            return True
+        return False
+
+    # -- grammar -------------------------------------------------------------
+    def parse(self) -> Query:
+        self.expect("kw", "select")
+        items = [self.select_item()]
+        while self.accept("op", ","):
+            items.append(self.select_item())
+        self.expect("kw", "from")
+        tables = [self.table_ref()]
+        while self.accept("op", ",") or self.accept("kw", "join"):
+            tables.append(self.table_ref())
+            if self.accept("kw", "on"):
+                on = self.predicate()
+                self._on_preds.append(on)
+        where = None
+        if self.accept("kw", "where"):
+            where = self.predicate()
+        group_by = None
+        if self.accept("kw", "group"):
+            self.expect("kw", "by")
+            group_by = self.column()
+        self.expect("eof")
+        for on in self._on_preds:
+            where = on if where is None else ("and", where, on)
+        return Query(items, tables, where, group_by)
+
+    _on_preds: List[Any]
+
+    def parse_query(self) -> Query:
+        self._on_preds = []
+        return self.parse()
+
+    def select_item(self) -> SelectItem:
+        k, t = self.peek()
+        if k == "kw" and t in ("count", "sum", "min", "max", "avg"):
+            self.next()
+            self.expect("op", "(")
+            if t == "count" and self.accept("op", "*"):
+                expr = "*"
+            else:
+                expr = self.arith()
+            self.expect("op", ")")
+            alias = None
+            if self.accept("kw", "as"):
+                alias = self.next()[1]
+            return SelectItem("agg", t, expr, alias)
+        expr = self.arith()
+        alias = None
+        if self.accept("kw", "as"):
+            alias = self.next()[1]
+        return SelectItem("col", None, expr, alias)
+
+    def table_ref(self) -> Tuple[str, Optional[str]]:
+        name = self.expect("word")
+        k, t = self.peek()
+        alias = None
+        if k == "word":
+            alias = self.next()[1]
+        return (name, alias)
+
+    def column(self) -> Tuple[Optional[str], str]:
+        a = self.expect("word")
+        if self.accept("op", "."):
+            b = self.expect("word")
+            return (a, b)
+        return (None, a)
+
+    def atom(self) -> Any:
+        k, t = self.peek()
+        if k == "num":
+            self.next()
+            return ("lit", float(t) if "." in t else int(t))
+        if k == "str":
+            self.next()
+            return ("lit", t[1:-1])
+        if k == "param":
+            self.next()
+            return ("param", t[1:])
+        if k == "op" and t == "(":
+            self.next()
+            e = self.arith()
+            self.expect("op", ")")
+            return e
+        if k == "word":
+            return ("col", *self.column())
+        raise SQLError(f"bad atom {k}:{t}")
+
+    def arith(self) -> Any:
+        e = self.term()
+        while True:
+            k, t = self.peek()
+            if k == "op" and t in ("+", "-"):
+                self.next()
+                e = (t, e, self.term())
+            else:
+                return e
+
+    def term(self) -> Any:
+        e = self.atom()
+        while True:
+            k, t = self.peek()
+            if k == "op" and t in ("*", "/"):
+                self.next()
+                e = (t, e, self.atom())
+            else:
+                return e
+
+    def predicate(self) -> Any:
+        e = self.pred_and()
+        while self.accept("kw", "or"):
+            e = ("or", e, self.pred_and())
+        return e
+
+    def pred_and(self) -> Any:
+        e = self.comparison()
+        while self.accept("kw", "and"):
+            e = ("and", e, self.comparison())
+        return e
+
+    def comparison(self) -> Any:
+        l = self.arith()
+        k, t = self.next()
+        if k != "op" or t not in ("=", "!=", "<>", "<", "<=", ">", ">="):
+            raise SQLError(f"bad comparison op {t}")
+        op = {"=": "==", "<>": "!="}.get(t, t)
+        r = self.arith()
+        return (op, l, r)
+
+
+def parse_sql(sql: str) -> Query:
+    return Parser(tokenize(sql)).parse_query()
+
+
+# ---------------------------------------------------------------------------
+# Translation: SQL AST → forelem Program (paper §IV examples)
+# ---------------------------------------------------------------------------
+
+
+def _resolve(tab: Optional[str], col: str, tables: List[Tuple[str, Optional[str]]]) -> str:
+    """alias/implicit table resolution → physical table name."""
+    if tab is None:
+        if len(tables) != 1:
+            raise SQLError(f"ambiguous column {col} over {tables}")
+        return tables[0][0]
+    for name, alias in tables:
+        if tab == alias or tab == name:
+            return name
+    raise SQLError(f"unknown table/alias {tab}")
+
+
+def _to_expr(node: Any, loopvars: Dict[str, str], tables) -> Expr:
+    """SQL expr tree → IR Expr; loopvars: physical table -> loop var."""
+    if isinstance(node, tuple):
+        if node[0] == "lit":
+            return Const(node[1])
+        if node[0] == "param":
+            return Var(node[1])
+        if node[0] == "col":
+            _, tab, col = node
+            pt = _resolve(tab, col, tables)
+            return FieldRef(pt, loopvars[pt], col)
+        op, l, r = node
+        return BinOp(op, _to_expr(l, loopvars, tables), _to_expr(r, loopvars, tables))
+    raise SQLError(f"bad expr {node!r}")
+
+
+def _split_join_pred(pred: Any, tables) -> Tuple[List[Tuple[str, str, str, str]], Optional[Any]]:
+    """Extract equi-join conditions (tabA, colA, tabB, colB) from an AND-tree;
+    returns (joins, residual_pred)."""
+    joins: List[Tuple[str, str, str, str]] = []
+
+    def is_col(n):
+        return isinstance(n, tuple) and n[0] == "col"
+
+    def go(n) -> Optional[Any]:
+        if isinstance(n, tuple) and n[0] == "and":
+            l = go(n[1])
+            r = go(n[2])
+            if l is None:
+                return r
+            if r is None:
+                return l
+            return ("and", l, r)
+        if isinstance(n, tuple) and n[0] == "==" and is_col(n[1]) and is_col(n[2]):
+            ta = _resolve(n[1][1], n[1][2], tables)
+            tb = _resolve(n[2][1], n[2][2], tables)
+            if ta != tb:
+                joins.append((ta, n[1][2], tb, n[2][2]))
+                return None
+        return n
+
+    residual = go(pred) if pred is not None else None
+    return joins, residual
+
+
+def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[str] = None) -> Program:
+    """Compile a SQL string into a forelem Program.
+
+    schemas: table -> field names (dtypes are refined from data at lowering).
+    """
+    q = parse_sql(sql)
+    tables = q.tables
+    decls = tuple(
+        MultisetDecl(t, TupleSchema(tuple((f, "any") for f in schemas[t]))) for t, _ in tables
+    )
+    params: List[str] = sorted({m.group(1) for m in re.finditer(r":(\w+)", sql)})
+
+    # ------- single-table queries ---------------------------------------------
+    if len(tables) == 1:
+        t = tables[0][0]
+        lv = {t: "i"}
+        pred = _to_pred(q.where, lv, tables)
+
+        if q.group_by is not None:
+            gtab = _resolve(q.group_by[0], q.group_by[1], tables)
+            gcol = q.group_by[1]
+            body: List[Any] = []
+            reads: List[Expr] = []
+            arr_i = 0
+            accs: List[Accumulate] = []
+            for it in q.items:
+                if it.kind == "col":
+                    e = _to_expr(it.expr, lv, tables)
+                    if not (isinstance(e, FieldRef) and e.field == gcol):
+                        raise SQLError("non-grouped bare column in GROUP BY select")
+                    reads.append(FieldRef(gtab, "i", gcol))
+                else:
+                    arr = f"agg{arr_i}"
+                    arr_i += 1
+                    if it.agg == "count":
+                        val: Expr = Const(1)
+                        accs.append(Accumulate(arr, FieldRef(gtab, "i", gcol), val))
+                        reads.append(ArrayRead(arr, FieldRef(gtab, "i", gcol)))
+                    elif it.agg in ("sum", "min", "max"):
+                        val = _to_expr(it.expr, lv, tables)
+                        op = {"sum": "+", "min": "min", "max": "max"}[it.agg]
+                        accs.append(Accumulate(arr, FieldRef(gtab, "i", gcol), val, op))
+                        reads.append(ArrayRead(arr, FieldRef(gtab, "i", gcol)))
+                    elif it.agg == "avg":
+                        sarr, carr = f"agg{arr_i}s", f"agg{arr_i}c"
+                        accs.append(Accumulate(sarr, FieldRef(gtab, "i", gcol), _to_expr(it.expr, lv, tables)))
+                        accs.append(Accumulate(carr, FieldRef(gtab, "i", gcol), Const(1)))
+                        reads.append(
+                            BinOp("/", ArrayRead(sarr, FieldRef(gtab, "i", gcol)), ArrayRead(carr, FieldRef(gtab, "i", gcol)))
+                        )
+                    else:
+                        raise SQLError(f"agg {it.agg}")
+            ix = FullSet(t) if pred is None else Filtered(t, pred)
+            body.append(Forelem("i", ix, tuple(accs)))
+            body.append(
+                Forelem("i", Distinct(t, gcol), (ResultAppend("R", TupleExpr(tuple(reads))),))
+            )
+            return Program(decls, tuple(body), ("R",), tuple(params), name or "sql_groupby")
+
+        # scalar aggregate (no GROUP BY) --------------------------------------
+        if any(it.kind == "agg" for it in q.items):
+            if len(q.items) != 1:
+                raise SQLError("multiple scalar aggregates unsupported")
+            it = q.items[0]
+            if it.agg not in ("sum", "count", "avg"):
+                raise SQLError(f"scalar agg {it.agg}")
+            val = Const(1) if (it.agg == "count" or it.expr == "*") else _to_expr(it.expr, lv, tables)
+            ix = FullSet(t) if pred is None else Filtered(t, pred)
+            body2: List[Any] = [Forelem("i", ix, (ScalarAssign("scalar", val, "+"),))]
+            if it.agg == "avg":
+                body2 = [
+                    Forelem("i", ix, (ScalarAssign("scalar", val, "+"), ScalarAssign("n", Const(1), "+"))),
+                ]
+                # final divide handled by consumer; expose both
+                return Program(decls, tuple(body2), ("scalar", "n"), tuple(params), name or "sql_avg")
+            return Program(decls, tuple(body2), ("scalar",), tuple(params), name or "sql_scalar")
+
+        # plain select/project --------------------------------------------------
+        items = tuple(_to_expr(it.expr, lv, tables) for it in q.items)
+        ix = FullSet(t) if pred is None else Filtered(t, pred)
+        body3 = (Forelem("i", ix, (ResultAppend("R", TupleExpr(items)),)),)
+        return Program(decls, body3, ("R",), tuple(params), name or "sql_select")
+
+    # ------- two-table equi-join ------------------------------------------------
+    if len(tables) == 2:
+        joins, residual = _split_join_pred(q.where, tables)
+        if len(joins) != 1:
+            raise SQLError("exactly one equi-join condition supported")
+        ta, ca, tb, cb = joins[0]
+        lv = {ta: "i", tb: "j"}
+        if residual is not None:
+            raise SQLError("residual join predicates unsupported")
+        items = tuple(_to_expr(it.expr, lv, tables) for it in q.items)
+        body4 = (
+            Forelem(
+                "i",
+                FullSet(ta),
+                (
+                    Forelem(
+                        "j",
+                        FieldMatch(tb, cb, FieldRef(ta, "i", ca)),
+                        (ResultAppend("R", TupleExpr(items)),),
+                    ),
+                ),
+            ),
+        )
+        return Program(decls, body4, ("R",), tuple(params), name or "sql_join")
+
+    raise SQLError(">2 tables unsupported")
+
+
+def _to_pred(where: Any, loopvars: Dict[str, str], tables) -> Optional[Expr]:
+    if where is None:
+        return None
+    # predicates in Filtered index sets use the placeholder loopvar '_'
+    ph = {t: "_" for t in loopvars}
+    return _to_expr(where, ph, tables)

@@ -1,0 +1,125 @@
+# Pallas TPU kernel: flash attention forward (causal / sliding-window /
+# softcap, GQA), online softmax with VMEM-resident running max / denominator
+# / accumulator across the sequential kv-block grid dimension.
+#
+# Grid: (B * H, num_q_blocks, num_kv_blocks) — the kv dimension is innermost
+# (sequential on TPU), so (m, l, acc) scratch carries across kv steps of one
+# (head, q-block).  GQA is expressed in the k/v BlockSpec index maps (query
+# head bh maps to kv head (bh % H) // G), so kv tiles are fetched once per
+# group — no repeated-KV materialization in HBM.
+#
+# VMEM budget per step (defaults qb = kb = 512, D ≤ 256, fp32 scratch):
+#   q/k/v tiles ≤ 3 · 512 · 256 · 4B = 1.5 MB; s/p (512²) = 1 MB;
+#   acc 512 · 256 · 4B = 0.5 MB  → ~3 MB, comfortably inside 16 MB VMEM,
+# with qb × kb and kb × D contractions mapped onto the 128×128 MXU.
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0e38
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int, softcap: float,
+    qb: int, kb: int, n_kv: int, sq: int, sk: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (qb, D)
+    k = k_ref[0].astype(jnp.float32)  # (kb, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (qb, kb)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    # global indices; query end aligned to key end (decode-style offset)
+    q_ids = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0) + (sk - sq)
+    k_ids = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+    mask = k_ids < sk
+    if causal:
+        mask &= k_ids <= q_ids
+    if window > 0:
+        mask &= (q_ids - k_ids) < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_scr[...]
+        lsafe = jnp.where(l == 0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / lsafe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float = 1.0,
+    logit_softcap: float = 0.0,
+    q_block: int = 512,
+    kv_block: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    pq, pk = (-Sq) % qb, (-Sk) % kb
+    # (B*H, S, D) layout; kv padded tail masked via k_ids < sk
+    qt = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).transpose(0, 2, 1, 3).reshape(B * H, Sq + pq, D)
+    kt = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3).reshape(B * Hkv, Sk + pk, D)
+    vt = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3).reshape(B * Hkv, Sk + pk, D)
+    nq, nk = (Sq + pq) // qb, (Sk + pk) // kb
+
+    def kv_index(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * Hkv + h // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            softcap=logit_softcap, qb=qb, kb=kb, n_kv=nk, sq=Sq, sk=Sk,
+        ),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kb, D), kv_index),
+            pl.BlockSpec((1, kb, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, qb, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(B, H, Sq + pq, D)[:, :, :Sq].transpose(0, 2, 1, 3)
+    return out

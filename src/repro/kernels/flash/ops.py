@@ -1,0 +1,27 @@
+# Jitted public wrapper for the flash attention kernel.
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "scale", "logit_softcap", "use_pallas"))
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int = 0, scale: float = 1.0,
+    logit_softcap: float = 0.0, use_pallas: bool = True,
+):
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window, scale=scale, logit_softcap=logit_softcap)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        logit_softcap=logit_softcap, interpret=_use_interpret(),
+    )

@@ -1,0 +1,37 @@
+# Pure-jnp oracle for flash attention: naive materialized-softmax attention
+# with GQA, causal/sliding-window masks and logit softcap.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = unlimited; else last `window` positions
+    scale: float = 1.0,
+    logit_softcap: float = 0.0,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if logit_softcap > 0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    q_ids = jnp.arange(Sq)[:, None] + (Sk - Sq)  # align ends (decode-style)
+    k_ids = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_ids <= q_ids
+    if window > 0:
+        mask &= (q_ids - k_ids) < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,83 @@
+# Pallas TPU kernel: segmented (group-by) aggregation.
+#
+# TPU adaptation of the paper's hash-table index-set materialization
+# (Fig. 1 bottom): scalar hashing is hostile to the VPU/MXU, so the
+# accumulator table lives in VMEM for the whole sequential grid (the VMEM
+# analogue of an L1-resident hash table) and each row tile contributes via a
+# one-hot × values contraction on the MXU.
+#
+# Layout: keys int32 (N,), values f32 (N,), out f32 (K,).  The wrapper pads
+# N to a multiple of the row tile (T) and K to a lane multiple (128).  The
+# grid is 1-D over row tiles; TPU grids execute sequentially, so read-
+# modify-write accumulation into o_ref across steps is race-free.
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3.0e38
+
+
+def _kernel_sum(keys_ref, vals_ref, out_ref, *, tile: int, num_keys: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # (T, 1) int32
+    vals = vals_ref[...]  # (T, 1) f32
+    key_ids = jax.lax.broadcasted_iota(jnp.int32, (tile, num_keys), 1)
+    onehot = (keys == key_ids).astype(vals.dtype)  # (T, K)
+    # (1, T) @ (T, K) -> (1, K): MXU contraction
+    out_ref[...] += jnp.dot(vals.T, onehot, preferred_element_type=jnp.float32)
+
+
+def _kernel_max(keys_ref, vals_ref, out_ref, *, tile: int, num_keys: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, NEG)
+
+    keys = keys_ref[...]
+    vals = vals_ref[...]
+    key_ids = jax.lax.broadcasted_iota(jnp.int32, (tile, num_keys), 1)
+    hit = keys == key_ids
+    contrib = jnp.where(hit, vals, NEG)  # (T, K)
+    out_ref[...] = jnp.maximum(out_ref[...], contrib.max(axis=0, keepdims=True))
+
+
+def segreduce_pallas(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    num_keys: int,
+    op: str = "sum",
+    tile: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n = keys.shape[0]
+    t = min(tile, max(8, n))
+    pad_n = (-n) % t
+    pad_k = (-num_keys) % 128
+    kp = num_keys + pad_k
+    keys_p = jnp.pad(keys.astype(jnp.int32), (0, pad_n), constant_values=kp)[:, None]
+    fill = 0.0 if op == "sum" else NEG
+    vals_p = jnp.pad(values.astype(jnp.float32), (0, pad_n), constant_values=fill)[:, None]
+    grid = ((n + pad_n) // t,)
+    body = _kernel_sum if op == "sum" else _kernel_max
+    out = pl.pallas_call(
+        functools.partial(body, tile=t, num_keys=kp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((t, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, kp), jnp.float32),
+        interpret=interpret,
+    )(keys_p, vals_p)
+    return out[0, :num_keys]

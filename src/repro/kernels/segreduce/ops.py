@@ -1,0 +1,23 @@
+# Jitted public wrapper for the segreduce kernel.
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segreduce_pallas
+from .ref import segreduce_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("num_keys", "op", "use_pallas"))
+def segreduce(keys, values, num_keys: int, op: str = "sum", use_pallas: bool = True):
+    """Group-by aggregation with the VMEM-resident Pallas kernel (interpret
+    mode off-TPU).  Falls back to the jnp oracle with use_pallas=False."""
+    if not use_pallas:
+        return segreduce_ref(keys, values, num_keys, op)
+    return segreduce_pallas(keys, values, num_keys, op, interpret=_use_interpret())

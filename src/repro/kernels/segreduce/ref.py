@@ -1,0 +1,14 @@
+# Pure-jnp oracle for the segreduce kernel.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segreduce_ref(keys: jnp.ndarray, values: jnp.ndarray, num_keys: int, op: str = "sum") -> jnp.ndarray:
+    """Group-by aggregation: out[k] = op over values[i] where keys[i] == k."""
+    if op == "sum":
+        return jax.ops.segment_sum(values, keys, num_segments=num_keys)
+    if op == "max":
+        return jax.ops.segment_max(values, keys, num_segments=num_keys)
+    raise ValueError(op)

@@ -1,0 +1,96 @@
+# Pallas TPU kernel: chunked WKV6 recurrence (RWKV6 "Finch" time-mix).
+#
+# TPU adaptation: the per-token recurrence is restructured into chunk-
+# parallel algebra (see models/rwkv6._wkv_chunked) with the (K, V) state
+# resident in VMEM across the sequential chunk grid — HBM traffic drops from
+# O(S·K·V) state reload (per-token scan) to O(S·K) activations + one state
+# residency, and the intra-chunk work becomes dense (L,L)/(L,K) contractions
+# for the MXU.  All decay factors are exact in log space (exponents ≤ 0).
+#
+# Grid: (B*H, n_chunks).  Inputs reshaped to (B*H, n, L, K) outside.
+# VMEM per step (L=32, K=64): pairwise decay tensor (L,L,K) fp32 = 256 KB,
+# tiles 4·L·K·4B = 32 KB, state K² fp32 = 16 KB.
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, cum_ref, cumq_ref, tot_ref, u_ref, y_ref, s_scr, *, L: int, K: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0]      # (L, K) f32
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    cum = cum_ref[0, 0]   # inclusive cumulative log decay (≤ 0)
+    cumq = cumq_ref[0, 0]  # exclusive (cum_{i-1})
+    tot = tot_ref[0, 0]   # (1, K) total chunk log decay
+    u = u_ref[0]          # (1, K) bonus
+
+    # intra-chunk pairwise decay D[i,j,k] = e^{cumq_i - cum_j} for j < i
+    ld = cumq[:, None, :] - cum[None, :, :]            # (L, L, K)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    lower = (jj < ii)[:, :, None]
+    D = jnp.where(lower, jnp.exp(jnp.where(lower, ld, 0.0)), 0.0)
+    A = jnp.sum(r[:, None, :] * k[None, :, :] * D, axis=-1)          # (L, L)
+    y = jnp.dot(A, v, preferred_element_type=jnp.float32)            # (L, K)
+    # self term with bonus u
+    Au = jnp.sum(r * (u * k), axis=-1, keepdims=True)                # (L, 1)
+    y = y + Au * v
+    # carried state contribution
+    y = y + jnp.dot(r * jnp.exp(cumq), s_scr[...], preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update with exact segment decay (≤ 1)
+    kseg = k * jnp.exp(tot - cum)                                    # (L, K)
+    s_scr[...] = jnp.exp(tot).T * s_scr[...] + jnp.dot(kseg.T, v, preferred_element_type=jnp.float32)
+
+
+def wkv6_pallas(
+    r, k, v, log_w, u, *, chunk: int = 32, interpret: bool = True
+):
+    """r/k/v/log_w: (B, S, H, K); u: (H, K).  Returns y (B, S, H, K)."""
+    B, S, H, K = r.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    Sp = S + pad
+    n = Sp // L
+
+    def prep(t, fill=0.0):
+        t = jnp.pad(t.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=fill)
+        return t.transpose(0, 2, 1, 3).reshape(B * H, n, L, K)
+
+    r_, k_, v_ = prep(r), prep(k), prep(v)
+    lw = prep(log_w)
+    cum = jnp.cumsum(lw, axis=2)
+    cumq = jnp.concatenate([jnp.zeros_like(cum[:, :, :1]), cum[:, :, :-1]], axis=2)
+    tot = cum[:, :, -1:]                                # (BH, n, 1, K)
+    u_bh = jnp.tile(u.astype(jnp.float32)[None], (B, 1, 1)).reshape(B * H, 1, K)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, L=L, K=K),
+        grid=(B * H, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, K), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, K), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, K), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, K), lambda bh, c: (bh, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, n, L, K), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r_, k_, v_, cum, cumq, tot, u_bh)
+    y = y.reshape(B, H, Sp, K).transpose(0, 2, 1, 3)[:, :S]
+    return y

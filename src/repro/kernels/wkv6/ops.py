@@ -1,0 +1,21 @@
+# Jitted public wrapper for the WKV6 kernel.
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import wkv6_pallas
+from .ref import wkv6_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def wkv6(r, k, v, log_w, u, chunk: int = 32, use_pallas: bool = True):
+    if not use_pallas:
+        y, _ = wkv6_ref(r, k, v, log_w, u)
+        return y
+    return wkv6_pallas(r, k, v, log_w, u, chunk=chunk, interpret=_use_interpret())

@@ -1,0 +1,24 @@
+# Pure-jnp oracle for the WKV6 recurrence: exact per-token scan.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, log_w, u, S0=None):
+    """r/k/v/log_w: (B, S, H, K) fp32; u: (H, K); S0: (B, H, K, K) or None.
+    Returns (y (B,S,H,K), S_out)."""
+    B, S, H, K = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(Sprev, inp):
+        rt, kt, vt, lwt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, Sprev + u[None, :, :, None] * kv)
+        S_new = jnp.exp(lwt)[..., None] * Sprev + kv
+        return S_new, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32) for t in (r, k, v, log_w))
+    S_out, ys = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), S_out

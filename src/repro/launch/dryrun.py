@@ -1,0 +1,375 @@
+# Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+# cell against the production mesh, record memory/cost/collective analysis.
+#
+# The two lines below MUST run before any other import (jax locks the device
+# count on first init).  Do NOT set this flag globally — smoke tests and
+# benches must see 1 device.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_config, list_archs, valid_cells
+from repro.models import shardctx
+from repro.models.transformer import Model, cache_axes, prefill_forward
+from repro.train.optimizer import AdamWConfig, adamw_init_abstract
+from repro.train.step import TrainSpec, make_train_step
+from repro.launch.mesh import dp_axes, dp_size, make_production_mesh
+from repro.launch.sharding import (
+    batch_axes,
+    decode_rules,
+    param_shardings,
+    replicated,
+    train_rules,
+    tree_shardings_from_axes,
+)
+from repro.launch.specs import decode_cache_specs, input_specs
+from repro.roofline import hlo_parse
+
+
+def _opt_shardings(param_sh, mesh, state_dtype: str = "f32", defs=None):
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.models.common import is_param_def
+    from repro.train.optimizer import AdamWState
+
+    if state_dtype == "int8":
+        assert defs is not None
+
+        def mk(sh, d):
+            # scale tensors keep the param rank but their last dim is 1 —
+            # same spec unless the spec explicitly sharded the last dim
+            parts = list(sh.spec)
+            if len(parts) == len(d.shape) and parts:
+                parts[-1] = None
+            while parts and parts[-1] is None:
+                parts.pop()
+            return {"q": sh, "s": NamedSharding(mesh, PartitionSpec(*parts))}
+
+        mv = jax.tree.map(mk, param_sh, defs, is_leaf=lambda x: isinstance(x, NamedSharding))
+        # align tree.map: param_sh leaves are NamedSharding, defs leaves ParamDef
+        return AdamWState(step=replicated(mesh), master=param_sh, m=mv, v=mv)
+    return AdamWState(step=replicated(mesh), master=param_sh, m=param_sh, v=param_sh)
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool, probe: Optional[Dict[str, Any]] = None):
+    """Returns (jitted_fn, args_abstract, meta).
+
+    `probe` options (perf-iteration experiments, EXPERIMENTS.md §Perf):
+      mode: 'full' (default) | 'grad' (loss+grad, no optimizer) | 'fwd'
+      microbatches: override the per-device-batch=1 default
+      accum_dtype:  'f32' (default) | 'bf16'
+      remat: bool (default True)
+    """
+    probe = probe or {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    if probe.get("remat_block"):
+        # coarser activation-checkpoint granularity: scan body = k pattern
+        # cycles, so the saved residual stack shrinks by k×
+        k = int(probe["remat_block"])
+        cfg = dataclasses.replace(cfg, layer_pattern=cfg.layer_pattern * k)
+    if probe.get("wkv_method"):
+        from repro.models import rwkv6 as _rwkv6
+
+        _rwkv6.DEFAULT_METHOD = probe["wkv_method"]
+    dp = dp_size(mesh)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch_shards=dp))
+    model = Model(cfg)
+    params_abs = model.abstract_params()
+
+    # Pin the residual stream to the solved batch-sharded layout (the auto
+    # partitioner otherwise drifts into batch-replicated activations).
+    dpx = dp_axes(mesh)
+    if cell.kind in ("train", "prefill"):
+        microbatches = probe.get("microbatches") or (max(1, cell.global_batch // dp) if cell.kind == "train" else 1)
+        per_mb_batch = cell.global_batch // microbatches
+        if per_mb_batch % dp == 0:
+            # optional SP-style variant: saved residuals additionally
+            # sharded over 'model' (gather re-inserted at block entry)
+            last = "model" if probe.get("hidden_model_shard") else None
+            shardctx.set_hidden_spec(P(dpx if len(dpx) > 1 else dpx[0], None, last))
+        else:
+            shardctx.set_hidden_spec(None)
+    else:
+        shardctx.set_hidden_spec(None)
+
+    # MoE dispatch layout (paper §III-A1 indirect partitioning): expert
+    # buffers (ns, E, C, d) — ns follows the token/data sharding; EP puts
+    # experts on 'model', TP keeps experts local and shards the expert
+    # hidden dim f on 'model'.
+    for nm in ("moe_xin", "moe_h", "moe_y"):
+        shardctx.set_spec(nm, None)
+    if cfg.moe is not None and cell.kind in ("train", "prefill") and not probe.get("no_moe_pins"):
+        nsx = dpx if len(dpx) > 1 else dpx[0]
+        if probe.get("moe_ep"):
+            shardctx.set_spec("moe_xin", P(nsx, "model", None, None))
+            shardctx.set_spec("moe_h", P(nsx, "model", None, None))
+            shardctx.set_spec("moe_y", P(nsx, "model", None, None))
+        else:
+            shardctx.set_spec("moe_xin", P(nsx, None, None, None))
+            shardctx.set_spec("moe_h", P(nsx, None, None, "model"))
+            shardctx.set_spec("moe_y", P(nsx, None, None, None))
+
+    if cell.kind == "train":
+        rules = train_rules(mesh, cfg)
+        if probe.get("moe_ep"):
+            # experts claim 'model' first; per-tensor no-reuse then leaves
+            # the expert mlp dim unsharded while the *shared* expert (a
+            # plain dense MLP, llama4) still gets TP on its f dim
+            rules["experts"] = ["model"]
+        if probe.get("no_fsdp"):
+            rules["embed"] = []
+        state_dtype = probe.get("opt_state", "f32")
+        p_sh = param_shardings(model.defs(), rules, mesh)
+        o_sh = _opt_shardings(p_sh, mesh, state_dtype, defs=model.defs())
+        b_abs = input_specs(cfg, cell)
+        b_sh = tree_shardings_from_axes(b_abs, batch_axes(cfg, "train"), rules, mesh)
+        microbatches = probe.get("microbatches", max(1, cell.global_batch // dp))
+        accum = jnp.bfloat16 if probe.get("accum_dtype") == "bf16" else jnp.float32
+        spec = TrainSpec(microbatches=microbatches, remat=probe.get("remat", True),
+                         accum_dtype=accum)
+        mode = probe.get("mode", "full")
+        opt_abs = adamw_init_abstract(params_abs, state_dtype)
+        if mode == "full":
+            step = make_train_step(model, AdamWConfig(state_dtype=state_dtype), spec)
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+            args = (params_abs, opt_abs, b_abs)
+        elif mode == "grad":
+            def grad_only(params, batch):
+                from repro.train.step import make_train_step as _
+                def loss_fn(p, mb):
+                    return model.loss(p, mb, remat=spec.remat)
+                gf = jax.value_and_grad(loss_fn, has_aux=True)
+                if microbatches == 1:
+                    (l, m), g = gf(params, batch)
+                    return g, l
+                B = batch["tokens"].shape[0] if "tokens" in batch else batch["frames"].shape[0]
+                def split(x):
+                    if x.shape[0] == B:
+                        return x.reshape((microbatches, B // microbatches) + x.shape[1:])
+                    y = x.reshape((x.shape[0], microbatches, B // microbatches) + x.shape[2:])
+                    return jnp.moveaxis(y, 1, 0)
+                mbs = jax.tree.map(split, batch)
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, spec.accum_dtype), params)
+                def body(c, mb):
+                    (l, m), g = gf(params, mb)
+                    return (jax.tree.map(lambda a, b: a + b.astype(spec.accum_dtype), c[0], g), c[1] + l), None
+                (g, l), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+                return g, l
+            fn = jax.jit(grad_only, in_shardings=(p_sh, b_sh))
+            args = (params_abs, b_abs)
+        else:  # fwd
+            def fwd_only(params, batch):
+                loss, m = model.loss(params, batch, remat=False)
+                return loss
+            fn = jax.jit(fwd_only, in_shardings=(p_sh, b_sh))
+            args = (params_abs, b_abs)
+        meta = {"microbatches": microbatches, "probe": {k: str(v) for k, v in probe.items()}}
+    elif cell.kind == "prefill":
+        rules = train_rules(mesh, cfg)
+        p_sh = param_shardings(model.defs(), rules, mesh)
+        b_abs = input_specs(cfg, cell)
+        b_sh = tree_shardings_from_axes(b_abs, batch_axes(cfg, "prefill"), rules, mesh)
+        if cfg.family == "audio":
+            # encoder: no cache; "prefill" is the full forward pass
+            def enc(params, batch):
+                logits, _aux = model.forward(params, batch)
+                return logits
+
+            fn = jax.jit(enc, in_shardings=(p_sh, b_sh))
+        else:
+            d_rules = decode_rules(mesh, cfg, cell)
+            quant = bool(probe.get("kv_int8"))
+
+            def pre(params, batch):
+                logits, cache = prefill_forward(params, batch, model.cfg, quantize_cache=quant)
+                return logits[:, -1], cache
+
+            from repro.models.transformer import cache_abstract as _ca
+            c_abs = _ca(cfg, cell.global_batch, cell.seq_len, quantized=quant)
+            c_sh = tree_shardings_from_axes(c_abs, cache_axes(cfg, quantized=quant), d_rules, mesh)
+            fn = jax.jit(pre, in_shardings=(p_sh, b_sh), out_shardings=(None, c_sh))
+        args = (params_abs, b_abs)
+        meta = {}
+    else:  # decode
+        rules = decode_rules(mesh, cfg, cell)
+        p_sh = param_shardings(model.defs(), rules, mesh)
+        quant = bool(probe.get("kv_int8"))
+        from repro.models.transformer import cache_abstract as _ca
+        c_abs = _ca(cfg, cell.global_batch, cell.seq_len, quantized=quant)
+        c_sh = tree_shardings_from_axes(c_abs, cache_axes(cfg, quantized=quant), rules, mesh)
+        b_abs = input_specs(cfg, cell)
+        b_sh = tree_shardings_from_axes(b_abs, batch_axes(cfg, "decode"), rules, mesh)
+
+        def dec(params, cache, batch):
+            return model.decode_step(params, cache, batch)
+
+        fn = jax.jit(
+            dec,
+            in_shardings=(p_sh, c_sh, b_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,),
+        )
+        args = (params_abs, c_abs, b_abs)
+        meta = {}
+
+    meta.update(
+        {
+            "arch": arch,
+            "shape": shape,
+            "kind": cell.kind,
+            "mesh": "x".join(str(s) for s in mesh.devices.shape),
+            "axes": list(mesh.axis_names),
+            "n_devices": int(mesh.size),
+            "n_params": model.n_params(),
+        }
+    )
+    return fn, args, mesh, meta
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, outdir: str, analyze_hlo: bool = True,
+             probe: Optional[Dict[str, Any]] = None, tag: str = "") -> Dict[str, Any]:
+    t0 = time.time()
+    fn, args, mesh, meta = build_cell(arch, shape, multi_pod, probe=probe)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    rec: Dict[str, Any] = dict(meta)
+    rec.update(
+        {
+            "ok": True,
+            "t_lower_s": round(t_lower, 2),
+            "t_compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "peak_device_bytes": int(
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+                ),
+            },
+            "xla_cost": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+        }
+    )
+    if analyze_hlo:
+        t2 = time.time()
+        stats = hlo_parse.analyze(compiled.as_text())
+        rec["hlo"] = {
+            "dot_flops": stats.dot_flops,
+            "traffic_bytes": stats.traffic_bytes,
+            "fused_traffic_bytes": stats.fused_traffic_bytes,
+            "collective_bytes": stats.collective_bytes,
+            "n_collectives": stats.n_collectives,
+            "t_analyze_s": round(time.time() - t2, 2),
+        }
+    os.makedirs(outdir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}{suffix}.json"
+    with open(os.path.join(outdir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def opt_probe(cfg, cell) -> Dict[str, Any]:
+    """The promoted beyond-paper optimization set (EXPERIMENTS.md §Perf):
+    SP-sharded saved activations, bf16 gradient accumulation, expert
+    parallelism for MoE, int8 optimizer state where fp32 Adam cannot fit."""
+    p: Dict[str, Any] = {}
+    if cell.kind == "train":
+        p["accum_dtype"] = "bf16"
+        p["hidden_model_shard"] = True
+    if cfg.moe is not None:
+        p["moe_ep"] = True
+    if cfg.arch_id in ("dbrx-132b", "llama4-scout-17b-a16e") and cell.kind == "train":
+        p["opt_state"] = "int8"
+    if cell.kind in ("decode", "prefill") and cfg.family not in ("ssm", "audio"):
+        p["kv_int8"] = True
+    return p
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default="runs/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true", help="skip HLO text analysis")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the promoted §Perf optimization preset")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful baseline (no sharding pins)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = valid_cells(cfg) if args.shape is None else [args.shape]
+        for shape in shapes:
+            for mp in ([False] if args.mesh == "single" else [True] if args.mesh == "multi" else [False, True]):
+                cells.append((arch, shape, mp))
+
+    results = []
+    for arch, shape, mp in cells:
+        tag = f"{arch} × {shape} × {'multi' if mp else 'single'}"
+        fname = os.path.join(args.outdir, f"{arch}__{shape}__{'multi' if mp else 'single'}.json")
+        if args.skip_existing and os.path.exists(fname):
+            with open(fname) as f:
+                prev = json.load(f)
+            if prev.get("ok"):
+                print(f"[skip] {tag}")
+                continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            probe = opt_probe(get_config(arch), SHAPES[shape]) if args.opt else (
+                {"no_moe_pins": True} if args.baseline else None)
+            rec = run_cell(arch, shape, mp, args.outdir, analyze_hlo=not args.no_hlo, probe=probe)
+            gb = rec["memory"]["peak_device_bytes"] / 1e9
+            print(
+                f"  ok: {gb:.2f} GB/device, lower {rec['t_lower_s']}s, "
+                f"compile {rec['t_compile_s']}s, dot_flops {rec.get('hlo',{}).get('dot_flops',0):.3e}",
+                flush=True,
+            )
+            results.append(rec)
+        except Exception as e:
+            os.makedirs(args.outdir, exist_ok=True)
+            with open(fname, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-4000:]}, f, indent=1)
+            print(f"  FAIL: {type(e).__name__}: {str(e)[:300]}", flush=True)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"done: {n_ok}/{len(cells)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+# Sharding-rule engine: logical axes → mesh axes with divisibility-aware
+# fallbacks, fed by the core.distribution solver's objective (§III-A4:
+# choose one distribution for all loops; avoid resharding between them).
+#
+# Rules are *candidate lists* per logical axis; the first candidate whose
+# mesh-axis product divides the dimension (and whose axes are not already
+# used by another dimension of the same tensor) wins — XLA rejects uneven
+# shardings on jit arguments, so this resolution is mandatory, not cosmetic.
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.common import ParamDef, is_param_def
+from .mesh import dp_axes, dp_size
+
+Axis = Union[str, Tuple[str, ...]]
+Rules = Dict[str, List[Axis]]
+
+
+def _axes_size(mesh, ax: Axis) -> int:
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def _axis_names(ax: Axis) -> Tuple[str, ...]:
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
+# Tensors below this element count are replicated regardless of rules:
+# sharding a (d,) norm scale over 'data' costs a latency-bound all-gather at
+# every use (observed: 60k all-gathers per train step) for no memory win.
+REPLICATE_BELOW = 1 << 19
+
+
+def spec_from_axes(
+    logical: Sequence[Optional[str]], shape: Sequence[int], rules: Rules, mesh
+) -> P:
+    if int(np.prod(shape)) < REPLICATE_BELOW if shape else True:
+        return P()
+    parts: List[Optional[Axis]] = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        chosen: Optional[Axis] = None
+        for cand in rules.get(name, []) if name else []:
+            if cand is None:
+                break
+            names = _axis_names(cand)
+            if any(n in used for n in names):
+                continue
+            if dim % _axes_size(mesh, cand) == 0:
+                chosen = cand if len(names) > 1 else names[0]
+                used.update(names)
+                break
+        parts.append(chosen)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# Rule sets.  These are the *solved* distributions: core.distribution's
+# chain solver picks among candidate option sets in
+# tests/test_distribution.py and the launcher materializes the winner here.
+# ---------------------------------------------------------------------------
+
+
+def train_rules(mesh, cfg: ArchConfig) -> Rules:
+    dp = dp_axes(mesh)
+    return {
+        # tensor-parallel family (the paper's indirect partitioning)
+        "vocab": ["model"],
+        "q_proj": ["model"],
+        "kv_proj": ["model"],
+        "mlp": ["model"],
+        "ssm_in": ["model"],
+        "embed_out": ["model"],
+        "experts": [],            # TP-on-mlp baseline; EP is a perf variant
+        # FSDP storage axis (the paper's direct partitioning applied to the
+        # weight multiset): weights/optimizer state sharded over data
+        "embed": ["data"],
+        "heads": [],
+        "layers": [],
+        # activations / inputs
+        "batch": [dp if len(dp) > 1 else dp[0]],
+        "seq": [],
+    }
+
+
+def decode_rules(mesh, cfg: ArchConfig, cell: ShapeCell) -> Rules:
+    dp = dp_axes(mesh)
+    r = train_rules(mesh, cfg)
+    r.update(
+        {
+            "batch": [dp if len(dp) > 1 else dp[0]],
+            # cache axes: prefer heads on 'model'; fall back to head_dim.
+            "kv_heads": ["model"],
+            "head_dim": ["model"],   # only used if kv_heads didn't fit
+            "kv_seq": ["data"] if cell.global_batch < dp_size(mesh) else [],
+            "heads": ["model"],
+            "key_dim": ["model"],
+            "value_dim": [],
+            "act_embed": ["model"],
+            "ssm_act": ["model"],
+            "state": [],
+        }
+    )
+    if cell.global_batch < dp_size(mesh):
+        # long-context single-stream decode: batch unshardable; shard the
+        # cache sequence dim over 'data' (sequence parallelism)
+        r["batch"] = []
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Spec builders
+# ---------------------------------------------------------------------------
+
+
+def param_pspecs(defs: Any, rules: Rules, mesh) -> Any:
+    return jax.tree.map(
+        lambda d: spec_from_axes(d.axes, d.shape, rules, mesh), defs, is_leaf=is_param_def
+    )
+
+
+def param_shardings(defs: Any, rules: Rules, mesh) -> Any:
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, spec_from_axes(d.axes, d.shape, rules, mesh)),
+        defs,
+        is_leaf=is_param_def,
+    )
+
+
+def tree_shardings_from_axes(abstract: Any, axes_tree: Any, rules: Rules, mesh) -> Any:
+    """Shardings for a ShapeDtypeStruct tree given a congruent logical-axes
+    tree (caches, batches).  tree.map flattens along the first tree, so the
+    per-leaf axis tuples of the second tree arrive whole."""
+
+    def one(sd, ax):
+        return NamedSharding(mesh, spec_from_axes(ax, sd.shape, rules, mesh))
+
+    return jax.tree.map(one, abstract, axes_tree)
+
+
+def batch_axes(cfg: ArchConfig, kind: str) -> Dict[str, Tuple[Optional[str], ...]]:
+    """Logical axes of the input batch leaves."""
+    if kind in ("train", "prefill"):
+        out: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            out["frames"] = ("batch", "seq", "act_embed")
+            if kind == "train":
+                out["labels"] = ("batch", "seq")
+        else:
+            out["tokens"] = ("batch", "seq")
+        if cfg.m_rope_sections:
+            out["positions"] = (None, "batch", "seq")
+        return out
+    # decode
+    out = {"tokens": ("batch", None), "pos": ()}
+    return out
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

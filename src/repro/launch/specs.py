@@ -1,0 +1,36 @@
+# input_specs(): weak-type-correct, shardable ShapeDtypeStruct stand-ins for
+# every model input of every (architecture × shape) cell — no device
+# allocation happens anywhere in the dry-run.
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell, get_config
+from repro.models.transformer import Model, cache_abstract
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step function's `batch` argument."""
+    B, S = cell.global_batch, cell.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cell.kind in ("train", "prefill"):
+        out: Dict[str, Any] = {}
+        if cfg.family == "audio":
+            out["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+            if cell.kind == "train":
+                out["labels"] = sds((B, S), jnp.int32)
+        else:
+            out["tokens"] = sds((B, S), jnp.int32)
+        if cfg.m_rope_sections:
+            out["positions"] = sds((3, B, S), jnp.int32)
+        return out
+    # decode: one new token against a cache of S positions
+    return {"tokens": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+
+def decode_cache_specs(cfg: ArchConfig, cell: ShapeCell) -> Any:
+    return cache_abstract(cfg, cell.global_batch, cell.seq_len)

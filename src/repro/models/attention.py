@@ -1,0 +1,381 @@
+# Attention layers: GQA with RoPE/M-RoPE, full-causal (flash-style,
+# memory-bounded), sliding-window (banded, sub-quadratic), chunked
+# (block-diagonal, sub-quadratic), bidirectional (encoder), and KV-cache
+# decode.  The pure-JAX implementations here are the lowering path for the
+# dry-run; kernels/flash holds the Pallas TPU kernel with the same math.
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .common import ParamDef, apply_rope, mrope_angles, rms_norm, rope_angles, softcap
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def attention_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    out: Dict[str, ParamDef] = {
+        "wq": ParamDef((d, H * Dh), ("embed", "q_proj")),
+        "wk": ParamDef((d, Hkv * Dh), ("embed", "kv_proj")),
+        "wv": ParamDef((d, Hkv * Dh), ("embed", "kv_proj")),
+        "wo": ParamDef((H * Dh, d), ("q_proj", "embed")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamDef((Dh,), (None,), init="zeros")
+        out["k_norm"] = ParamDef((Dh,), (None,), init="zeros")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q (B,Sq,Hkv,G,D), k (B,Sk,Hkv,D) -> scores (B,Hkv,G,Sq,Sk) fp32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """p (B,Hkv,G,Sq,Sk), v (B,Sk,Hkv,D) -> out (B,Sq,Hkv,G,D)."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+
+def flash_attention_jnp(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float = 1.0,
+    logit_softcap: float = 0.0,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Online-softmax (flash-style) attention in pure JAX: memory is bounded
+    by (q_block × kv_block) tiles; never materializes Sq×Sk."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    # pad to block multiples
+    pq = (-Sq) % qb
+    pk = (-Sk) % kb
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // qb, kp.shape[1] // kb
+    qp = qp.reshape(B, nq, qb, Hkv, G, D)
+    kp = kp.reshape(B, nk, kb, Hkv, D)
+    vp = vp.reshape(B, nk, kb, Hkv, D)
+
+    def q_step(qi, q_tile):
+        # q_tile: (B, qb, Hkv, G, D)
+        m0 = jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, qb, Hkv, G, D), jnp.float32)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_tile, v_tile = inp
+            s = _gqa_scores(q_tile, k_tile) * scale  # (B,Hkv,G,qb,kb)
+            if logit_softcap > 0:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            q_ids = q_offset + qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+            k_ids = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+            mask = k_ids < Sk  # padding mask
+            if causal:
+                mask = mask & (k_ids <= q_ids)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + _gqa_out(p, v_tile)
+            return (m_new, l_new, acc_new), None
+
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4)))
+        lsafe = jnp.where(l == 0, 1.0, l)
+        out = acc / lsafe.transpose(0, 3, 1, 2)[..., None]
+        return out  # (B, qb, Hkv, G, D)
+
+    outs = jax.lax.map(lambda args: q_step(*args), (jnp.arange(nq), qp.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qb, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def banded_window_attention(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    window: int,
+    scale: float,
+    logit_softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Sliding-window causal attention computed on the diagonal band only
+    (sub-quadratic: each query block of size W attends to its own and the
+    previous block — 2W keys).  `window` = number of attendable positions
+    (inclusive of self)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    W = min(window, S)
+    pad = (-S) % W
+    Sp = S + pad
+    nb = Sp // W
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(B, nb, W, Hkv, G, D)
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(B, nb, W, Hkv, D)
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(B, nb, W, Hkv, D)
+    # previous block (zeros before block 0)
+    k_prev = jnp.pad(kp, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vp, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k_cat = jnp.concatenate([k_prev, kp], axis=2)  # (B, nb, 2W, Hkv, D)
+    v_cat = jnp.concatenate([v_prev, vp], axis=2)
+    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qp, k_cat, preferred_element_type=jnp.float32) * scale
+    if logit_softcap > 0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    # indices: query r in [0,W), key c in [0,2W): global delta = (W + r) - c
+    r = jax.lax.broadcasted_iota(jnp.int32, (W, 2 * W), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (W, 2 * W), 1)
+    delta = (W + r) - c
+    band = (delta >= 0) & (delta < W)
+    # block 0 has no previous block: mask keys c < W there
+    blk = jnp.arange(nb)[:, None, None]
+    valid_prev = (blk > 0) | (c[None] >= W)
+    # padded tail keys: global key index = (n-1)*W + c must be < S
+    key_global = blk * W + (c[None] - W)
+    mask = band[None] & valid_prev & (key_global < S) & (key_global >= 0)
+    s = jnp.where(mask[:, None, None, :, :][None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p.astype(q.dtype), v_cat)
+    out = out.reshape(B, Sp, H, D)[:, :S]
+    return out
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    chunk: int,
+    scale: float,
+    logit_softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Block-diagonal causal attention (llama4-style chunked attention):
+    queries attend only within their own chunk.
+
+    Large chunks (llama4 uses 8192) route through the online-softmax flash
+    path per chunk — materializing C×C fp32 scores at C=8192 cost 10.7 GB
+    /device plus an equally-sized partial-sum all-reduce in the dry-run
+    (§Perf)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    C = min(chunk, S)
+    pad = (-S) % C
+    nb = (S + pad) // C
+    if C > 2048:
+        def fold(x):
+            Hx = x.shape[2]
+            return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(B * nb, C, Hx, D)
+
+        out = flash_attention_jnp(fold(q), fold(k), fold(v), causal=True,
+                                  scale=scale, logit_softcap=logit_softcap)
+        return out.reshape(B, S + pad, H, D)[:, :S]
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(B, nb, C, Hkv, G, D)
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(B, nb, C, Hkv, D)
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(B, nb, C, Hkv, D)
+    s = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qp, kp, preferred_element_type=jnp.float32) * scale
+    if logit_softcap > 0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    r = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    blk = jnp.arange(nb)[:, None, None]
+    key_global = blk * C + c[None]
+    mask = (c <= r)[None] & (key_global < S)
+    s = jnp.where(mask[:, None, None, :, :][None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", p.astype(q.dtype), vp)
+    return out.reshape(B, S + pad, H, D)[:, :S]
+
+
+def decode_attention(
+    q: jnp.ndarray,      # (B, 1, H, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,
+    valid_mask: jnp.ndarray,  # (B, S) bool
+    *,
+    scale: float,
+    logit_softcap: float = 0.0,
+) -> jnp.ndarray:
+    B, _, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache, preferred_element_type=jnp.float32) * scale
+    if logit_softcap > 0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    s = jnp.where(valid_mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(q.dtype), v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+# ---------------------------------------------------------------------------
+# The full attention block (projections + rope + variant dispatch + cache)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AttnInputs:
+    positions: jnp.ndarray          # (B, S) int32 — or (3, B, S) for M-RoPE
+    cache: Optional[Dict[str, jnp.ndarray]] = None  # decode: {'k','v'} (B,Sc,Hkv,D)
+    cache_pos: Optional[jnp.ndarray] = None          # () int32 — write index
+    collect_kv: bool = False         # prefill: return the built cache
+    quantize_collected: bool = False  # prefill: emit the int8 cache layout
+
+
+def _rope_for(cfg: ArchConfig, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    Dh = cfg.resolved_head_dim
+    if cfg.m_rope_sections:
+        return mrope_angles(Dh, cfg.rope_theta, positions, cfg.m_rope_sections)
+    return rope_angles(Dh, cfg.rope_theta, positions)
+
+
+def attention_block(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                 # (B, S, d_model)
+    cfg: ArchConfig,
+    kind: str,                      # 'global' | 'local' | 'chunked' | 'bidir'
+    inputs: AttnInputs,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    B, S, d = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    scale = cfg.attn_scale if cfg.attn_scale is not None else Dh ** -0.5
+
+    q = (x @ p["wq"]).reshape(B, S, H, Dh)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, Dh)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if kind != "nope":
+        cos, sin = _rope_for(cfg, inputs.positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache: Optional[Dict[str, jnp.ndarray]] = None
+    if inputs.cache is not None and "k_q" in inputs.cache:
+        # int8 KV cache (serving): dequantize for the read, quantize the new
+        # token's k/v for the write.  Scales are per (pos, head).
+        qc = inputs.cache
+        Sc = qc["k_q"].shape[1]
+        pos = inputs.cache_pos
+        rolling = kind in ("local", "chunked")
+        write = pos % Sc if rolling else pos
+
+        def q1(x):  # (B,1,H,D) -> int8 + scale
+            s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+            s = jnp.where(s == 0, 1.0, s)
+            return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8), s.astype(jnp.float16)
+
+        kq, ks = q1(k)
+        vq, vs = q1(v)
+        new_cache = {
+            "k_q": jax.lax.dynamic_update_slice(qc["k_q"], kq, (0, write, 0, 0)),
+            "k_s": jax.lax.dynamic_update_slice(qc["k_s"], ks, (0, write, 0, 0)),
+            "v_q": jax.lax.dynamic_update_slice(qc["v_q"], vq, (0, write, 0, 0)),
+            "v_s": jax.lax.dynamic_update_slice(qc["v_s"], vs, (0, write, 0, 0)),
+        }
+        kc = (new_cache["k_q"].astype(jnp.float32) * new_cache["k_s"].astype(jnp.float32)).astype(q.dtype)
+        vc = (new_cache["v_q"].astype(jnp.float32) * new_cache["v_s"].astype(jnp.float32)).astype(q.dtype)
+        idx = jnp.arange(Sc)
+        if rolling:
+            valid = (idx[None] <= (pos % Sc)) | (pos >= Sc)
+        else:
+            valid = idx[None] <= pos
+        valid = jnp.broadcast_to(valid, (B, Sc))
+        out = decode_attention(q, kc, vc, valid, scale=scale, logit_softcap=cfg.attn_softcap)
+        y = out.reshape(B, S, H * Dh) @ p["wo"]
+        return y, new_cache
+    if inputs.collect_kv:
+        # prefill: build the decode cache from the computed k/v.  Local and
+        # chunked layers keep a ring buffer of the last W positions, aligned
+        # so that the next decode write lands at pos % W.
+        W = init_cache_shape(cfg, kind, B, S)[1]
+        if W < S:
+            kc = jnp.roll(k[:, -W:], S % W, axis=1)
+            vc = jnp.roll(v[:, -W:], S % W, axis=1)
+        else:
+            kc, vc = k, v
+        if inputs.quantize_collected:
+            def qfull(x):
+                s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+                s = jnp.where(s == 0, 1.0, s)
+                qv = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+                return qv, s.astype(jnp.float16)
+
+            kq, ks = qfull(kc)
+            vq, vs = qfull(vc)
+            new_cache = {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs}
+        else:
+            new_cache = {"k": kc.astype(jnp.bfloat16), "v": vc.astype(jnp.bfloat16)}
+    if inputs.cache is not None:
+        # decode: append k/v at cache_pos (rolling for local layers)
+        kc, vc = inputs.cache["k"], inputs.cache["v"]
+        Sc = kc.shape[1]
+        pos = inputs.cache_pos
+        rolling = kind in ("local", "chunked")  # bounded cache, ring buffer
+        write = pos % Sc if rolling else pos
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, write, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, write, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        idx = jnp.arange(Sc)
+        if rolling:
+            valid = (idx[None] <= (pos % Sc)) | (pos >= Sc)
+            # window semantics: only last `window` tokens (cache sized W)
+        else:
+            valid = idx[None] <= pos
+        valid = jnp.broadcast_to(valid, (B, Sc))
+        out = decode_attention(
+            q, kc.astype(q.dtype), vc.astype(q.dtype), valid, scale=scale, logit_softcap=cfg.attn_softcap
+        )
+    elif kind == "local" and S > cfg.window:
+        out = banded_window_attention(q, k, v, window=cfg.window, scale=scale, logit_softcap=cfg.attn_softcap)
+    elif kind == "chunked" and S > cfg.chunk_size:
+        out = chunked_attention(q, k, v, chunk=cfg.chunk_size, scale=scale, logit_softcap=cfg.attn_softcap)
+    elif kind == "bidir":
+        out = flash_attention_jnp(q, k, v, causal=False, scale=scale, logit_softcap=cfg.attn_softcap)
+    else:
+        out = flash_attention_jnp(q, k, v, causal=True, scale=scale, logit_softcap=cfg.attn_softcap)
+
+    y = out.reshape(B, S, H * Dh) @ p["wo"]
+    return y, new_cache
+
+
+def init_cache_shape(cfg: ArchConfig, kind: str, batch: int, max_seq: int) -> Tuple[int, ...]:
+    """Cache length: full context for global layers, window for local
+    layers, chunk for chunked layers (sub-quadratic cache)."""
+    if kind == "local":
+        S = min(cfg.window, max_seq)
+    elif kind == "chunked":
+        S = min(cfg.chunk_size, max_seq)
+    else:
+        S = max_seq
+    return (batch, S, cfg.n_kv_heads, cfg.resolved_head_dim)

@@ -1,0 +1,174 @@
+# Shared model machinery: parameter definition trees (shape + dtype +
+# *logical axes* for the distribution solver), norms, RoPE / M-RoPE.
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Parameter definition trees
+# ---------------------------------------------------------------------------
+#
+# A model's parameters are described once as a tree of ParamDef leaves; from
+# it we derive (a) abstract ShapeDtypeStructs for the dry-run, (b) random
+# initializations for smoke tests/examples, (c) PartitionSpecs via the
+# logical-axis rules produced by the distribution solver (core.distribution).
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones'
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_abstract(defs: Any) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_param_def
+    )
+
+
+def tree_init(defs: Any, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_param_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(d.dtype)
+
+    return jax.tree.unflatten(treedef, [one(d, k) for d, k in zip(leaves, keys)])
+
+
+def tree_partition_specs(defs: Any, rules: Dict[str, Optional[str]]) -> Any:
+    """logical axes -> PartitionSpec via `rules` (logical -> mesh axis or
+    None).  Unknown logical axes are replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    def one(d: ParamDef):
+        return P(*[rules.get(a) if a is not None else None for a in d.axes])
+
+    return jax.tree.map(one, defs, is_leaf=is_param_def)
+
+
+def tree_logical_axes(defs: Any) -> Any:
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_param_def)
+
+
+def stack_defs(d: ParamDef, n: int, axis_name: Optional[str] = "layers") -> ParamDef:
+    """Add a leading stacking axis (for lax.scan over layer repeats)."""
+    return ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.dtype, d.init, d.scale)
+
+
+def tree_stack_defs(defs: Any, n: int) -> Any:
+    return jax.tree.map(lambda d: stack_defs(d, n), defs, is_leaf=is_param_def)
+
+
+def param_count(defs: Any) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_param_def)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) parameterization keeps init at identity
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (incl. Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(head_dim: int, theta: float, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (..., S) -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def mrope_angles(
+    head_dim: int, theta: float, positions_3d: jnp.ndarray, sections: Tuple[int, ...]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL multimodal RoPE: positions_3d (3, B, S) for (t, h, w);
+    the half-dim frequency bands are split into `sections` (e.g. 16/24/24),
+    each section using the corresponding position stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # (3, B, S, half)
+    ang = positions_3d[..., None].astype(jnp.float32) * inv_freq
+    parts = []
+    start = 0
+    for si, sec in enumerate(sections):
+        parts.append(ang[si, :, :, start : start + sec])
+        start += sec
+    ang_sel = jnp.concatenate(parts, axis=-1)  # (B, S, half)
+    return jnp.cos(ang_sel), jnp.sin(ang_sel)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation_fn(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return partial(jax.nn.gelu, approximate=False)
+    if name == "gelu_tanh":
+        return partial(jax.nn.gelu, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

@@ -1,0 +1,159 @@
+# Mamba2 SSD block (for zamba2-7b; arXiv:2405.21060 "Transformers are
+# SSMs").  Scalar-per-head decay a_t = exp(A · dt_t) makes the chunked dual
+# form exact and cheap: the pairwise decay matrix is (L, L) per head.
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .common import ParamDef, rms_norm
+
+
+def mamba2_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.headdim
+    return d_in, H, s.headdim, s.d_state
+
+
+def mamba2_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in, H, P, N = mamba2_dims(cfg)
+    G = s.n_groups
+    conv_dim = d_in + 2 * G * N
+    return {
+        # in_proj → [z, x, B, C, dt]
+        "w_in": ParamDef((d, 2 * d_in + 2 * G * N + H), ("embed", "ssm_in")),
+        "conv_w": ParamDef((s.d_conv, conv_dim), (None, "ssm_in")),
+        "conv_b": ParamDef((conv_dim,), ("ssm_in",), init="zeros"),
+        "dt_bias": ParamDef((H,), ("heads",), init="zeros"),
+        "a_log": ParamDef((H,), ("heads",), init="zeros"),
+        "d_skip": ParamDef((H,), ("heads",), init="ones"),
+        "norm": ParamDef((d_in,), ("ssm_in",), init="zeros"),
+        "w_out": ParamDef((d_in, d), ("ssm_in", "embed")),
+    }
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Depthwise causal conv; x (B,S,C), w (W,C).  state: (B,W-1,C) carry."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_state = None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(W - 1):]
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(W)) + b
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_block(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ArchConfig,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    B, S, d = x.shape
+    s = cfg.ssm
+    d_in, H, P, N = mamba2_dims(cfg)
+    G = s.n_groups
+
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + d_in + 2 * G * N]
+    dt = zxbcdt[..., -H:]
+
+    conv_state = state.get("conv") if state is not None else None
+    xbc, new_conv = _causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :d_in].reshape(B, S, H, P)
+    Bmat = xbc[..., d_in : d_in + G * N].reshape(B, S, G, N)
+    Cmat = xbc[..., d_in + G * N :].reshape(B, S, G, N)
+    # groups broadcast over heads
+    rep = H // G
+    Bh = jnp.repeat(Bmat, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cmat, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative
+    log_decay = dt * a[None, None]                # (B,S,H) ≤ 0
+
+    xdt = xs.astype(jnp.float32) * dt[..., None]  # dt-weighted input
+
+    ssm_state = state.get("ssm") if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    if S == 1:
+        # decode: one recurrence step
+        dec = jnp.exp(log_decay[:, 0])            # (B,H)
+        upd = jnp.einsum("bhp,bhn->bhpn", xdt[:, 0], Bh[:, 0].astype(jnp.float32))
+        new_ssm = dec[..., None, None] * ssm_state + upd
+        y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Ch[:, 0].astype(jnp.float32))[:, None]
+        y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    else:
+        y, new_ssm = _ssd_chunked(xdt, log_decay, Bh.astype(jnp.float32), Ch.astype(jnp.float32), ssm_state, chunk)
+        y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    # gated RMSNorm (mamba2 style: norm(y * silu(z)))
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+    return out, new_state
+
+
+def _ssd_chunked(xdt, log_decay, Bh, Ch, S0, chunk: int):
+    """Chunked SSD: y_i = C_i h_i ;  h_t = a_t h_{t-1} + B_t (dt x)_t.
+    xdt (B,S,H,P), log_decay (B,S,H), Bh/Ch (B,S,H,N), S0 (B,H,P,N)."""
+    B, S, H, P = xdt.shape
+    N = Bh.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    n = (S + pad) // L
+
+    def pad_t(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    xdt, Bh, Ch = (pad_t(t).reshape(B, n, L, *t.shape[2:]) for t in (xdt, Bh, Ch))
+    ld = pad_t(log_decay).reshape(B, n, L, H)
+    cum = jnp.cumsum(ld, axis=2)               # (B,n,L,H) inclusive
+    total = cum[:, :, -1]                      # (B,n,H)
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    lower_eq = (jj <= ii)[None, :, :, None]    # include j == i (B_t enters h_t)
+
+    def step(Sprev, inp):
+        xc, bc, cc, cumc, totc = inp           # (B,L,H,*) / (B,H)
+        ldm = cumc[:, :, None] - cumc[:, None, :]          # (B,L,L,H)
+        D = jnp.where(lower_eq, jnp.exp(jnp.where(lower_eq, ldm, 0.0)), 0.0)
+        # intra: y_i = Σ_{j≤i} D_ij (C_i·B_j) xdt_j
+        A = jnp.einsum("bihn,bjhn,bijh->bhij", cc, bc, D)
+        y = jnp.einsum("bhij,bjhp->bihp", A, xc)
+        # carried state: y_i += C_i (e^{cum_i} Sprev)
+        y = y + jnp.einsum("bihn,bhpn,bih->bihp", cc, Sprev, jnp.exp(cumc))
+        # state update
+        kv = jnp.einsum("bjhp,bjhn->bhpn", xc * jnp.exp(totc[:, None] - cumc)[..., None], bc)
+        S_new = jnp.exp(totc)[..., None, None] * Sprev + kv
+        return S_new, y
+
+    xs = tuple(t.transpose(1, 0, *range(2, t.ndim)) for t in (xdt, Bh, Ch, cum, total))
+    S_out, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n * L, H, P)[:, :S]
+    return y, S_out
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    d_in, H, P, N = mamba2_dims(cfg)
+    conv_dim = d_in + 2 * s.n_groups * N
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

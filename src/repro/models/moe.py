@@ -1,0 +1,125 @@
+# Mixture-of-Experts blocks (dbrx: 16e top-4; llama4-scout: 16e top-1 with
+# a shared expert).
+#
+# Paper tie-in (§III-A1 *indirect data partitioning*): the router's
+# key-range partitioning of the token multiset is exactly the paper's
+# ``X = A.field ; X = X1 ∪ … ∪ XN`` — tokens are distributed by the value of
+# a computed field (the expert id).  Dispatch is *sort-based* (the same
+# index-set materialization core/lower.py uses for group-by: sort by key,
+# segment, scatter), not one-hot-einsum based: a (T, E, C) dispatch tensor
+# would be petabytes at assigned-shape scale, while sort+gather is
+# O(T·k·log + E·C·d).
+#
+# Dispatch runs independently inside each of cfg.moe.dispatch_shards token
+# groups (vmapped; the launcher sets the count to the data-parallel degree
+# and the groups align with the batch sharding) so under SPMD partitioning
+# each device sorts only its local tokens — no cross-shard collectives in
+# routing.
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .common import ParamDef, activation_fn
+
+
+def moe_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    assert cfg.moe is not None
+    d, m = cfg.d_model, cfg.moe
+    out: Dict[str, ParamDef] = {
+        "router": ParamDef((d, m.n_experts), ("embed", "experts"), dtype=jnp.float32),
+        "w_gate": ParamDef((m.n_experts, d, m.d_ff_expert), ("experts", "embed", "mlp")),
+        "w_up": ParamDef((m.n_experts, d, m.d_ff_expert), ("experts", "embed", "mlp")),
+        "w_down": ParamDef((m.n_experts, m.d_ff_expert, d), ("experts", "mlp", "embed")),
+    }
+    if m.shared_expert_d_ff:
+        out["shared_gate"] = ParamDef((d, m.shared_expert_d_ff), ("embed", "mlp"))
+        out["shared_up"] = ParamDef((d, m.shared_expert_d_ff), ("embed", "mlp"))
+        out["shared_down"] = ParamDef((m.shared_expert_d_ff, d), ("mlp", "embed"))
+    return out
+
+
+def _route_group(xt, logits, *, E, K, C):
+    """Sort-based dispatch for one token group: xt (T,d), logits (T,E) →
+    (xin (E,C,d), slot, stok, weight, lb).  No expert math here — the
+    expert contractions run un-vmapped so their sharding can be pinned."""
+    T, d = xt.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (T, K)
+    if K > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    flat_e = expert_ids.reshape(T * K)
+    flat_g = gate_vals.reshape(T * K)
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    stok = flat_tok[order]
+    sg = flat_g[order]
+    start_of_expert = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype))
+    pos = jnp.arange(T * K, dtype=jnp.int32) - start_of_expert[se].astype(jnp.int32)
+    keep = pos < C
+    slot = se.astype(jnp.int32) * C + jnp.where(keep, pos, 0)
+
+    # gather tokens into expert buffers; overflow writes go out-of-bounds
+    # and are dropped
+    xin = jnp.zeros((E * C, d), xt.dtype)
+    xin = xin.at[jnp.where(keep, slot, E * C)].add(xt[stok], mode="drop")
+
+    density = jnp.zeros((E,), jnp.float32).at[expert_ids[:, 0]].add(1.0) / T
+    lb = E * jnp.sum(density * jnp.mean(probs, axis=0))
+    weight = (sg * keep).astype(xt.dtype)
+    return xin.reshape(E, C, d), slot, stok, weight, lb
+
+
+def _combine_group(y_flat, slot, stok, weight, *, T):
+    contrib = y_flat[slot] * weight[:, None]
+    return jnp.zeros((T, y_flat.shape[-1]), y_flat.dtype).at[stok].add(contrib)
+
+
+def moe_block(
+    p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ArchConfig
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) -> (out, aux) with load-balance + router-z aux losses."""
+    from . import shardctx
+
+    m = cfg.moe
+    act = activation_fn(cfg.activation)
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    xt = x.reshape(T, d)
+    logits = xt.astype(jnp.float32) @ p["router"]  # (T, E)
+
+    ns = m.dispatch_shards if T % m.dispatch_shards == 0 else 1
+    Tl = T // ns
+    C = max(8, min(Tl, int(m.capacity_factor * K * Tl / E)))
+    route = partial(_route_group, E=E, K=K, C=C)
+    xin, slot, stok, weight, lb = jax.vmap(route)(xt.reshape(ns, Tl, d), logits.reshape(ns, Tl, E))
+    lb = lb.mean()
+
+    # expert contractions on (ns, E, C, d) — sharding pinned by the launcher
+    # (EP: E → 'model';  TP: f → 'model'); without the pin the partitioner
+    # partial-sums over the FSDP-sharded d and replicates h (observed: 9×
+    # 0.88 GB fp32 buffers on dbrx)
+    xin = shardctx.constrain(xin, "moe_xin")
+    h = act(jnp.einsum("necd,edf->necf", xin, p["w_gate"])) * jnp.einsum(
+        "necd,edf->necf", xin, p["w_up"]
+    )
+    h = shardctx.constrain(h, "moe_h")
+    y = jnp.einsum("necf,efd->necd", h, p["w_down"])
+    y = shardctx.constrain(y, "moe_y")
+
+    out_t = jax.vmap(partial(_combine_group, T=Tl))(y.reshape(ns, E * C, d), slot, stok, weight)
+    out = out_t.reshape(B, S, d).astype(x.dtype)
+    if m.shared_expert_d_ff:
+        shared = (act(xt @ p["shared_gate"]) * (xt @ p["shared_up"])) @ p["shared_down"]
+        out = out + shared.reshape(B, S, d).astype(x.dtype)
+
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"lb_loss": lb, "router_z": z_loss}
+    return out, aux

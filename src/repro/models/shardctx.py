@@ -1,0 +1,54 @@
+# Activation-sharding context.  The launcher installs the solved activation
+# layout (core.distribution §III-A4: one distribution for all loops) before
+# lowering; model code pins the residual stream to it with
+# with_sharding_constraint so the auto-partitioner cannot drift into a
+# batch-replicated layout between layers (observed: XLA chose to replicate
+# the microbatch and shard d_model instead, 16× activation memory).
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_HIDDEN_SPEC: Optional[P] = None  # for (B, S, d) residual activations
+_SPECS: dict = {}  # named constraint points (moe_xin, moe_h, ...)
+
+
+def set_hidden_spec(spec: Optional[P]) -> None:
+    global _HIDDEN_SPEC
+    _HIDDEN_SPEC = spec
+
+
+def set_spec(name: str, spec: Optional[P]) -> None:
+    if spec is None:
+        _SPECS.pop(name, None)
+    else:
+        _SPECS[name] = spec
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    spec = _SPECS.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@contextlib.contextmanager
+def hidden_spec(spec: Optional[P]):
+    global _HIDDEN_SPEC
+    prev = _HIDDEN_SPEC
+    _HIDDEN_SPEC = spec
+    try:
+        yield
+    finally:
+        _HIDDEN_SPEC = prev
+
+
+def constrain_hidden(x: jax.Array) -> jax.Array:
+    """Pin a (B, S, d) activation to the installed layout (no-op when the
+    context is not installed — smoke tests, single device)."""
+    if _HIDDEN_SPEC is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _HIDDEN_SPEC)

@@ -1,0 +1,667 @@
+# Model assembly: parameter-definition trees, the lax.scan layer stacker
+# (pattern-period groups + remainder), forward/train/decode entry points for
+# all ten architecture families.
+#
+# Heterogeneous layer patterns (gemma local:global alternation, zamba2
+# mamba+shared-attention interleave) scan over *pattern periods*: the scan
+# body applies one full pattern cycle (each position with its own stacked
+# params), and any shared-block invocations fall at static positions inside
+# the body.  Constraint: if shared_attn_period is set, len(layer_pattern)
+# must be a multiple of it (configs arrange this).
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from . import shardctx
+from .attention import AttnInputs, attention_block, attention_defs, init_cache_shape
+from .common import (
+    ParamDef,
+    param_count,
+    rms_norm,
+    softcap,
+    tree_abstract,
+    tree_init,
+    tree_stack_defs,
+)
+from .mamba2 import mamba2_block, mamba2_defs, mamba2_dims
+from .mlp import mlp_block, mlp_defs
+from .moe import moe_block, moe_defs
+from .rwkv6 import (
+    rwkv6_channel_defs,
+    rwkv6_channel_mix,
+    rwkv6_defs,
+    rwkv6_time_mix,
+)
+
+ATTN_KINDS = ("global", "local", "chunked", "bidir")
+AUX_KEYS = ("lb_loss", "router_z")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer block definitions
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ArchConfig, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    ln = lambda: ParamDef((d,), ("embed",), init="zeros")
+    if kind in ATTN_KINDS:
+        out: Dict[str, Any] = {"ln1": ln(), "attn": attention_defs(cfg)}
+        if cfg.post_block_norms:
+            out["ln1_post"] = ln()
+        out["ln2"] = ln()
+        if cfg.moe is not None:
+            out["moe"] = moe_defs(cfg)
+        else:
+            out["mlp"] = mlp_defs(cfg)
+        if cfg.post_block_norms:
+            out["ln2_post"] = ln()
+        return out
+    if kind == "rwkv":
+        return {"ln1": ln(), "tmix": rwkv6_defs(cfg), "ln2": ln(), "cmix": rwkv6_channel_defs(cfg)}
+    if kind == "mamba2":
+        return {"ln1": ln(), "mamba": mamba2_defs(cfg)}
+    raise ValueError(f"unknown layer kind {kind}")
+
+
+def shared_block_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    """Zamba2 shared transformer block (attention + MLP), invoked every
+    `shared_attn_period` layers; weights shared across invocations (two
+    alternating blocks), with a per-use input projection from [h, embed]."""
+    d = cfg.d_model
+    din = 2 * d if cfg.shared_concat_embed else d
+    return {
+        "in_proj": ParamDef((din, d), ("embed", "embed_out")),
+        "ln1": ParamDef((din,), ("embed",), init="zeros"),
+        "attn": attention_defs(cfg),
+        "ln2": ParamDef((d,), ("embed",), init="zeros"),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def model_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab_size
+    (pattern, repeats), remainder = cfg.scan_groups()
+    if cfg.shared_attn_period:
+        assert len(pattern) % cfg.shared_attn_period == 0, (
+            "layer_pattern length must be a multiple of shared_attn_period "
+            "so shared invocations sit at static scan positions"
+        )
+    defs: Dict[str, Any] = {
+        "final_norm": ParamDef((d,), ("embed",), init="zeros"),
+    }
+    if cfg.family == "audio":
+        # modality frontend is a stub per assignment: frame embeddings come
+        # precomputed; one projection adapts them to the backbone.
+        defs["frontend"] = ParamDef((d, d), ("embed", "embed_out"))
+        defs["head"] = ParamDef((d, V), ("embed", "vocab"))
+    else:
+        defs["embed"] = ParamDef((V, d), ("vocab", "embed"))
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = ParamDef((d, V), ("embed", "vocab"))
+    if repeats > 0:
+        defs["groups"] = {
+            f"pos{i}": tree_stack_defs(block_defs(cfg, kind), repeats)
+            for i, kind in enumerate(pattern)
+        }
+    if remainder:
+        defs["remainder"] = [block_defs(cfg, kind) for kind in remainder]
+    if cfg.shared_attn_period:
+        defs["shared"] = tree_stack_defs(shared_block_defs(cfg), cfg.n_shared_blocks)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _zero_state(cfg: ArchConfig, kind: str, B: int) -> Dict[str, jnp.ndarray]:
+    return jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype), _block_cache_abstract(cfg, kind, B, 1)
+    )
+
+
+def apply_block(
+    p: Dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    kind: str,
+    positions: jnp.ndarray,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    prefill: bool = False,
+    prefill_quant: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]], Dict[str, jnp.ndarray]]:
+    """Returns (x_out, new_cache, aux)."""
+    aux: Dict[str, jnp.ndarray] = {}
+    if prefill and kind not in ATTN_KINDS and cache is None:
+        cache = _zero_state(cfg, kind, x.shape[0])
+    if kind in ATTN_KINDS:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        attn_out, new_cache = attention_block(
+            p["attn"], h, cfg, kind,
+            AttnInputs(positions, cache, cache_pos, collect_kv=prefill,
+                       quantize_collected=prefill_quant),
+        )
+        if cfg.post_block_norms:
+            attn_out = rms_norm(attn_out, p["ln1_post"], cfg.norm_eps)
+        x = x + attn_out
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            ff, moe_aux = moe_block(p["moe"], h, cfg)
+            aux.update({k: moe_aux[k] for k in AUX_KEYS})
+        else:
+            ff = mlp_block(p["mlp"], h, cfg)
+        if cfg.post_block_norms:
+            ff = rms_norm(ff, p["ln2_post"], cfg.norm_eps)
+        x = x + ff
+        return x, new_cache, aux
+    if kind == "rwkv":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        t_out, tstate = rwkv6_time_mix(p["tmix"], h, cfg, state=cache)
+        x = x + t_out
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        c_out, cstate = rwkv6_channel_mix(p["cmix"], h, cfg, state=cache)
+        x = x + c_out
+        new_cache = {**(tstate or {}), **(cstate or {})} if cache is not None else None
+        return x, new_cache, aux
+    if kind == "mamba2":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        m_out, new_cache = mamba2_block(p["mamba"], h, cfg, state=cache)
+        return x + m_out, new_cache, aux
+    raise ValueError(kind)
+
+
+def apply_shared_block(
+    p: Dict[str, Any],
+    x: jnp.ndarray,
+    embed0: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    prefill: bool = False,
+    prefill_quant: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    h = jnp.concatenate([x, embed0], axis=-1) if cfg.shared_concat_embed else x
+    h = rms_norm(h, p["ln1"], cfg.norm_eps)
+    h = h @ p["in_proj"]
+    attn_out, new_cache = attention_block(
+        p["attn"], h, cfg, "global",
+        AttnInputs(positions, cache, cache_pos, collect_kv=prefill,
+                   quantize_collected=prefill_quant),
+    )
+    x = x + attn_out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + mlp_block(p["mlp"], h2, cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_abstract(cfg: ArchConfig, kind: str, batch: int, max_seq: int,
+                          quantized: bool = False) -> Dict[str, Any]:
+    if kind in ATTN_KINDS:
+        shape = init_cache_shape(cfg, kind, batch, max_seq)
+        if quantized:
+            s_shape = shape[:-1] + (1,)
+            return {
+                "k_q": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "k_s": jax.ShapeDtypeStruct(s_shape, jnp.float16),
+                "v_q": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "v_s": jax.ShapeDtypeStruct(s_shape, jnp.float16),
+            }
+        return {
+            "k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+        }
+    if kind == "rwkv":
+        K = cfg.ssm.head_size
+        H = cfg.d_model // K
+        return {
+            "wkv": jax.ShapeDtypeStruct((batch, H, K, K), jnp.float32),
+            "shift_t": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.bfloat16),
+            "shift_c": jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.bfloat16),
+        }
+    if kind == "mamba2":
+        s = cfg.ssm
+        d_in, H, P, N = mamba2_dims(cfg)
+        conv_dim = d_in + 2 * s.n_groups * N
+        return {
+            "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim), jnp.bfloat16),
+            "ssm": jax.ShapeDtypeStruct((batch, H, P, N), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def _stack_abstract(tree, n: int):
+    return jax.tree.map(lambda sd: jax.ShapeDtypeStruct((n,) + sd.shape, sd.dtype), tree)
+
+
+def _shared_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    """(invocations per scan step, invocations in remainder)."""
+    (pattern, repeats), remainder = cfg.scan_groups()
+    if not cfg.shared_attn_period:
+        return 0, 0
+    per_step = len(pattern) // cfg.shared_attn_period
+    base = repeats * len(pattern)
+    rem = sum(1 for j in range(len(remainder)) if (base + j + 1) % cfg.shared_attn_period == 0)
+    return per_step, rem
+
+
+def cache_abstract(cfg: ArchConfig, batch: int, max_seq: int, quantized: bool = False) -> Dict[str, Any]:
+    (pattern, repeats), remainder = cfg.scan_groups()
+    out: Dict[str, Any] = {}
+    if repeats > 0:
+        out["groups"] = {
+            f"pos{i}": _stack_abstract(_block_cache_abstract(cfg, kind, batch, max_seq, quantized), repeats)
+            for i, kind in enumerate(pattern)
+        }
+    if remainder:
+        out["remainder"] = [_block_cache_abstract(cfg, kind, batch, max_seq, quantized) for kind in remainder]
+    per_step, rem_inv = _shared_layout(cfg)
+    if per_step:
+        sc = _block_cache_abstract(cfg, "global", batch, max_seq, quantized)
+        out["shared"] = _stack_abstract(_stack_abstract(sc, per_step), repeats)
+        if rem_inv:
+            out["shared_rem"] = [_block_cache_abstract(cfg, "global", batch, max_seq, quantized) for _ in range(rem_inv)]
+    return out
+
+
+def cache_init(cfg: ArchConfig, batch: int, max_seq: int, quantized: bool = False) -> Dict[str, Any]:
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), cache_abstract(cfg, batch, max_seq, quantized))
+
+
+def _block_cache_axes(cfg: ArchConfig, kind: str, quantized: bool = False) -> Dict[str, Tuple[Optional[str], ...]]:
+    """Logical axis names for each cache leaf (mirrors
+    _block_cache_abstract); used by the launcher's sharding solver."""
+    if kind in ATTN_KINDS:
+        ax = ("batch", "kv_seq", "kv_heads", "head_dim")
+        if quantized:
+            sax = ("batch", "kv_seq", "kv_heads", None)
+            return {"k_q": ax, "k_s": sax, "v_q": ax, "v_s": sax}
+        return {"k": ax, "v": ax}
+    if kind == "rwkv":
+        return {
+            "wkv": ("batch", "heads", "key_dim", "value_dim"),
+            "shift_t": ("batch", "act_embed"),
+            "shift_c": ("batch", "act_embed"),
+        }
+    if kind == "mamba2":
+        return {
+            "conv": ("batch", None, "ssm_act"),
+            "ssm": ("batch", "heads", "head_dim", "state"),
+        }
+    raise ValueError(kind)
+
+
+def cache_axes(cfg: ArchConfig, quantized: bool = False) -> Dict[str, Any]:
+    """Logical axes tree congruent with cache_abstract."""
+    (pattern, repeats), remainder = cfg.scan_groups()
+
+    def stack(tree, extra=("layers",)):
+        return jax.tree.map(lambda ax: tuple(extra) + ax, tree, is_leaf=lambda x: isinstance(x, tuple))
+
+    out: Dict[str, Any] = {}
+    if repeats > 0:
+        out["groups"] = {
+            f"pos{i}": stack(_block_cache_axes(cfg, kind, quantized))
+            for i, kind in enumerate(pattern)
+        }
+    if remainder:
+        out["remainder"] = [_block_cache_axes(cfg, kind, quantized) for kind in remainder]
+    per_step, rem_inv = _shared_layout(cfg)
+    if per_step:
+        sc = _block_cache_axes(cfg, "global", quantized)
+        out["shared"] = stack(sc, extra=("layers", None))
+        if rem_inv:
+            out["shared_rem"] = [_block_cache_axes(cfg, "global", quantized) for _ in range(rem_inv)]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params: Dict[str, Any], batch: Dict[str, jnp.ndarray], cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.family == "audio":
+        return batch["frames"].astype(jnp.bfloat16) @ params["frontend"]
+    tok = batch["tokens"]
+    x = jnp.take(params["embed"], tok, axis=0)
+    if "patch_embeds" in batch:  # VLM stub frontend: positionwise merge
+        x = jnp.where(batch["patch_mask"][..., None], batch["patch_embeds"].astype(x.dtype), x)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _positions_of(batch: Dict[str, jnp.ndarray], cfg: ArchConfig, B: int, S: int) -> jnp.ndarray:
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.m_rope_sections:
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def _zero_aux() -> Dict[str, jnp.ndarray]:
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _add_aux(acc, aux):
+    return {k: acc[k] + aux.get(k, 0.0) for k in acc}
+
+
+def forward(
+    params: Dict[str, Any],
+    batch: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    *,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence forward (train / prefill).  Returns (logits, aux)."""
+    x = embed_tokens(params, batch, cfg)
+    x = shardctx.constrain_hidden(x)
+    B, S, _ = x.shape
+    positions = _positions_of(batch, cfg, B, S)
+    embed0 = x
+    aux_acc = _zero_aux()
+
+    (pattern, repeats), remainder = cfg.scan_groups()
+    p_len = len(pattern)
+    period = cfg.shared_attn_period
+    shared_p = params.get("shared")
+    per_step_inv, _ = _shared_layout(cfg)
+
+    if repeats > 0:
+
+        def body(x, inp):
+            step_params, step_idx = inp
+
+            def inner(x):
+                aux_l = _zero_aux()
+                for i, kind in enumerate(pattern):
+                    x, _, aux = apply_block(step_params[f"pos{i}"], x, cfg, kind, positions)
+                    aux_l = _add_aux(aux_l, aux)
+                    if period and (i + 1) % period == 0:
+                        j = (i + 1) // period - 1  # static ordinal in step
+                        inv = step_idx * per_step_inv + j  # traced
+                        sel = jax.tree.map(lambda a: a[inv % cfg.n_shared_blocks], shared_p)
+                        x, _ = apply_shared_block(sel, x, embed0, cfg, positions)
+                    x = shardctx.constrain_hidden(x)
+                return x, aux_l
+
+            fn = jax.checkpoint(inner) if remat else inner
+            return fn(x)
+
+        x, auxs = jax.lax.scan(body, x, (params["groups"], jnp.arange(repeats)))
+        aux_acc = {k: aux_acc[k] + auxs[k].sum() for k in aux_acc}
+
+    base = repeats * p_len
+    rem_inv_seen = 0
+    for j, kind in enumerate(remainder):
+        x, _, aux = apply_block(params["remainder"][j], x, cfg, kind, positions)
+        aux_acc = _add_aux(aux_acc, aux)
+        li = base + j
+        if period and (li + 1) % period == 0:
+            inv = (li + 1) // period - 1
+            sel = jax.tree.map(lambda a: a[inv % cfg.n_shared_blocks], shared_p)
+            x, _ = apply_shared_block(sel, x, embed0, cfg, positions)
+            rem_inv_seen += 1
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _project_logits(params, x, cfg)
+    return logits, aux_acc
+
+
+def _project_logits(params: Dict[str, Any], x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.family == "audio":
+        logits = x @ params["head"]
+    elif cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    if cfg.final_softcap > 0:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def prefill_forward(
+    params: Dict[str, Any],
+    batch: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    quantize_cache: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Forward pass that also materializes decode caches (serving prefill).
+    Returns (last-position logits (B, 1, V), cache) — full (B, S, V) logits
+    at 32k × 256k vocab would be hundreds of GB."""
+    x = embed_tokens(params, batch, cfg)
+    x = shardctx.constrain_hidden(x)
+    B, S, _ = x.shape
+    positions = _positions_of(batch, cfg, B, S)
+    embed0 = x
+
+    (pattern, repeats), remainder = cfg.scan_groups()
+    p_len = len(pattern)
+    period = cfg.shared_attn_period
+    shared_p = params.get("shared")
+    per_step_inv, _ = _shared_layout(cfg)
+    cache: Dict[str, Any] = {}
+
+    if repeats > 0:
+
+        def body(x, inp):
+            step_params, step_idx = inp
+            c_out: Dict[str, Any] = {}
+            sc_out: List[Any] = []
+            for i, kind in enumerate(pattern):
+                x, c_new, _ = apply_block(step_params[f"pos{i}"], x, cfg, kind, positions,
+                                          prefill=True, prefill_quant=quantize_cache)
+                c_out[f"pos{i}"] = c_new
+                if period and (i + 1) % period == 0:
+                    j = (i + 1) // period - 1
+                    inv = step_idx * per_step_inv + j
+                    sel = jax.tree.map(lambda a: a[inv % cfg.n_shared_blocks], shared_p)
+                    x, sc_new = apply_shared_block(sel, x, embed0, cfg, positions,
+                                                   prefill=True, prefill_quant=quantize_cache)
+                    sc_out.append(sc_new)
+            outs = (c_out, _stack_trees(sc_out)) if sc_out else (c_out,)
+            return x, outs
+
+        x, ys = jax.lax.scan(body, x, (params["groups"], jnp.arange(repeats)))
+        cache["groups"] = ys[0]
+        if len(ys) > 1:
+            cache["shared"] = ys[1]
+
+    base = repeats * p_len
+    rem_caches: List[Any] = []
+    rem_shared: List[Any] = []
+    for j, kind in enumerate(remainder):
+        x, c_new, _ = apply_block(params["remainder"][j], x, cfg, kind, positions,
+                                  prefill=True, prefill_quant=quantize_cache)
+        rem_caches.append(c_new)
+        li = base + j
+        if period and (li + 1) % period == 0:
+            inv = (li + 1) // period - 1
+            sel = jax.tree.map(lambda a: a[inv % cfg.n_shared_blocks], shared_p)
+            x, sc_new = apply_shared_block(sel, x, embed0, cfg, positions,
+                                           prefill=True, prefill_quant=quantize_cache)
+            rem_shared.append(sc_new)
+    if remainder:
+        cache["remainder"] = rem_caches
+    if rem_shared:
+        cache["shared_rem"] = rem_shared
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = _project_logits(params, x, cfg)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one token, cache-carrying)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cache: Dict[str, Any],
+    batch: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """batch: {'tokens': (B,1) | 'frames': (B,1,d), 'pos': ()} →
+    (logits (B,1,V), cache')."""
+    x = embed_tokens(params, batch, cfg)
+    B = x.shape[0]
+    pos = batch["pos"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.m_rope_sections:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    embed0 = x
+
+    (pattern, repeats), remainder = cfg.scan_groups()
+    p_len = len(pattern)
+    period = cfg.shared_attn_period
+    shared_p = params.get("shared")
+    per_step_inv, _ = _shared_layout(cfg)
+    new_cache: Dict[str, Any] = {}
+
+    if repeats > 0:
+        has_shared = bool(period) and per_step_inv > 0
+        xs = [params["groups"], cache["groups"], jnp.arange(repeats)]
+        if has_shared:
+            xs.append(cache["shared"])
+
+        def body(x, inp):
+            if has_shared:
+                step_params, step_cache, step_idx, step_scache = inp
+            else:
+                step_params, step_cache, step_idx = inp
+            c_out: Dict[str, Any] = {}
+            sc_out: List[Any] = []
+            for i, kind in enumerate(pattern):
+                x, c_new, _ = apply_block(
+                    step_params[f"pos{i}"], x, cfg, kind, positions, step_cache[f"pos{i}"], pos
+                )
+                c_out[f"pos{i}"] = c_new
+                if period and (i + 1) % period == 0:
+                    j = (i + 1) // period - 1
+                    inv = step_idx * per_step_inv + j
+                    sel = jax.tree.map(lambda a: a[inv % cfg.n_shared_blocks], shared_p)
+                    scache_j = jax.tree.map(lambda a: a[j], step_scache)
+                    x, sc_new = apply_shared_block(sel, x, embed0, cfg, positions, scache_j, pos)
+                    sc_out.append(sc_new)
+            outs = (c_out, _stack_trees(sc_out)) if has_shared else (c_out,)
+            return x, outs
+
+        x, ys = jax.lax.scan(body, x, tuple(xs))
+        new_cache["groups"] = ys[0]
+        if has_shared:
+            new_cache["shared"] = ys[1]
+
+    base = repeats * p_len
+    rem_caches: List[Any] = []
+    rem_shared: List[Any] = []
+    for j, kind in enumerate(remainder):
+        x, c_new, _ = apply_block(params["remainder"][j], x, cfg, kind, positions, cache["remainder"][j], pos)
+        rem_caches.append(c_new)
+        li = base + j
+        if period and (li + 1) % period == 0:
+            inv = (li + 1) // period - 1
+            sel = jax.tree.map(lambda a: a[inv % cfg.n_shared_blocks], shared_p)
+            scache = cache["shared_rem"][len(rem_shared)]
+            x, sc_new = apply_shared_block(sel, x, embed0, cfg, positions, scache, pos)
+            rem_shared.append(sc_new)
+    if remainder:
+        new_cache["remainder"] = rem_caches
+    if rem_shared:
+        new_cache["shared_rem"] = rem_shared
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _project_logits(params, x, cfg)
+    return logits, new_cache
+
+
+def _stack_trees(trees: List[Any]) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(
+    params: Dict[str, Any], batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *, remat: bool = False
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(params, batch, cfg, remat=remat)
+    if cfg.family == "audio":
+        labels = batch["labels"]
+        mask = batch.get("label_mask", jnp.ones(labels.shape)).astype(jnp.float32)
+    else:
+        labels = batch["tokens"][:, 1:]
+        logits = logits[:, :-1]
+        mask = batch.get("loss_mask", jnp.ones(batch["tokens"].shape))[:, 1:].astype(jnp.float32)
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    ll = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    metrics = {"loss": loss, **aux}
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux["lb_loss"] + cfg.moe.router_z_loss * aux["router_z"]
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Public model facade
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+
+    def defs(self):
+        return model_defs(self.cfg)
+
+    def abstract_params(self):
+        return tree_abstract(self.defs())
+
+    def init_params(self, key):
+        return tree_init(self.defs(), key)
+
+    def n_params(self) -> int:
+        return param_count(self.defs())
+
+    def forward(self, params, batch, remat: bool = False):
+        return forward(params, batch, self.cfg, remat=remat)
+
+    def loss(self, params, batch, remat: bool = False):
+        return lm_loss(params, batch, self.cfg, remat=remat)
+
+    def decode_step(self, params, cache, batch):
+        return decode_step(params, cache, batch, self.cfg)
+
+    def cache_abstract(self, batch: int, max_seq: int, quantized: bool = False):
+        return cache_abstract(self.cfg, batch, max_seq, quantized)
+
+    def cache_init(self, batch: int, max_seq: int, quantized: bool = False):
+        return cache_init(self.cfg, batch, max_seq, quantized)

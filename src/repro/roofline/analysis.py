@@ -1,0 +1,177 @@
+# Roofline analysis (EXPERIMENTS.md §Roofline): derive the three terms from
+# each dry-run record and identify the dominant bottleneck per cell.
+#
+#   compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+#   memory term     = HLO_bytes / HBM_bw                 (per chip)
+#   collective term = collective_bytes / link_bw          (per chip)
+#
+# The dry-run compiles the per-device SPMD module, so FLOPs/bytes parsed
+# from it are already per-chip; dividing a global total by `chips` (the
+# assignment's formula) is algebraically identical.
+#
+# Two FLOP/byte sources are reported:
+#   * xla_cost   — compiled.cost_analysis(): visits while bodies ONCE
+#                  (undercounts scanned models; kept for reference),
+#   * hlo (used) — trip-count-weighted re-analysis of the optimized HLO
+#                  (roofline/hlo_parse.py): exact for dot FLOPs; the byte
+#                  traffic proxy counts top-level operand+result bytes
+#                  (fusion interiors excluded) and is an upper bound for a
+#                  TPU backend, which fuses more than the CPU backend used
+#                  to compile the dry-run.
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    n_params: float
+    peak_gb: float
+    compute_s: float
+    memory_s: float           # fusion-aware HBM traffic model (preferred)
+    memory_raw_s: float       # raw top-level-op proxy (upper bound)
+    collective_s: float
+    dominant: str
+    model_flops: float        # 6·N·D (train) or 2·N·D (inference), global
+    hlo_flops_global: float   # per-chip dot flops × chips
+    useful_ratio: float       # model_flops / hlo_flops_global
+    roofline_frac: float      # compute_s / max(all terms) — fraction of the
+                              # step bound spent at the compute roofline
+    collective_detail: Dict[str, float]
+    note: str = ""
+
+
+def model_flops_for(rec: Dict[str, Any], cfg) -> float:
+    """Useful-math FLOPs for the cell: 6·N_active·tokens (train),
+    2·N_active·tokens (fwd-only)."""
+    n = active_params(cfg)
+    from repro.configs.base import SHAPES
+
+    cell = SHAPES[rec["shape"]]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    tokens = cell.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE counts top_k + shared experts)."""
+    from repro.models.transformer import Model
+
+    total = Model(cfg).n_params()
+    if cfg.moe is None:
+        return float(total)
+    m = cfg.moe
+    expert_p = 3 * cfg.d_model * m.d_ff_expert  # gate+up+down per expert
+    inactive = cfg.n_layers * (m.n_experts - m.top_k) * expert_p
+    return float(total - inactive)
+
+
+def analyze_record(rec: Dict[str, Any]) -> Optional[RooflineRow]:
+    if not rec.get("ok"):
+        return None
+    from repro.configs.base import get_config
+
+    cfg = get_config(rec["arch"])
+    chips = rec["n_devices"]
+    hlo = rec.get("hlo", {})
+    flops_chip = hlo.get("dot_flops", 0.0)
+    bytes_raw = hlo.get("traffic_bytes", 0.0)
+    bytes_chip = hlo.get("fused_traffic_bytes", bytes_raw)
+    coll = hlo.get("collective_bytes", {})
+    coll_chip = sum(coll.values())
+
+    compute_s = flops_chip / PEAK_FLOPS
+    memory_s = bytes_chip / HBM_BW
+    memory_raw_s = bytes_raw / HBM_BW
+    collective_s = coll_chip / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_for(rec, cfg)
+    hlo_global = flops_chip * chips
+    useful = mf / hlo_global if hlo_global else 0.0
+    bound = max(terms.values())
+    frac = compute_s / bound if bound > 0 else 0.0
+    return RooflineRow(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        kind=rec["kind"],
+        n_params=rec["n_params"],
+        peak_gb=rec["memory"]["peak_device_bytes"] / 1e9,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        memory_raw_s=memory_raw_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=useful,
+        roofline_frac=frac,
+        collective_detail={k: v / LINK_BW for k, v in coll.items()},
+    )
+
+
+def load_rows(outdir: str = "runs/dryrun", mesh: str = "single") -> List[RooflineRow]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(outdir, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        row = analyze_record(rec)
+        if row is not None:
+            rows.append(row)
+    return rows
+
+
+def render_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"| {'arch':24s} | {'shape':11s} | {'GB/dev':>6s} | {'compute_s':>9s} | "
+           f"{'memory_s':>9s} | {'collect_s':>9s} | {'bound':>10s} | {'MF/HLO':>6s} | {'roofl%':>6s} |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r.arch:24s} | {r.shape:11s} | {r.peak_gb:6.2f} | {r.compute_s:9.4f} | "
+            f"{r.memory_s:9.4f} | {r.collective_s:9.4f} | {r.dominant:>10s} | "
+            f"{r.useful_ratio:6.2f} | {100*r.roofline_frac:5.1f}% |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = load_rows(args.outdir, args.mesh)
+    print(render_table(rows))
+    # summary: worst roofline fraction, most collective-bound
+    if rows:
+        worst = min(rows, key=lambda r: r.roofline_frac)
+        collb = max(rows, key=lambda r: r.collective_s / max(r.compute_s, 1e-12))
+        print(f"\nworst roofline fraction: {worst.arch} × {worst.shape} ({100*worst.roofline_frac:.1f}%)")
+        print(f"most collective-bound:   {collb.arch} × {collb.shape} "
+              f"(coll/compute = {collb.collective_s/max(collb.compute_s,1e-12):.1f}×)")
+
+
+if __name__ == "__main__":
+    main()

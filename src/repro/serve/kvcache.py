@@ -1,0 +1,55 @@
+# KV-cache quantization (int8 per-head-block) — halves decode HBM footprint
+# and doubles effective cache bandwidth vs bf16 (§Perf hillclimb option).
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(cache: Dict[str, Any]) -> Dict[str, Any]:
+    """bf16 {'k','v'} trees → {'k_q','k_s','v_q','v_s'} int8 + fp16 scales
+    (scale per (…, head) over the feature dim)."""
+
+    def q(x):
+        scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+        scale = jnp.where(scale == 0, 1.0, scale)
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8), scale.astype(jnp.float16)
+
+    def walk(tree):
+        if isinstance(tree, dict) and set(tree) == {"k", "v"}:
+            kq, ks = q(tree["k"])
+            vq, vs = q(tree["v"])
+            return {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs}
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v) for v in tree]
+        return tree
+
+    return walk(cache)
+
+
+def dequantize_kv(cache: Dict[str, Any]) -> Dict[str, Any]:
+    def dq(q, s):
+        return (q.astype(jnp.float32) * s.astype(jnp.float32)).astype(jnp.bfloat16)
+
+    def walk(tree):
+        if isinstance(tree, dict) and "k_q" in tree:
+            return {"k": dq(tree["k_q"], tree["k_s"]), "v": dq(tree["v_q"], tree["v_s"])}
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v) for v in tree]
+        return tree
+
+    return walk(cache)
+
+
+def cache_bytes(cache: Any) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(cache)
+        if hasattr(x, "dtype")
+    )

@@ -1,0 +1,79 @@
+# Serving steps: batched prefill + decode with greedy/temperature sampling,
+# continuous-batching bookkeeping in launch/serve.py.
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model, prefill_forward
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill(params, batch):
+        logits, cache = prefill_forward(params, batch, model.cfg)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(model: Model, temperature: float = 0.0) -> Callable:
+    """decode(params, cache, tokens (B,1), pos, key) ->
+    (next_tokens (B,1), logits, new_cache)"""
+
+    def decode(params, cache, tokens, pos, key):
+        logits, new_cache = model.decode_step(params, cache, {"tokens": tokens, "pos": pos})
+        last = logits[:, -1].astype(jnp.float32)
+        if temperature > 0:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, new_cache
+
+    return decode
+
+
+@dataclass
+class GenerationResult:
+    tokens: jnp.ndarray  # (B, S_out)
+    steps: int
+
+
+def generate(
+    model: Model,
+    params: Any,
+    prompts: jnp.ndarray,  # (B, S_prompt) int32
+    max_new_tokens: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+) -> GenerationResult:
+    """Simple batched generation driver (used by examples + tests)."""
+    B, Sp = prompts.shape
+    cfg = model.cfg
+    max_seq = Sp + max_new_tokens
+    cache = model.cache_init(B, max_seq)
+    # prefill token-by-token is wasteful; use prefill_forward then decode.
+    # (caches from prefill have length Sp for global layers; re-pad to max_seq)
+    logits, pcache = prefill_forward(params, {"tokens": prompts}, cfg)
+
+    def pad_cache(c_pref, c_full):
+        def one(a, b):
+            if a.shape == b.shape:
+                return a
+            # place prefill cache at the start of the full-length buffer
+            pads = [(0, bs - as_) for as_, bs in zip(a.shape, b.shape)]
+            return jnp.pad(a, pads)
+        return jax.tree.map(one, c_pref, c_full)
+
+    cache = pad_cache(pcache, cache)
+    decode = jax.jit(make_decode_step(model, temperature))
+    key = jax.random.PRNGKey(seed)
+    tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for t in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        tok, _, cache = decode(params, cache, tok, jnp.asarray(Sp + t, jnp.int32), sub)
+        out.append(tok)
+    return GenerationResult(jnp.concatenate([prompts] + out, axis=1), max_new_tokens)

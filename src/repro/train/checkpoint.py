@@ -1,0 +1,143 @@
+# Distributed checkpointing: shard-per-host layout, atomic manifest commit,
+# async save, restore-with-resharding.  This is the durability half of the
+# paper's fault-tolerance story (§III-A3): the dynamic scheduler replays
+# only the chunks after the last durable frontier.
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+@dataclass
+class CheckpointManager:
+    """Directory layout:
+        <dir>/step_<N>/<host>/arr_<i>.npy  +  <dir>/step_<N>/manifest.json
+    The manifest is written LAST (atomic rename) — a step directory without
+    a manifest is an aborted save and is ignored/garbage-collected."""
+
+    directory: str
+    keep: int = 3
+    host_id: int = 0
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        # Snapshot to host memory synchronously (cheap), write async.
+        items = _flatten_with_paths(tree)
+        arrays = [(k, np.asarray(v)) for k, v in items]
+        if blocking:
+            self._write(step, arrays)
+        else:
+            self.wait()
+            t = threading.Thread(target=self._write, args=(step, arrays), daemon=True)
+            t.start()
+            self._async_thread = t
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _write(self, step: int, arrays: List[Tuple[str, np.ndarray]]) -> None:
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        host_dir = os.path.join(tmp, f"host_{self.host_id}")
+        os.makedirs(host_dir, exist_ok=True)
+        manifest = {"step": step, "time": time.time(), "leaves": []}
+        for i, (key, arr) in enumerate(arrays):
+            fn = f"arr_{i:05d}.npy"
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":  # not a native numpy dtype: store bits
+                np.save(os.path.join(host_dir, fn), arr.view(np.uint16))
+            else:
+                np.save(os.path.join(host_dir, fn), arr)
+            manifest["leaves"].append(
+                {"key": key, "file": fn, "shape": list(arr.shape), "dtype": dtype}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)
+        # remove aborted saves
+        for d in os.listdir(self.directory):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def list_steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, d, "manifest.json")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None, shardings: Any = None) -> Tuple[int, Any]:
+        """Restore into the structure of `like`; optionally re-shard onto a
+        (possibly different — elastic!) mesh via `shardings`."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        host_dir = os.path.join(d, f"host_{self.host_id}")
+        by_key = {l["key"]: l for l in manifest["leaves"]}
+        items = _flatten_with_paths(like)
+        leaves = []
+        for key, ref in items:
+            ent = by_key[key]
+            arr = np.load(os.path.join(host_dir, ent["file"]))
+            if ent["dtype"] == "bfloat16":
+                import ml_dtypes
+
+                arr = arr.view(ml_dtypes.bfloat16)
+            leaves.append(arr)
+        treedef = jax.tree.structure(like)
+        restored = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            restored = jax.tree.map(lambda a, s: jax.device_put(a, s), restored, shardings)
+        return step, restored

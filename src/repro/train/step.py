@@ -1,0 +1,97 @@
+# train_step factory: gradient-accumulation microbatch scan + remat + the
+# sharded AdamW update.  This is the *static schedule* of the paper's hybrid
+# scheme (§III-A3): one chunk of work, compiled once, zero scheduling
+# overhead inside; the dynamic fault-tolerant scheduler (sched/) operates on
+# chunks of these steps.
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Model
+from .optimizer import AdamWConfig, AdamWState, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainSpec:
+    microbatches: int = 1
+    remat: bool = True
+    accum_dtype: Any = jnp.float32
+
+
+def make_train_step(
+    model: Model, opt_cfg: AdamWConfig, spec: TrainSpec
+) -> Callable[[Any, AdamWState, Dict[str, jnp.ndarray]], Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]]:
+    """Returns train_step(params, opt_state, batch) -> (params', state',
+    metrics).  The global batch's leading dim is split into `microbatches`
+    accumulation steps (lax.scan), bounding activation memory."""
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, remat=spec.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        n_mb = spec.microbatches
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # global-batch dim is axis 0 for most leaves, axis 1 for leaves
+            # with a leading component axis (M-RoPE positions are (3, B, S))
+            B = (batch["tokens"] if "tokens" in batch else batch["frames"]).shape[0]
+
+            def split(x):
+                if x.shape[0] == B:
+                    return x.reshape((n_mb, B // n_mb) + x.shape[1:])
+                if x.ndim >= 2 and x.shape[1] == B:
+                    y = x.reshape((x.shape[0], n_mb, B // n_mb) + x.shape[2:])
+                    return jnp.moveaxis(y, 1, 0)
+                raise ValueError(f"cannot microbatch-split shape {x.shape} (B={B})")
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, spec.accum_dtype), params)
+
+            def body(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(spec.accum_dtype), g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            (g_sum, loss_sum), metrics_stack = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, g_sum)
+            loss = loss_sum / n_mb
+            metrics = jax.tree.map(lambda m: m.mean() if m.ndim > 0 else m, metrics_stack)
+
+        new_params, new_state, opt_metrics = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    """prefill(params, batch) -> (last-token logits (B, V), cache).
+
+    Builds the KV/state caches for subsequent decode; returns only the final
+    position's logits (returning (B, S, V) logits at 32k × 256k vocab would
+    be hundreds of GB)."""
+
+    def prefill(params, batch):
+        logits, cache = model_forward_with_cache(model, params, batch)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def model_forward_with_cache(model: Model, params, batch):
+    """Forward pass that also materializes decode caches (prefill path)."""
+    from repro.models import transformer as T
+
+    return T.prefill_forward(params, batch, model.cfg)

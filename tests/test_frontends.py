@@ -1,0 +1,122 @@
+# SQL / MapReduce frontends and the §IV forelem→MapReduce export.
+import numpy as np
+import pytest
+
+from repro.core.lower import Plan, ReferenceInterpreter
+from repro.data.multiset import Database, Multiset
+from repro.frontends.export_mr import NotMapReduceShape, forelem_to_mapreduce
+from repro.frontends.mapreduce import (
+    MapReduceSpec,
+    count_reduce,
+    mapreduce_to_forelem,
+    run_python_mapreduce,
+    sum_reduce,
+    wordcount_map,
+)
+from repro.frontends.sql import SQLError, parse_sql, sql_to_forelem
+from repro.core.ir import FieldRef
+
+
+@pytest.fixture
+def web_db(rng):
+    urls = rng.integers(0, 15, 500).astype(np.int32)
+    return Database().add(Multiset.from_columns("access", url=urls)), urls
+
+
+def _ref(p, db, params=None):
+    out = ReferenceInterpreter(db, params).run(p)
+    return {k: sorted(v) if isinstance(v, list) else v for k, v in out.items()}
+
+
+def test_paper_query_urlcount(web_db):
+    db, urls = web_db
+    p = sql_to_forelem("SELECT url, COUNT(url) FROM access GROUP BY url", {"access": ["url"]})
+    got = sorted(Plan(p, db).run()["R"])
+    vals, counts = np.unique(urls, return_counts=True)
+    assert got == [(int(v), int(c)) for v, c in zip(vals, counts)]
+
+
+def test_paper_query_weblink(rng):
+    src = rng.integers(0, 40, 600).astype(np.int32)
+    tgt = rng.integers(0, 25, 600).astype(np.int32)
+    db = Database().add(Multiset.from_columns("links", source=src, target=tgt))
+    p = sql_to_forelem("SELECT target, COUNT(target) FROM links GROUP BY target",
+                       {"links": ["source", "target"]})
+    got = sorted(Plan(p, db).run()["R"])
+    vals, counts = np.unique(tgt, return_counts=True)
+    assert got == [(int(v), int(c)) for v, c in zip(vals, counts)]
+
+
+def test_sql_aggregates_sum_min_max_avg(rng):
+    k = rng.integers(0, 6, 300).astype(np.int32)
+    v = rng.integers(0, 100, 300).astype(np.int32)
+    db = Database().add(Multiset.from_columns("t", k=k, v=v))
+    p = sql_to_forelem("SELECT k, SUM(v), MIN(v), MAX(v) FROM t GROUP BY k", {"t": ["k", "v"]})
+    got = {r[0]: r[1:] for r in Plan(p, db).run()["R"]}
+    for key in np.unique(k):
+        sel = v[k == key]
+        assert got[int(key)] == (int(sel.sum()), int(sel.min()), int(sel.max()))
+
+
+def test_sql_where_and_params(rng):
+    k = rng.integers(0, 6, 200).astype(np.int32)
+    v = rng.integers(0, 100, 200).astype(np.int32)
+    db = Database().add(Multiset.from_columns("t", k=k, v=v))
+    p = sql_to_forelem("SELECT SUM(v) FROM t WHERE k = :kk", {"t": ["k", "v"]})
+    got = Plan(p, db).run(params={"kk": 3})
+    assert got["scalar"] == int(v[k == 3].sum())
+
+
+def test_sql_join(rng):
+    A = Multiset.from_columns("A", b_id=rng.integers(0, 50, 80).astype(np.int32),
+                              f=rng.integers(0, 9, 80).astype(np.int32))
+    B = Multiset.from_columns("B", id=np.arange(50).astype(np.int32),
+                              g=rng.integers(0, 9, 50).astype(np.int32))
+    db = Database().add(A).add(B)
+    p = sql_to_forelem("SELECT a.f, b.g FROM A a, B b WHERE a.b_id = b.id",
+                       {"A": ["b_id", "f"], "B": ["id", "g"]})
+    assert sorted(Plan(p, db).run()["R"]) == _ref(p, db)["R"]
+
+
+def test_sql_parse_errors():
+    with pytest.raises(SQLError):
+        parse_sql("SELECT FROM nothing")
+    with pytest.raises(SQLError):
+        sql_to_forelem("SELECT a FROM t1, t2, t3", {"t1": ["a"], "t2": ["a"], "t3": ["a"]})
+
+
+def test_forelem_to_mapreduce_roundtrip(web_db):
+    db, urls = web_db
+    p = sql_to_forelem("SELECT url, COUNT(url) FROM access GROUP BY url", {"access": ["url"]})
+    mr = forelem_to_mapreduce(p)
+    assert "emitIntermediate" in mr.pseudocode
+    rows = [(i, {"url": int(u)}) for i, u in enumerate(urls)]
+    mr_out = run_python_mapreduce(mr.map_fn, mr.reduce_fn, rows, num_reducers=4)
+    assert sorted(mr_out) == sorted(Plan(p, db).run()["R"])
+
+
+def test_forelem_to_mapreduce_sum_variant(rng):
+    k = rng.integers(0, 8, 200).astype(np.int32)
+    v = rng.integers(0, 10, 200).astype(np.int32)
+    db = Database().add(Multiset.from_columns("T", f1=k, f2=v))
+    spec = MapReduceSpec("T", "f1", FieldRef("T", "i", "f2"))
+    p = mapreduce_to_forelem(spec, ["f1", "f2"])
+    mr = forelem_to_mapreduce(p)
+    rows = [(i, {"f1": int(a), "f2": int(b)}) for i, (a, b) in enumerate(zip(k, v))]
+    mr_out = run_python_mapreduce(mr.map_fn, mr.reduce_fn, rows, 4)
+    assert sorted(mr_out) == sorted(Plan(p, db).run()["R"])
+
+
+def test_non_mr_shape_rejected(rng):
+    db = Database().add(Multiset.from_columns("t", k=rng.integers(0, 5, 20).astype(np.int32)))
+    p = sql_to_forelem("SELECT k FROM t", {"t": ["k"]})
+    with pytest.raises(NotMapReduceShape):
+        forelem_to_mapreduce(p)
+
+
+def test_python_mapreduce_wordcount():
+    lines = ["a b a", "b c", "a"]
+    out = run_python_mapreduce(wordcount_map, count_reduce, enumerate(lines), 2)
+    assert sorted(out) == [("a", 3), ("b", 2), ("c", 1)]
+    out2 = run_python_mapreduce(lambda k, v: [(v, 2)], sum_reduce, enumerate(["x", "x", "y"]), 1)
+    assert sorted(out2) == [("x", 4), ("y", 2)]

@@ -1,0 +1,207 @@
+# Transform semantics: every re-targeted compiler transformation must
+# preserve program results (checked against the reference interpreter), and
+# the vectorized JAX lowering must agree with the reference on every
+# supported pattern.  Property-based (hypothesis) over random programs/data.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Accumulate,
+    ArrayRead,
+    BinOp,
+    CodegenChoices,
+    Const,
+    Distinct,
+    FieldMatch,
+    FieldRef,
+    Filtered,
+    Forelem,
+    FullSet,
+    Plan,
+    Program,
+    ResultAppend,
+    ScalarAssign,
+    TupleExpr,
+    Var,
+)
+from repro.core import transforms as T
+from repro.core.lower import ReferenceInterpreter
+from repro.core.partition import partition_direct, partition_indirect
+from repro.data.multiset import Database, Multiset
+
+
+def groupby_program(op="+", value_field=None, results=("R",)):
+    val = Const(1) if value_field is None else FieldRef("T", "i", value_field)
+    return Program(
+        tables=(),
+        body=(
+            Forelem("i", FullSet("T"), (Accumulate("acc", FieldRef("T", "i", "k"), val, op),)),
+            Forelem(
+                "i",
+                Distinct("T", "k"),
+                (ResultAppend("R", TupleExpr((FieldRef("T", "i", "k"), ArrayRead("acc", FieldRef("T", "i", "k"))))),),
+            ),
+        ),
+        results=results,
+        name="gb",
+    )
+
+
+def make_db(rng, n=200, nk=13):
+    return Database().add(
+        Multiset.from_columns(
+            "T",
+            k=rng.integers(0, nk, n).astype(np.int32),
+            v=rng.integers(0, 50, n).astype(np.int32),
+        )
+    )
+
+
+def run_ref(p, db, params=None):
+    out = ReferenceInterpreter(db, params).run(p)
+    return {k: sorted(v) if isinstance(v, list) else v for k, v in out.items()}
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(10, 400),
+    nk=st.integers(1, 40),
+    nparts=st.integers(1, 7),
+    seed=st.integers(0, 1000),
+    value_field=st.sampled_from([None, "v"]),
+)
+def test_property_groupby_parallelization_preserves_semantics(n, nk, nparts, seed, value_field):
+    """Direct/indirect partitioning + ISE + fusion never change results."""
+    rng = np.random.default_rng(seed)
+    db = make_db(rng, n, nk)
+    p = groupby_program(value_field=value_field)
+    expected = run_ref(p, db)
+
+    p_ind = T.parallelize_groupby(p, "T", "k", nparts)
+    assert run_ref(p_ind, db) == expected
+
+    p_dir = T.iteration_space_expansion(partition_direct(p, nparts))
+    assert run_ref(p_dir, db) == expected
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(10, 300),
+    nk=st.integers(1, 30),
+    seed=st.integers(0, 1000),
+    method=st.sampled_from(["dense", "onehot", "sort"]),
+    parallel=st.sampled_from(["none", "vmap"]),
+)
+def test_property_jax_lowering_matches_reference(n, nk, seed, method, parallel):
+    rng = np.random.default_rng(seed)
+    db = make_db(rng, n, nk)
+    p = groupby_program(value_field="v")
+    if parallel == "vmap":
+        p = T.parallelize_groupby(p, "T", "k", 4)
+    expected = run_ref(p, db)
+    got = Plan(p, db, CodegenChoices(agg_method=method, parallel=parallel)).run()
+    assert sorted(got["R"]) == expected["R"]
+
+
+def test_dce_removes_dead_aggregate():
+    p = groupby_program()
+    # add a second aggregate whose array is never read
+    dead = Forelem("i", FullSet("T"), (Accumulate("dead", FieldRef("T", "i", "k"), Const(1)),))
+    p2 = p.with_body((dead,) + p.body)
+    p3 = T.dead_code_elimination(p2)
+    arrays = [s.array for s in p3.body[0].body if isinstance(s, Accumulate)] if isinstance(p3.body[0], Forelem) else []
+    from repro.core.ir import walk
+    accs = [s.array for s in walk(p3.body) if isinstance(s, Accumulate)]
+    assert "dead" not in accs
+    rng = np.random.default_rng(0)
+    db = make_db(rng)
+    assert run_ref(p3, db) == run_ref(p, db)
+
+
+def test_loop_fusion_fuses_identical_scans():
+    p = Program(
+        tables=(),
+        body=(
+            Forelem("i", FullSet("T"), (Accumulate("a", FieldRef("T", "i", "k"), Const(1)),)),
+            Forelem("j", FullSet("T"), (Accumulate("b", FieldRef("T", "j", "k"), FieldRef("T", "j", "v")),)),
+            Forelem("i", Distinct("T", "k"), (ResultAppend("R", TupleExpr((
+                FieldRef("T", "i", "k"),
+                ArrayRead("a", FieldRef("T", "i", "k")),
+                ArrayRead("b", FieldRef("T", "i", "k"))))),)),
+        ),
+        results=("R",),
+    )
+    fused = T.loop_fusion(p)
+    # two scan loops merged into one
+    n_scans = sum(1 for s in fused.body if isinstance(s, Forelem) and isinstance(s.indexset, FullSet))
+    assert n_scans == 1
+    rng = np.random.default_rng(1)
+    db = make_db(rng)
+    assert run_ref(fused, db) == run_ref(p, db)
+
+
+def test_loop_interchange_pushes_selective_inner_loop_out():
+    inner = Forelem("j", FieldMatch("T", "k", Const(3)), (ScalarAssign("s", FieldRef("T", "j", "v"), "+"),))
+    outer = Forelem("i", FullSet("U"), (inner,))
+    p = Program(tables=(), body=(outer,), results=("s",))
+    p2 = T.loop_interchange(p)
+    assert isinstance(p2.body[0], Forelem) and isinstance(p2.body[0].indexset, FieldMatch)
+    rng = np.random.default_rng(2)
+    db = make_db(rng).add(Multiset.from_columns("U", x=np.arange(5, dtype=np.int32)))
+    assert run_ref(p2, db)["s"] == run_ref(p, db)["s"]
+
+
+def test_scalar_reduce_with_params_and_filter():
+    p = Program(
+        tables=(),
+        body=(
+            Forelem(
+                "i",
+                FieldMatch("T", "k", Var("key")),
+                (ScalarAssign("s", BinOp("*", FieldRef("T", "i", "v"), Const(2)), "+"),),
+            ),
+        ),
+        results=("s",),
+        params=("key",),
+    )
+    rng = np.random.default_rng(3)
+    db = make_db(rng)
+    ref = run_ref(p, db, {"key": 5})
+    got = Plan(p, db).run(params={"key": 5})
+    assert abs(ref["s"] - got["s"]) < 1e-4
+
+
+def test_join_matches_reference():
+    rng = np.random.default_rng(4)
+    A = Multiset.from_columns("A", fk=rng.integers(0, 30, 100).astype(np.int32),
+                              x=rng.integers(0, 9, 100).astype(np.int32))
+    B = Multiset.from_columns("B", id=np.arange(30).astype(np.int32),
+                              y=rng.integers(0, 9, 30).astype(np.int32))
+    db = Database().add(A).add(B)
+    p = Program(
+        tables=(),
+        body=(
+            Forelem("i", FullSet("A"), (
+                Forelem("j", FieldMatch("B", "id", FieldRef("A", "i", "fk")), (
+                    ResultAppend("R", TupleExpr((FieldRef("A", "i", "x"), FieldRef("B", "j", "y")))),
+                )),
+            )),
+        ),
+        results=("R",),
+    )
+    assert sorted(Plan(p, db).run()["R"]) == run_ref(p, db)["R"]
+
+
+def test_filtered_scan_projection():
+    pred = BinOp(">", FieldRef("T", "_", "v"), Const(25))
+    p = Program(
+        tables=(),
+        body=(
+            Forelem("i", Filtered("T", pred), (ResultAppend("R", TupleExpr((FieldRef("T", "i", "k"),))),)),
+        ),
+        results=("R",),
+    )
+    rng = np.random.default_rng(5)
+    db = make_db(rng)
+    assert sorted(Plan(p, db).run()["R"]) == run_ref(p, db)["R"]

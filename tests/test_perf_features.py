@@ -1,0 +1,229 @@
+# Beyond-paper performance features added during §Perf iteration: int8
+# optimizer state, the factorized WKV lowering (and its validity regime),
+# sharding-context pins, and the trip-count-aware HLO analyzer.
+import dataclasses
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced_config
+from repro.models.transformer import Model
+
+
+# ---------------------------------------------------------------------------
+# int8 optimizer state
+# ---------------------------------------------------------------------------
+
+
+def test_int8_adamw_converges():
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.step import TrainSpec, make_train_step
+
+    cfg = dataclasses.replace(reduced_config(get_config("starcoder2-3b")), n_layers=2, vocab_size=64)
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params0 = m.init_params(key)
+    batch = {"tokens": jax.random.randint(key, (4, 32), 0, 64)}
+    finals = {}
+    for sd in ("f32", "int8"):
+        params, opt = params0, adamw_init(params0, sd)
+        step = jax.jit(make_train_step(
+            m, AdamWConfig(lr_peak=1e-2, warmup_steps=2, total_steps=50, state_dtype=sd),
+            TrainSpec(1, False)))
+        for _ in range(10):
+            params, opt, met = step(params, opt, batch)
+        finals[sd] = float(met["loss"])
+    assert finals["int8"] < 4.0  # both train; int8 tracks f32 loosely
+    assert abs(finals["int8"] - finals["f32"]) < 1.5
+
+
+def test_int8_state_memory_is_quarter():
+    from repro.train.optimizer import adamw_init
+
+    params = {"w": jnp.zeros((256, 512), jnp.bfloat16)}
+    s8 = adamw_init(params, "int8")
+    s32 = adamw_init(params, "f32")
+    b8 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s8.m))
+    b32 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(s32.m))
+    assert b8 < 0.27 * b32
+
+
+# ---------------------------------------------------------------------------
+# factorized WKV regime
+# ---------------------------------------------------------------------------
+
+
+def _wkv_inputs(rng, B=2, S=128, H=3, K=16, decay_scale=-2.0):
+    mk = lambda: jnp.asarray(rng.normal(size=(B, S, H, K)), jnp.float32) * 0.5
+    lw = -jnp.exp(jnp.asarray(rng.normal(size=(B, S, H, K)), jnp.float32) * 0.3 + decay_scale)
+    u = jnp.asarray(rng.normal(size=(H, K)), jnp.float32) * 0.3
+    S0 = jnp.zeros((B, H, K, K), jnp.float32)
+    return mk(), mk(), mk(), lw, u, S0
+
+
+def test_factorized_wkv_exact_in_mild_regime(rng):
+    from repro.models import rwkv6 as R
+
+    r, k, v, lw, u, S0 = _wkv_inputs(rng, decay_scale=-2.0)
+    y0, _ = R._wkv_scan(r, k, v, lw, u, S0)
+    y2, _ = R._wkv_chunked_factorized(r, k, v, lw, u, S0)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), rtol=2e-4, atol=2e-4)
+
+
+def test_factorized_wkv_degrades_in_harsh_regime_as_documented(rng):
+    """Regression-guards the documented validity boundary: harsh decay
+    (w ≈ e^{-1.6}/token) breaks the factorization — if this ever starts
+    passing, the LOG_CLAMP docs need updating."""
+    from repro.models import rwkv6 as R
+
+    r, k, v, lw, u, S0 = _wkv_inputs(rng, S=200, decay_scale=0.5)
+    y0, _ = R._wkv_scan(r, k, v, lw, u, S0)
+    y2, _ = R._wkv_chunked_factorized(r, k, v, lw, u, S0)
+    err = float(jnp.max(jnp.abs(y2 - y0)))
+    assert err > 1e-2  # documented failure regime
+    # ... while the exact chunked form stays exact there
+    y1, _ = R._wkv_chunked(r, k, v, lw, u, S0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# shardctx pins are no-ops outside the launcher
+# ---------------------------------------------------------------------------
+
+
+def test_shardctx_noop_without_specs():
+    from repro.models import shardctx
+
+    x = jnp.ones((4, 4))
+    assert shardctx.constrain_hidden(x) is x
+    assert shardctx.constrain(x, "moe_h") is x
+    with shardctx.hidden_spec(None):
+        assert shardctx.constrain_hidden(x) is x
+
+
+# ---------------------------------------------------------------------------
+# trip-count-aware HLO analyzer
+# ---------------------------------------------------------------------------
+
+TOY_HLO = textwrap.dedent("""\
+    HloModule toy
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8] get-tuple-element(%p), index=1
+      %w = f32[8,8] constant({...})
+      %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+      %a = f32[8,8] parameter(0)
+      %z = s32[] constant(0)
+      %init = (s32[], f32[8,8]) tuple(%z, %a)
+      %w5 = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[8,8] get-tuple-element(%w5), index=1
+    }
+""")
+
+
+def test_hlo_parser_trip_counts_and_collectives():
+    from repro.roofline.hlo_parse import analyze
+
+    st = analyze(TOY_HLO)
+    # dot flops: 2*8*8*8 = 1024 per iter × 5 trips
+    assert st.dot_flops == pytest.approx(5 * 1024)
+    # all-reduce operand: 8*8*4 = 256 B × 5 trips
+    assert st.collective_bytes.get("all-reduce") == pytest.approx(5 * 256)
+    assert st.n_collectives.get("all-reduce") == 5
+    # fused traffic excludes 'add'/'compare'; includes dot + all-reduce
+    assert 0 < st.fused_traffic_bytes <= st.traffic_bytes
+
+
+def test_hlo_parser_on_real_compiled_module():
+    from repro.roofline.hlo_parse import analyze
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(sds, sds).compile().as_text()
+    st = analyze(txt)
+    assert st.dot_flops == pytest.approx(7 * 2 * 64 ** 3, rel=0.01)
+
+
+def test_roofline_active_params_moe():
+    from repro.roofline.analysis import active_params
+
+    cfg = get_config("dbrx-132b")
+    total = Model(cfg).n_params()
+    active = active_params(cfg)
+    # 16 experts, top-4: expert params scale ≈ 4/16 + dense rest
+    assert active < 0.5 * total
+    assert active > 0.1 * total
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "qwen2-vl-72b", "zamba2-7b"])
+def test_int8_cache_decode_matches_bf16(arch):
+    cfg = reduced_config(get_config(arch))
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init_params(key)
+    B, S = 2, 8
+    toks = jax.random.randint(key, (B, S), 4, cfg.vocab_size)
+    c_bf = m.cache_init(B, S)
+    c_q = m.cache_init(B, S, quantized=True)
+    errs = []
+    for t in range(S):
+        lg1, c_bf = m.decode_step(params, c_bf, {"tokens": toks[:, t:t+1], "pos": jnp.asarray(t)})
+        lg2, c_q = m.decode_step(params, c_q, {"tokens": toks[:, t:t+1], "pos": jnp.asarray(t)})
+        errs.append(float(jnp.max(jnp.abs(lg1.astype(jnp.float32) - lg2.astype(jnp.float32)))))
+    assert max(errs) < 0.35, (arch, max(errs))
+    # structure preserved and actually int8
+    leaves = jax.tree.leaves(c_q)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+
+
+def test_quantized_prefill_cache_decode_continuation():
+    from repro.models.transformer import prefill_forward
+
+    cfg = reduced_config(get_config("gemma2-9b"))
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init_params(key)
+    toks = jax.random.randint(key, (2, 12), 4, cfg.vocab_size)
+    lg_bf, _ = prefill_forward(params, {"tokens": toks}, cfg)
+    lg_q, c_q = prefill_forward(params, {"tokens": toks}, cfg, quantize_cache=True)
+    # logits identical — only the emitted cache layout changes
+    np.testing.assert_array_equal(np.asarray(lg_bf, np.float32), np.asarray(lg_q, np.float32))
+    assert any(l.dtype == jnp.int8 for l in jax.tree.leaves(c_q))
+    # decode continuation from the quantized cache tracks the full forward
+    full, _ = m.forward(params, {"tokens": jnp.concatenate([toks, toks[:, :1]], 1)})
+    pad = jax.tree.map(
+        lambda a, b: jnp.pad(a, [(0, bs - as_) for as_, bs in zip(a.shape, b.shape)]),
+        c_q, m.cache_init(2, 13, quantized=True))
+    lg2, _ = m.decode_step(params, pad, {"tokens": toks[:, :1], "pos": jnp.asarray(12)})
+    err = float(jnp.max(jnp.abs(lg2[:, 0].astype(jnp.float32) - full[:, -1].astype(jnp.float32))))
+    assert err < 0.35

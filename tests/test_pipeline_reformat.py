@@ -1,0 +1,131 @@
+# Data pipeline (tokenize/pack/load) and reformatting (§III-C1) invariants.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OptimizeOptions, optimize
+from repro.core.reformat import apply_reformat, auto_reformat, plan_reformat
+from repro.data.multiset import (
+    CompressedRangeColumn,
+    Database,
+    DictColumn,
+    Multiset,
+    PlainColumn,
+    dict_encode,
+)
+from repro.data.pipeline import PipelineConfig, ShardedLoader, Vocab, build_dataset, build_vocab, tokenize
+from repro.frontends.sql import sql_to_forelem
+
+
+# ---------------------------------------------------------------------------
+# reformatting
+# ---------------------------------------------------------------------------
+
+
+def test_dict_encode_roundtrip(rng):
+    vals = np.array([f"s{i%7}" for i in rng.integers(0, 100, 200)], dtype=object)
+    col = dict_encode(vals)
+    assert col.num_keys == len(np.unique(vals))
+    assert (col.decode() == vals).all()
+
+
+def test_compressed_range_column():
+    ms = Multiset.from_columns("t", ts=np.arange(10, 1000, 3, dtype=np.int64), x=np.zeros(330, np.int32))
+    c = ms.reformat_compress_ranges()
+    assert isinstance(c.columns["ts"], CompressedRangeColumn)
+    np.testing.assert_array_equal(c.field("ts"), ms.field("ts"))
+    assert c.columns["ts"].nbytes < ms.columns["ts"].nbytes
+
+
+def test_reformat_planner_prunes_and_encodes(rng):
+    urls = np.array([f"u{i%9}" for i in range(500)], dtype=object)
+    db = Database().add(Multiset("logs", {
+        "url": PlainColumn(urls),
+        "unused": PlainColumn(rng.integers(0, 10, 500)),
+    }))
+    prog = sql_to_forelem("SELECT url, COUNT(url) FROM logs GROUP BY url", {"logs": ["url", "unused"]})
+    plan = plan_reformat(prog, db)
+    actions = {a.action for a in plan.actions}
+    assert "prune" in actions and "dict_encode" in actions
+    db2 = apply_reformat(plan, db)
+    assert "unused" not in db2["logs"].field_names()
+    assert isinstance(db2["logs"].columns["url"], DictColumn)
+    assert db2["logs"].nbytes < db["logs"].nbytes
+
+
+def test_amortization_gate():
+    # repetitive strings: dictionary encoding shrinks the column -> pays off
+    urls = np.array([f"http://long-host-name-{i % 10}.example.com/path" for i in range(2000)], dtype=object)
+    db = Database().add(Multiset("t", {"url": PlainColumn(urls)}))
+    prog = sql_to_forelem("SELECT url, COUNT(url) FROM t GROUP BY url", {"t": ["url"]})
+    plan = plan_reformat(prog, db)
+    assert plan.per_run_bytes_saved > 0
+    assert plan.worthwhile(expected_runs=1000)
+    assert plan.oneoff_bytes > 0
+
+    # all-unique strings: encoding does not shrink -> planner reports no
+    # per-run saving (the paper's 'prohibitively expensive' case)
+    uniq = np.array([f"u{i}" for i in range(100)], dtype=object)
+    db2 = Database().add(Multiset("t", {"url": PlainColumn(uniq)}))
+    plan2 = plan_reformat(prog, db2)
+    assert plan2.per_run_bytes_saved == 0
+
+
+def test_optimize_reformats_then_answers_match_python(rng):
+    urls = np.array([f"http://h{i%13}/p" for i in rng.integers(0, 300, 2000)], dtype=object)
+    db = Database().add(Multiset("access", {"url": PlainColumn(urls)}))
+    prog = sql_to_forelem("SELECT url, COUNT(url) FROM access GROUP BY url", {"access": ["url"]})
+    res = optimize(prog, db, OptimizeOptions(n_parts=4))
+    got = res.plan.run()["R"]
+    # decode integer keys back to strings and compare against numpy
+    dcol = res.db["access"].columns["url"]
+    want = {u: c for u, c in zip(*np.unique(urls, return_counts=True))}
+    for code, count in got:
+        assert want[dcol.dictionary[code]] == count
+
+
+# ---------------------------------------------------------------------------
+# LM pipeline
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_docs=st.integers(1, 60),
+    seq_len=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 99),
+)
+def test_property_packing_invariants(n_docs, seq_len, seed):
+    rng = np.random.default_rng(seed)
+    docs = [" ".join(f"w{x}" for x in rng.integers(0, 50, rng.integers(1, 80))) for _ in range(n_docs)]
+    ds = build_dataset(docs, PipelineConfig(seq_len=seq_len, min_doc_tokens=4, vocab_size=256))
+    # all ids within vocab; pad only at the tail row; loss mask matches pad
+    assert ds.tokens.max() < ds.vocab.size
+    assert ds.tokens.min() >= 0
+    assert ((ds.tokens == Vocab.PAD) == ~ds.loss_mask).all()
+    assert ds.tokens.shape[1] == seq_len
+    # token conservation: every kept doc contributes len+2 tokens
+    kept = [d for d in docs if len(d.split()) >= 4]
+    expect = sum(len(d.split()) + 2 for d in kept)
+    assert ds.loss_mask.sum() == expect
+
+
+def test_vocab_specials_and_unk():
+    v = build_vocab(["a b c a"], max_size=6)
+    assert v.id_to_token[:4] == ["<pad>", "<bos>", "<eos>", "<unk>"]
+    ids = tokenize("a z", v)
+    assert ids[0] >= 4 and ids[1] == Vocab.UNK
+
+
+def test_loader_determinism_and_sharding():
+    rng = np.random.default_rng(0)
+    docs = [" ".join(f"w{x}" for x in rng.integers(0, 50, 60)) for _ in range(100)]
+    ds = build_dataset(docs, PipelineConfig(seq_len=64, min_doc_tokens=4))
+    l1 = ShardedLoader(ds, global_batch=8, n_shards=4, shard=1, seed=7)
+    l2 = ShardedLoader(ds, global_batch=8, n_shards=4, shard=1, seed=7)
+    b1, b2 = l1.batch(3), l2.batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    s = l1.shard_slice(b1)
+    assert s["tokens"].shape[0] == 2
+    chunks = l1.chunks(total_steps=10, chunk_size=4)
+    assert chunks == [(0, 4), (4, 4), (8, 2)]

@@ -1,0 +1,95 @@
+# Loop scheduling + fault tolerance (paper §III-A2/A3) + elastic re-meshing.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sched.elastic import ElasticController, plan_mesh
+from repro.sched.fault_tolerant import HybridFaultTolerantScheduler, verify_coverage
+from repro.sched.loop_schedule import make_policy, simulate_schedule
+
+
+def test_all_policies_complete_all_iterations(rng):
+    costs = rng.uniform(0.5, 1.5, 3000)
+    for name in ("static", "fixed", "gss", "tss", "factoring", "feedback"):
+        r = simulate_schedule(make_policy(name, len(costs), 6), costs, 6, dispatch_overhead=0.01)
+        assert r.iterations_done >= len(costs), name
+
+
+def test_dynamic_beats_static_under_stragglers(rng):
+    costs = rng.uniform(0.5, 1.5, 5000)
+    speeds = [1.0] * 7 + [0.3]
+    st_ = simulate_schedule(make_policy("static", len(costs), 8), costs, 8, worker_speed=speeds)
+    for name in ("gss", "tss", "feedback"):
+        dyn = simulate_schedule(make_policy(name, len(costs), 8), costs, 8,
+                                worker_speed=speeds, dispatch_overhead=0.05)
+        assert dyn.makespan < st_.makespan, name
+        assert dyn.imbalance() < st_.imbalance(), name
+
+
+def test_failure_requeues_chunks(rng):
+    costs = rng.uniform(0.5, 1.5, 4000)
+    r = simulate_schedule(make_policy("gss", len(costs), 8), costs, 8,
+                          failures={2: 50.0, 6: 120.0}, dispatch_overhead=0.02)
+    assert r.iterations_done >= len(costs)
+    assert r.rescheduled_iters > 0
+
+
+def test_gss_chunk_sizes_decrease():
+    pol = make_policy("gss", 1000, 4)
+    remaining, sizes = 1000, []
+    while remaining > 0:
+        c = pol.next_chunk(remaining, 4, 0, [])
+        sizes.append(c)
+        remaining -= c
+    assert sizes == sorted(sizes, reverse=True)
+    assert sum(sizes) == 1000
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    total=st.integers(50, 3000),
+    n_workers=st.integers(1, 12),
+    seed=st.integers(0, 100),
+    fail_frac=st.floats(0.0, 0.5),
+)
+def test_property_hybrid_scheduler_coverage(total, n_workers, seed, fail_frac):
+    """Every iteration is computed exactly once regardless of failures, as
+    long as one worker survives (the §III-A3 guarantee)."""
+    rng = np.random.default_rng(seed)
+    n_fail = min(int(n_workers * fail_frac), n_workers - 1)
+    failures = {int(w): float(rng.uniform(0.1, 3.0)) for w in rng.choice(n_workers, n_fail, replace=False)}
+    s = HybridFaultTolerantScheduler(total, n_workers, iter_cost=0.005, dispatch_overhead=0.001)
+    res = s.run(failures=failures)
+    assert verify_coverage(res, total)
+
+
+def test_hybrid_scheduler_speculation_and_checkpoints():
+    s = HybridFaultTolerantScheduler(4000, 8, iter_cost=0.01, checkpoint_period=2.0,
+                                     worker_speed=[1] * 7 + [0.2])
+    res = s.run()
+    assert verify_coverage(res, 4000)
+    assert res.checkpoints >= 1
+
+
+def test_all_workers_dead_raises():
+    s = HybridFaultTolerantScheduler(1000, 2, iter_cost=0.01)
+    with pytest.raises(RuntimeError):
+        s.run(failures={0: 0.5, 1: 0.5})
+
+
+def test_elastic_remesh_and_batch_rescale():
+    ec = ElasticController(512, model_parallel=16, pods=2)
+    assert ec.plan.shape == (2, 16, 16)
+    p = ec.on_loss(10.0, 16, last_ckpt_step=100)
+    assert p.n_devices <= 496 and p.model_parallel == 16
+    per, accum = ec.rescale_batch(256)
+    assert per * accum * p.data_parallel * (p.shape[0] if "pod" in p.axes else 1) >= 256
+    # joins are batched with hysteresis
+    assert ec.on_join(11.0, 8, 100) is None
+    p2 = ec.on_join(10_000.0, 8, 100)
+    assert p2 is not None
+
+
+def test_plan_mesh_rejects_too_few_devices():
+    with pytest.raises(ValueError):
+        plan_mesh(8, model_parallel=16)
