@@ -9,13 +9,14 @@ import traceback
 
 def main() -> None:
     rows = []
-    from . import bench_fig2, bench_kernels, bench_pipeline, bench_sched
+    from . import bench_fig2, bench_kernels, bench_pipeline, bench_planner, bench_sched
 
     suites = [
         ("fig2", bench_fig2.run),
         ("kernels", bench_kernels.run),
         ("sched", bench_sched.run),
         ("pipeline", bench_pipeline.run),
+        ("planner", bench_planner.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -1,10 +1,12 @@
 # End-to-end Big-Data analytics driver (the paper's application class):
 # a multi-query session over synthetic web logs, run through the single
-# intermediate with distribution optimization across queries (§III-A4),
-# automatic reformatting (§III-C1), and fault-tolerant chunked execution
-# (§III-A3) over the row space.
+# intermediate with the cost-based planner choosing execution strategies
+# per query (EXPLAIN shows estimates vs. choices), distribution
+# optimization across queries (§III-A4), automatic reformatting (§III-C1),
+# and fault-tolerant chunked execution (§III-A3) over the row space.
 #
 # Run:  PYTHONPATH=src python examples/bigdata_sql.py [--rows 2000000]
+#       [--planner cost|none] [--explain]
 import argparse
 import time
 
@@ -15,12 +17,15 @@ from repro.core.distribution import optimize_distribution, partition_conflicts
 from repro.core.ir import Program
 from repro.data.multiset import Database, Multiset, PlainColumn
 from repro.frontends.sql import sql_to_forelem
+from repro.planner import PlanCache
 from repro.sched.fault_tolerant import HybridFaultTolerantScheduler, verify_coverage
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=500_000)
+    ap.add_argument("--planner", choices=["cost", "none"], default="cost")
+    ap.add_argument("--explain", action="store_true", help="print full EXPLAIN per query")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -43,22 +48,45 @@ def main() -> None:
         "SELECT status, SUM(latency) FROM logs GROUP BY status",
         "SELECT url FROM logs WHERE status = 500",
         "SELECT SUM(bytes) FROM logs WHERE status = 200",
+        # top-k (ORDER BY/LIMIT) — the planner-relevant serving shape
+        "SELECT url, COUNT(url) AS c FROM logs GROUP BY url ORDER BY c DESC LIMIT 5",
     ]
+    # repeat the first query at the end: identical (program, stats epoch)
+    # must hit the plan cache on a cost-planned session
+    queries.append(queries[0])
 
-    print(f"{n} log rows; running {len(queries)} queries through the single IR\n")
+    cache = PlanCache()
+    print(f"{n} log rows; running {len(queries)} queries through the single IR "
+          f"(planner={args.planner})\n")
     t_all = time.perf_counter()
     for q in queries:
         prog = sql_to_forelem(q, schemas)
         t0 = time.perf_counter()
-        res = optimize(prog, db, OptimizeOptions(n_parts=8, expected_runs=len(queries)))
+        res = optimize(prog, db, OptimizeOptions(
+            n_parts=8, expected_runs=len(queries), planner=args.planner, plan_cache=cache))
         out = res.plan.run()
         dt = time.perf_counter() - t0
         key = list(out)[0]
         val = out[key]
         head = val[:2] if isinstance(val, list) else val
         print(f"  [{dt*1e3:7.1f} ms] {q}\n            -> {head}")
+        if res.decision is not None:
+            c = res.decision.chosen
+            pf = f"{c.partition_field[0]}.{c.partition_field[1]}" if c.partition_field else "-"
+            hit = "cache HIT" if res.cache_hit else "cache MISS"
+            print(f"            plan: order={c.order} agg={c.agg_method} parallel={c.parallel} "
+                  f"partition={pf} ({hit})")
+            if args.explain:
+                print("\n".join("            " + l for l in res.explain.splitlines()))
         db = res.db  # reformatting persists across the session (amortization)
     print(f"\nsession total: {(time.perf_counter()-t_all)*1e3:.1f} ms")
+    if args.planner == "cost":
+        print(f"plan cache: {cache.stats()}")
+        # full EXPLAIN for the first query of the session
+        first = sql_to_forelem(queries[0], schemas)
+        res = optimize(first, db, OptimizeOptions(
+            n_parts=8, expected_runs=len(queries), planner="cost", plan_cache=cache))
+        print("\n" + res.explain)
 
     # --- distribution optimization across adjacent aggregates (§III-A4) ----
     p1 = sql_to_forelem(queries[1], schemas)

@@ -299,6 +299,11 @@ class Program:
     params: Tuple[str, ...] = ()  # free scalar Vars (query parameters)
     name: str = "program"
     congruences: Tuple[Any, ...] = ()
+    # Result post-ops (SQL ORDER BY / LIMIT — top-k queries): each order key
+    # is (tuple position, descending); applied to every multiset result
+    # after execution by both the reference interpreter and Plan.run.
+    order_by: Tuple[Tuple[int, bool], ...] = ()
+    limit: Optional[int] = None
 
     # -- convenience -------------------------------------------------------
     def table(self, name: str) -> MultisetDecl:
@@ -505,8 +510,29 @@ def pretty(stmts: Sequence[Stmt], indent: int = 0) -> str:
     return "\n".join(x for x in out if x)
 
 
+def apply_order_limit(p: Program, results: Dict[str, Any]) -> Dict[str, Any]:
+    """Apply the program's ORDER BY / LIMIT post-ops to its multiset
+    results (lists of tuples); scalar results pass through unchanged."""
+    if not p.order_by and p.limit is None:
+        return results
+    out = dict(results)
+    for name in p.results:
+        v = out.get(name)
+        if not isinstance(v, list):
+            continue
+        for pos, desc in reversed(p.order_by):
+            v = sorted(v, key=lambda row: row[pos], reverse=desc)
+        if p.limit is not None:
+            v = v[: p.limit]
+        out[name] = v
+    return out
+
+
 def program_str(p: Program) -> str:
     hdr = [f"program {p.name}  results={list(p.results)}"]
+    if p.order_by or p.limit is not None:
+        ob = ", ".join(f"#{i} {'desc' if d else 'asc'}" for i, d in p.order_by)
+        hdr[0] += f"  order_by=[{ob}] limit={p.limit}"
     for t in p.tables:
         hdr.append(f"  multiset {t.name}({', '.join(f'{n}:{d}' for n, d in t.schema.fields)})")
     return "\n".join(hdr) + "\n" + pretty(p.body, 1)

@@ -47,6 +47,7 @@ from .ir import (
     Stmt,
     TupleExpr,
     Var,
+    apply_order_limit,
     children,
     walk,
 )
@@ -82,7 +83,7 @@ class ReferenceInterpreter:
                 out[r] = dict(self.arrays[r])
             else:
                 out[r] = []
-        return out
+        return apply_order_limit(program, out)
 
     # -- expression evaluation ------------------------------------------------
     def _eval(self, e: Expr, env: Dict[str, Any]) -> Any:
@@ -489,6 +490,18 @@ class JaxLowering:
         self.db = db
         self.choices = choices or CodegenChoices()
         self.spec = extract_spec(program)
+        # The vectorized join materializes the build side as a sorted lookup
+        # (one match per probe row) — faithful only when the build key is
+        # unique.  Reject duplicates up front instead of silently dropping
+        # matches; the planner's interchange enumeration prunes on this too.
+        for j in self.spec.joins:
+            if j.build_table in db:
+                bk = np.asarray(db[j.build_table].field(j.build_key))
+                if len(bk) != len(np.unique(bk)):
+                    raise UnsupportedProgram(
+                        f"join build side {j.build_table}.{j.build_key} has duplicate "
+                        "keys — interchange the nest so the unique side builds"
+                    )
         # key-space sizes for dense accumulators (dictionary-encoded columns)
         self.num_keys: Dict[Tuple[str, str], int] = {}
         for agg in self.spec.aggs:
@@ -809,7 +822,8 @@ class Plan:
         if params:
             cols["__params__"] = {k: jnp.asarray(v) for k, v in params.items()}
         raw = self.fn(cols)
-        return {k: _densify(v) for k, v in raw.items() if k in self.program.results}
+        out = {k: _densify(v) for k, v in raw.items() if k in self.program.results}
+        return apply_order_limit(self.program, out)
 
 
 def _densify(v: Any) -> Any:

@@ -3,6 +3,12 @@
 # be employed").  One entry point runs query optimization, classic loop
 # optimization, parallelization, distribution selection and reformatting on
 # any frontend-produced program.
+#
+# With OptimizeOptions(planner="cost") the execution-strategy knobs
+# (agg_method, parallel_exec, partition_field, loop order) are chosen by the
+# cost-based planner in repro.planner from live table statistics instead of
+# being taken from the options, and the resulting compiled plan is memoized
+# in a plan cache keyed on (program fingerprint, stats epoch).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -29,6 +35,12 @@ class OptimizeOptions:
     parallel_exec: str = "vmap"        # 'none' | 'vmap' | 'shard_map'
     mesh: Any = None
     trace: bool = False
+    # 'none'  — the knobs above are used as-is (the historical behavior);
+    # 'cost'  — the cost-based planner (repro.planner) fills agg_method,
+    #           parallel_exec, partition_field and the loop order from table
+    #           statistics, with a plan cache over (program, stats epoch).
+    planner: str = "none"
+    plan_cache: Any = None             # planner.PlanCache; None → shared default
 
 
 @dataclass
@@ -39,6 +51,9 @@ class OptimizeResult:
     distribution: Optional[DistributionReport]
     reformat: Optional[ReformatPlan]
     trace: List[str] = field(default_factory=list)
+    decision: Any = None               # planner.Decision (planner='cost' only)
+    explain: Optional[str] = None      # EXPLAIN text (planner='cost' only)
+    cache_hit: bool = False
 
 
 def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = None) -> OptimizeResult:
@@ -72,16 +87,54 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     if opts.reformat:
         db, ref_plan = auto_reformat(p, db, opts.expected_runs)
 
+    # -- 2b. cost-based planning (optional; repro.planner) ----------------------
+    # Fills the codegen knobs + loop order from table statistics; a plan-cache
+    # hit short-circuits the rest of the pipeline with the compiled plan.
+    agg_method = opts.agg_method
+    parallel_exec = opts.parallel_exec
+    partition_field = opts.partition_field
+    n_parts = opts.n_parts
+    outcome = None
+    decision = None
+    explain = None
+    if opts.planner == "cost":
+        from repro.planner import run_planner
+
+        outcome = run_planner(
+            p,
+            db,
+            n_parts=opts.n_parts,
+            plan_cache=opts.plan_cache,
+            allow_shard_map=opts.mesh is not None,
+        )
+        decision, explain = outcome.decision, outcome.explain
+        if outcome.cached_entry is not None:
+            entry = outcome.cached_entry
+            return OptimizeResult(
+                entry.program, db, entry.plan, None, ref_plan, trace,
+                decision=decision, explain=explain, cache_hit=True,
+            )
+        chosen = decision.chosen
+        p = chosen.program
+        agg_method = chosen.agg_method
+        parallel_exec = chosen.parallel
+        partition_field = chosen.partition_field
+        if chosen.parallel == "none":
+            n_parts = 1  # partitioning buys nothing without parallel execution
+        log("planned", p)
+    elif opts.planner != "none":
+        raise ValueError(f"unknown planner {opts.planner!r} (use 'none' or 'cost')")
+
     # -- 3/4. parallelization ---------------------------------------------------
-    if opts.n_parts > 1 and opts.partition != "none":
+    if n_parts > 1 and opts.partition != "none":
         if opts.partition == "direct":
-            p = partition_direct(p, opts.n_parts, mesh_axis=opts.mesh_axis)
+            p = partition_direct(p, n_parts, mesh_axis=opts.mesh_axis)
         else:
-            tf = opts.partition_field
+            tf = partition_field
             if tf is None:
                 tf = _default_partition_field(p)
             if tf is not None:
-                p = partition_indirect(p, tf[0], tf[1], opts.n_parts, mesh_axis=opts.mesh_axis)
+                p = partition_indirect(p, tf[0], tf[1], n_parts, mesh_axis=opts.mesh_axis)
         p = T.iteration_space_expansion(p)
         log("parallelized", p)
 
@@ -92,12 +145,17 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
 
     # -- 6. codegen ----------------------------------------------------------------
     choices = CodegenChoices(
-        agg_method=opts.agg_method,
-        parallel=opts.parallel_exec if opts.n_parts > 1 else "none",
+        agg_method=agg_method,
+        parallel=parallel_exec if n_parts > 1 else "none",
         mesh=opts.mesh,
     )
     plan = Plan(p, db, choices)
-    return OptimizeResult(p, db, plan, dist_report, ref_plan, trace)
+    if outcome is not None:
+        outcome.store(plan, p)
+    return OptimizeResult(
+        p, db, plan, dist_report, ref_plan, trace,
+        decision=decision, explain=explain, cache_hit=False,
+    )
 
 
 def _default_partition_field(p: Program) -> Optional[Tuple[str, str]]:

@@ -385,6 +385,51 @@ def _expr_leaves(e: Expr):
 
 
 # ---------------------------------------------------------------------------
+# Loop-order (join-order) enumeration — the planner's interchange hook.
+# A two-table equi-join is a pair of nested forelem loops (Fig. 1); which
+# table drives the outer loop is a *plan choice*, not a semantic property.
+# ---------------------------------------------------------------------------
+
+
+def swap_join_nest(outer: Forelem) -> Optional[Forelem]:
+    """Given ``forelem (i ∈ pA) forelem (j ∈ pB.key[A[i].fk]) BODY`` return
+    the interchanged ``forelem (j ∈ pB) forelem (i ∈ pA.fk[B[j].key]) BODY``
+    (same result multiset — equi-join commutes).  Returns None when the
+    nest is not of that shape."""
+    if not (isinstance(outer, Forelem) and isinstance(outer.indexset, FullSet)):
+        return None
+    if len(outer.body) != 1 or not isinstance(outer.body[0], Forelem):
+        return None
+    inner = outer.body[0]
+    iix = inner.indexset
+    if not (
+        isinstance(iix, FieldMatch)
+        and isinstance(iix.value, FieldRef)
+        and iix.value.loopvar == outer.loopvar
+        and iix.value.table == outer.indexset.table
+    ):
+        return None
+    a, fk = outer.indexset.table, iix.value.field
+    b, key = iix.table, iix.field
+    new_inner = Forelem(outer.loopvar, FieldMatch(a, fk, FieldRef(b, inner.loopvar, key)), inner.body)
+    return Forelem(inner.loopvar, FullSet(b), (new_inner,))
+
+
+def join_orders(program: Program) -> List[Program]:
+    """All loop-order variants of the program obtained by interchanging one
+    join nest (the original program is NOT included)."""
+    out: List[Program] = []
+    for idx, s in enumerate(program.body):
+        if isinstance(s, Forelem):
+            swapped = swap_join_nest(s)
+            if swapped is not None:
+                body = list(program.body)
+                body[idx] = swapped
+                out.append(program.with_body(body))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Direct data partitioning: Loop Blocking (paper §III-A1)
 # ---------------------------------------------------------------------------
 

@@ -4,12 +4,17 @@
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from dataclasses import dataclass
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.ir import MultisetDecl, TupleSchema
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # imported lazily in decl(): repro.core.__init__ pulls in
+    # the lowering, which imports this module back (cycle)
+    from repro.core.ir import MultisetDecl, TupleSchema
 
 # ---------------------------------------------------------------------------
 # Column encodings
@@ -135,7 +140,9 @@ class Multiset:
     def field_names(self) -> List[str]:
         return list(self.columns)
 
-    def decl(self) -> MultisetDecl:
+    def decl(self) -> "MultisetDecl":
+        from repro.core.ir import MultisetDecl, TupleSchema
+
         fields = []
         for n, c in self.columns.items():
             arr = c.materialize() if not isinstance(c, DictColumn) else c.codes
@@ -146,6 +153,48 @@ class Multiset:
     @property
     def nbytes(self) -> int:
         return sum(c.nbytes for c in self.columns.values())
+
+    # -- statistics hooks (planner) -----------------------------------------
+    def fingerprint(self) -> str:
+        """Cheap, deterministic content fingerprint.
+
+        Hashes the schema (names, encodings, dtypes, lengths, byte sizes)
+        plus content checksums: full-column sum/min/max and a strided value
+        sample for numeric columns (vectorized numpy — microseconds per
+        million rows), the range description only for compressed-range
+        columns.  This catches mid-column edits, not just head/tail ones;
+        adversarially constructed collisions (e.g. swapping two equal-sum
+        values that the stride misses) remain possible, so the plan cache
+        trades that sliver of risk for skipping replanning+recompilation."""
+        h = hashlib.sha1()
+        h.update(self.name.encode())
+        h.update(str(self._len).encode())
+        for n in sorted(self.columns):
+            c = self.columns[n]
+            h.update(n.encode())
+            h.update(type(c).__name__.encode())
+            h.update(str(c.nbytes).encode())
+            if isinstance(c, CompressedRangeColumn):
+                # the description IS the content — O(1), no materialization
+                h.update(f"{c.start}:{c.step}:{c.length}:{c.dtype}".encode())
+                continue
+            vals = c.codes if isinstance(c, DictColumn) else np.asarray(c.materialize())
+            h.update(str(vals.dtype).encode())
+            if len(vals):
+                stride = max(1, len(vals) // 64)
+                sample = vals[::stride][:64]
+                if vals.dtype == object:
+                    h.update("|".join(str(v) for v in sample).encode())
+                else:
+                    h.update(np.ascontiguousarray(sample).tobytes())
+                    h.update(str(vals.sum(dtype=np.int64) if np.issubdtype(vals.dtype, np.integer)
+                              else vals.sum(dtype=np.float64)).encode())
+                    h.update(f"{vals.min()}:{vals.max()}".encode())
+            if isinstance(c, DictColumn):
+                d = c.dictionary
+                ds = d[:: max(1, len(d) // 16)][:16]
+                h.update(f"{len(d)}|".encode() + "|".join(str(v) for v in ds).encode())
+        return h.hexdigest()
 
     # -- reformatting (paper §III-C1) ---------------------------------------
     def reformat_dict_encode(self, fields: Optional[Sequence[str]] = None) -> "Multiset":
@@ -198,3 +247,12 @@ class Database:
 
     def decls(self) -> Tuple[MultisetDecl, ...]:
         return tuple(ms.decl() for ms in self.tables.values())
+
+    def stats_epoch(self) -> str:
+        """Fingerprint of the whole database: changes whenever tables are
+        added, dropped, reformatted, or their contents change.  Plan-cache
+        entries are keyed on this epoch (planner/cache.py)."""
+        h = hashlib.sha1()
+        for name in sorted(self.tables):
+            h.update(self.tables[name].fingerprint().encode())
+        return h.hexdigest()

@@ -55,6 +55,7 @@ _TOKEN_RE = re.compile(
 _KEYWORDS = {
     "select", "from", "where", "group", "by", "and", "or", "as",
     "count", "sum", "min", "max", "avg", "join", "on",
+    "order", "limit", "asc", "desc",
 }
 
 
@@ -101,6 +102,8 @@ class Query:
     tables: List[Tuple[str, Optional[str]]]  # (table, alias)
     where: Optional[Any]
     group_by: Optional[Tuple[Optional[str], str]]  # (tab, col)
+    order_by: List[Tuple[Tuple[Optional[str], str], bool]] = None  # ((tab, col), desc)
+    limit: Optional[int] = None
 
 
 class Parser:
@@ -149,10 +152,26 @@ class Parser:
         if self.accept("kw", "group"):
             self.expect("kw", "by")
             group_by = self.column()
+        order_by: List[Tuple[Tuple[Optional[str], str], bool]] = []
+        if self.accept("kw", "order"):
+            self.expect("kw", "by")
+            while True:
+                col = self.column()
+                desc = False
+                if self.accept("kw", "desc"):
+                    desc = True
+                elif self.accept("kw", "asc"):
+                    desc = False
+                order_by.append((col, desc))
+                if not self.accept("op", ","):
+                    break
+        limit = None
+        if self.accept("kw", "limit"):
+            limit = int(self.expect("num"))
         self.expect("eof")
         for on in self._on_preds:
             where = on if where is None else ("and", where, on)
-        return Query(items, tables, where, group_by)
+        return Query(items, tables, where, group_by, order_by, limit)
 
     _on_preds: List[Any]
 
@@ -323,6 +342,33 @@ def _split_join_pred(pred: Any, tables) -> Tuple[List[Tuple[str, str, str, str]]
     return joins, residual
 
 
+def _resolve_order_limit(q: Query, tables) -> Tuple[Tuple[Tuple[int, bool], ...], Optional[int]]:
+    """Map ORDER BY columns to select-item positions (result tuple slots).
+
+    A key resolves against, in order: a select-item alias, a bare selected
+    column, or the argument column of a selected aggregate (so
+    ``SELECT url, COUNT(url) AS c ... ORDER BY c`` and ``ORDER BY url``
+    both work)."""
+    out: List[Tuple[int, bool]] = []
+    for (tab, col), desc in q.order_by or []:
+        pos: Optional[int] = None
+        for i, it in enumerate(q.items):
+            if tab is None and it.alias == col:
+                pos = i
+                break
+        if pos is None:
+            for i, it in enumerate(q.items):
+                e = it.expr
+                if isinstance(e, tuple) and e[0] == "col" and e[2] == col:
+                    if tab is None or _resolve(tab, col, tables) == _resolve(e[1], e[2], tables):
+                        pos = i
+                        break
+        if pos is None:
+            raise SQLError(f"ORDER BY column {col!r} is not in the select list")
+        out.append((pos, desc))
+    return tuple(out), q.limit
+
+
 def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[str] = None) -> Program:
     """Compile a SQL string into a forelem Program.
 
@@ -330,6 +376,7 @@ def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[s
     """
     q = parse_sql(sql)
     tables = q.tables
+    order_by, limit = _resolve_order_limit(q, tables)
     decls = tuple(
         MultisetDecl(t, TupleSchema(tuple((f, "any") for f in schemas[t]))) for t, _ in tables
     )
@@ -380,10 +427,13 @@ def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[s
             body.append(
                 Forelem("i", Distinct(t, gcol), (ResultAppend("R", TupleExpr(tuple(reads))),))
             )
-            return Program(decls, tuple(body), ("R",), tuple(params), name or "sql_groupby")
+            return Program(decls, tuple(body), ("R",), tuple(params), name or "sql_groupby",
+                           order_by=order_by, limit=limit)
 
         # scalar aggregate (no GROUP BY) --------------------------------------
         if any(it.kind == "agg" for it in q.items):
+            if order_by or limit is not None:
+                raise SQLError("ORDER BY/LIMIT on a scalar aggregate")
             if len(q.items) != 1:
                 raise SQLError("multiple scalar aggregates unsupported")
             it = q.items[0]
@@ -404,7 +454,8 @@ def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[s
         items = tuple(_to_expr(it.expr, lv, tables) for it in q.items)
         ix = FullSet(t) if pred is None else Filtered(t, pred)
         body3 = (Forelem("i", ix, (ResultAppend("R", TupleExpr(items)),)),)
-        return Program(decls, body3, ("R",), tuple(params), name or "sql_select")
+        return Program(decls, body3, ("R",), tuple(params), name or "sql_select",
+                       order_by=order_by, limit=limit)
 
     # ------- two-table equi-join ------------------------------------------------
     if len(tables) == 2:
@@ -429,7 +480,8 @@ def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[s
                 ),
             ),
         )
-        return Program(decls, body4, ("R",), tuple(params), name or "sql_join")
+        return Program(decls, body4, ("R",), tuple(params), name or "sql_join",
+                       order_by=order_by, limit=limit)
 
     raise SQLError(">2 tables unsupported")
 

@@ -1,0 +1,221 @@
+# Cost model over the lowering's real strategy space (core/lower.py):
+#
+#   * index-set materialization for aggregations ("agg_method"):
+#       dense   — scatter/segment_sum into a dense accumulator,
+#       onehot  — one-hot × MXU matmul histogram (rows × keys work!),
+#       sort    — argsort + sorted segment reduction,
+#       kernel  — Pallas segreduce (VMEM accumulator; *interpret mode* on
+#                 CPU, which is orders of magnitude slower — the backend
+#                 term below is what keeps the planner honest about it),
+#   * parallel execution of foralls: none / vmap / shard_map,
+#   * partition-field choice for indirect partitioning (skew-aware).
+#
+# Units are abstract "element-ops" (1.0 ≈ one streaming element visit).
+# The default coefficients were fitted against bench_fig2-style
+# microbenchmarks on the CPU backend; ``calibrate()`` re-measures them on
+# the current machine (used by benchmarks/bench_planner.py).
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.lower import ProgramSpec
+
+from .cardinality import CardinalityEstimator
+from .stats import DbStats
+
+
+@dataclass(frozen=True)
+class CostCoefficients:
+    c_scan: float = 1.0          # stream one element (mask eval, projection)
+    c_dense: float = 2.5         # scatter-add per element
+    c_onehot: float = 0.08       # per cell of the rows×keys one-hot matmul
+    c_sort: float = 1.2          # per element per log2(rows) of argsort
+    c_kernel: float = 2.0        # per element inside the Pallas kernel
+    c_kernel_interpret: float = 400.0  # ... in interpret mode (CPU fallback)
+    c_kernel_fixed: float = 2e4  # kernel launch / trace overhead
+    c_combine: float = 1.5       # per accumulator cell when merging partials
+    c_shard_fixed: float = 5e4   # shard_map trace/collective setup
+    c_join_probe: float = 3.0    # searchsorted probe per row
+    c_output: float = 1.0        # materializing one output cell
+
+
+def default_coefficients(backend: Optional[str] = None) -> CostCoefficients:
+    return CostCoefficients()
+
+
+class CostModel:
+    """Costs an extracted ``ProgramSpec`` under concrete codegen choices."""
+
+    def __init__(
+        self,
+        stats: DbStats,
+        coeffs: Optional[CostCoefficients] = None,
+        backend: Optional[str] = None,
+    ):
+        self.stats = stats
+        self.coeffs = coeffs or default_coefficients()
+        if backend is None:
+            try:
+                import jax
+
+                backend = jax.default_backend()
+            except Exception:
+                backend = "cpu"
+        self.backend = backend
+        self.est = CardinalityEstimator(stats)
+
+    # -- aggregation --------------------------------------------------------
+    def agg_cost(self, rows: float, num_keys: float, method: str, op: str) -> float:
+        c = self.coeffs
+        if op != "+" and method in ("onehot", "kernel"):
+            method = "dense"  # the lowering falls back; cost what actually runs
+        if method == "dense":
+            return rows * c.c_dense + num_keys * c.c_output
+        if method == "onehot":
+            return rows * num_keys * c.c_onehot + num_keys * c.c_output
+        if method == "sort":
+            return rows * c.c_sort * max(1.0, math.log2(max(2.0, rows))) + rows * c.c_dense
+        if method == "kernel":
+            per = c.c_kernel if self.backend in ("tpu", "gpu") else c.c_kernel_interpret
+            return c.c_kernel_fixed + rows * per + num_keys * c.c_output
+        raise ValueError(f"bad agg method {method}")
+
+    def parallel_cost(
+        self, base_cost: float, rows: float, num_keys: float, parallel: str, n_parts: int
+    ) -> float:
+        """Cost of executing an aggregation under a forall strategy."""
+        c = self.coeffs
+        if parallel == "none" or n_parts <= 1:
+            return base_cost
+        # per-partition work is ~1/n of the rows term but every partition
+        # pays the full key-space combine; on a single device (vmap) the
+        # partition work is emulated, not truly parallel.
+        combine = n_parts * num_keys * c.c_combine
+        if parallel == "vmap":
+            return base_cost + combine
+        if parallel == "shard_map":
+            speedup = max(1, n_parts)
+            return base_cost / speedup + combine + c.c_shard_fixed
+        raise ValueError(f"bad parallel {parallel}")
+
+    # -- whole-spec cost -----------------------------------------------------
+    def spec_cost(
+        self,
+        spec: ProgramSpec,
+        agg_method: str,
+        parallel: str,
+        n_parts: int,
+        partition_field: Optional[Tuple[str, str]] = None,
+    ) -> Tuple[float, List[Tuple[str, float]]]:
+        """Total estimated cost + per-operator breakdown."""
+        c = self.coeffs
+        breakdown: List[Tuple[str, float]] = []
+
+        for agg in spec.aggs:
+            # filtered rows still stream through the vectorized kernel with
+            # zero weight, so the filter does not shrink the aggregate cost
+            rows = float(self.stats.n_rows(agg.table))
+            num_keys = float(self.stats.key_space(agg.table, agg.key_field))
+            base = self.agg_cost(rows, num_keys, agg_method, agg.op)
+            base += rows * c.c_scan  # key/value/mask streaming
+            total = self.parallel_cost(base, rows, num_keys, parallel, n_parts)
+            total *= self._skew_penalty(agg.table, partition_field, parallel, n_parts)
+            breakdown.append((f"agg {agg.array}[{agg.table}.{agg.key_field}] ({agg_method})", total))
+
+        for sr in spec.scalar_reduces:
+            rows = float(self.stats.n_rows(sr.table))
+            breakdown.append((f"reduce {sr.var} over {sr.table}", rows * c.c_scan))
+
+        for dr in spec.distinct_reads:
+            nk = float(self.stats.key_space(dr.table, dr.field))
+            breakdown.append((f"distinct {dr.table}.{dr.field}", nk * c.c_output * max(1, len(dr.items))))
+
+        for fp in spec.filter_projects:
+            rows = float(self.stats.n_rows(fp.table))
+            sel = self.est.selectivity(fp.filter_pred, fp.table)
+            breakdown.append(
+                (f"filter/project {fp.table}", rows * c.c_scan + sel * rows * c.c_output * max(1, len(fp.items)))
+            )
+
+        for j in spec.joins:
+            probe = float(self.stats.n_rows(j.probe_table))
+            build = float(self.stats.n_rows(j.build_table))
+            out_rows = probe * build / max(
+                self.stats.n_distinct(j.probe_table, j.probe_fk),
+                self.stats.n_distinct(j.build_table, j.build_key),
+            )
+            cost = (
+                build * c.c_sort * max(1.0, math.log2(max(2.0, build)))  # sort build side
+                + probe * c.c_join_probe
+                + out_rows * c.c_output * max(1, len(j.items))
+            )
+            breakdown.append((f"join {j.probe_table}⋈{j.build_table}", cost))
+
+        return sum(x for _, x in breakdown), breakdown
+
+    def _skew_penalty(
+        self,
+        table: str,
+        partition_field: Optional[Tuple[str, str]],
+        parallel: str,
+        n_parts: int,
+    ) -> float:
+        """Indirect partitioning on a skewed field leaves one partition with
+        most of the rows: the parallel win degrades toward serial."""
+        if parallel == "none" or n_parts <= 1 or partition_field is None:
+            return 1.0
+        fs = self.stats.field(partition_field[0], partition_field[1])
+        if fs is None:
+            return 1.0
+        uniform = 1.0 / max(1, fs.n_distinct)
+        skew = fs.most_common_frac / max(uniform, 1e-12)
+        # skew==1 → balanced → no penalty; heavy skew asymptotes to n_parts
+        return 1.0 + min(float(n_parts) - 1.0, math.log2(max(1.0, skew)) * 0.25)
+
+
+def calibrate(
+    n_rows: int = 200_000, n_keys: int = 1_024, repeats: int = 3
+) -> CostCoefficients:
+    """Fit the aggregation coefficients to this machine by timing the same
+    microkernels the lowering emits (bench_fig2-style).  Returns scaled
+    coefficients with the dense scatter-add as the 1-element-op anchor."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, n_keys, n_rows).astype(np.int32))
+    vals = jnp.asarray(np.ones(n_rows, np.float32))
+
+    def best(f) -> float:
+        # keys/vals are passed as arguments — a no-arg closure would let
+        # XLA constant-fold the whole computation at compile time
+        jax.block_until_ready(f(keys, vals))  # compile
+        t = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(keys, vals))
+            t = min(t, time.perf_counter() - t0)
+        return t
+
+    dense = jax.jit(lambda k, v: jax.ops.segment_sum(v, k, num_segments=n_keys))
+    onehot = jax.jit(lambda k, v: jax.nn.one_hot(k, n_keys, dtype=v.dtype).T @ v)
+    sort = jax.jit(
+        lambda k, v: jax.ops.segment_sum(v[jnp.argsort(k)], k[jnp.argsort(k)],
+                                         num_segments=n_keys, indices_are_sorted=True)
+    )
+    t_dense = best(dense)
+    t_onehot = best(onehot)
+    t_sort = best(sort)
+
+    unit = t_dense / n_rows / 2.5  # keep c_dense at its default anchor
+    base = default_coefficients()
+    return replace(
+        base,
+        c_onehot=max(1e-4, t_onehot / (n_rows * n_keys) / unit),
+        c_sort=max(0.1, t_sort / (n_rows * max(1.0, math.log2(n_rows))) / unit),
+    )

@@ -1,0 +1,79 @@
+# Planner driver: the piece ``core.passes.optimize`` calls when
+# ``OptimizeOptions(planner="cost")``.
+#
+# Flow per query:
+#   1. fingerprint the (query-optimized) program + the database epoch,
+#   2. plan-cache probe — a hit returns the previously compiled Plan,
+#   3. on miss: collect stats, enumerate+price candidates, pick the
+#      cheapest, render EXPLAIN; passes.py then finishes the pipeline
+#      (partitioning, distribution, lowering) with the chosen knobs and
+#      stores the compiled plan back via ``PlannerOutcome.store``.
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+from repro.core.ir import Program
+from repro.data.multiset import Database
+
+from .cache import DEFAULT_CACHE, CacheEntry, PlanCache, program_fingerprint
+from .enumerate import Decision, plan_query
+from .explain import render_explain
+from .stats import collect_stats
+
+
+@dataclass
+class PlannerOutcome:
+    program: Program            # chosen loop order (pre-partitioning)
+    decision: Decision
+    explain: str
+    cache_hit: bool
+    fingerprint: str
+    epoch: str
+    cache: PlanCache
+    cached_entry: Optional[CacheEntry] = None
+
+    def store(self, plan: Any, final_program: Program) -> None:
+        """Memoize the compiled plan for identical future queries."""
+        self.cache.put(
+            self.fingerprint,
+            self.epoch,
+            CacheEntry(self.decision, plan, self.explain, final_program, self.epoch),
+        )
+
+
+def run_planner(
+    program: Program,
+    db: Database,
+    n_parts: int = 1,
+    plan_cache: Optional[PlanCache] = None,
+    allow_shard_map: bool = False,
+    coeffs: Any = None,
+) -> PlannerOutcome:
+    cache = plan_cache if plan_cache is not None else DEFAULT_CACHE
+    # the cached plan was compiled under these planning inputs — different
+    # inputs must miss, even for the same program text (and DEFAULT_CACHE
+    # is shared across callers with different options)
+    fp = f"{program_fingerprint(program)}|n{n_parts}|s{int(allow_shard_map)}|c{hash(coeffs)}"
+    epoch = db.stats_epoch()
+
+    entry = cache.get(fp, epoch)
+    if entry is not None:
+        explain = render_explain(entry.decision, name=program.name, cache_hit=True)
+        return PlannerOutcome(
+            entry.decision.chosen.program,
+            entry.decision,
+            explain,
+            True,
+            fp,
+            epoch,
+            cache,
+            cached_entry=entry,
+        )
+
+    stats = collect_stats(db)
+    decision = plan_query(
+        program, stats, n_parts=n_parts, coeffs=coeffs, allow_shard_map=allow_shard_map
+    )
+    explain = render_explain(decision, name=program.name, cache_hit=False)
+    return PlannerOutcome(decision.chosen.program, decision, explain, False, fp, epoch, cache)

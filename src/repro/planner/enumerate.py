@@ -1,0 +1,145 @@
+# Plan enumeration: loop orders (via the interchange hooks in
+# core/transforms.py) × index-set materialization methods × parallel
+# execution strategies × partition-field choices, priced with the cost
+# model and pruned to the cheapest.
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import transforms as T
+from repro.core.ir import Program
+from repro.core.lower import ProgramSpec, UnsupportedProgram, extract_spec
+
+from .cardinality import CardinalityEstimator, LoopEstimate
+from .cost import CostCoefficients, CostModel
+from .stats import DbStats
+
+AGG_METHODS = ("dense", "sort", "onehot", "kernel")
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One fully specified executable plan."""
+
+    order: str                      # 'as-written' | 'interchanged[k]'
+    program: Program
+    agg_method: str
+    parallel: str                   # 'none' | 'vmap' | 'shard_map'
+    partition_field: Optional[Tuple[str, str]]
+    cost: float
+    breakdown: Tuple[Tuple[str, float], ...] = ()
+
+
+@dataclass
+class Decision:
+    """Outcome of planning one query."""
+
+    chosen: Candidate
+    candidates: List[Candidate]               # all enumerated, sorted by cost
+    loop_estimates: List[LoopEstimate]        # cardinalities of the chosen order
+    stats_epoch: str
+    fallback_reason: Optional[str] = None     # set when enumeration bailed out
+
+    @property
+    def n_enumerated(self) -> int:
+        return len(self.candidates)
+
+
+def _partition_candidates(spec: ProgramSpec, stats: DbStats) -> List[Optional[Tuple[str, str]]]:
+    """Candidate (table, field) pairs for indirect partitioning: the
+    aggregation keys (the paper's X = Access.url choice)."""
+    seen: List[Optional[Tuple[str, str]]] = []
+    for agg in spec.aggs:
+        tf = (agg.table, agg.key_field)
+        if tf not in seen:
+            seen.append(tf)
+    if not seen:
+        seen.append(None)
+    return seen
+
+
+def _joins_lowerable(spec: ProgramSpec, stats: DbStats) -> bool:
+    """The vectorized join needs a key-unique build side (lower.py); prune
+    loop orders that cannot execute faithfully.  ``is_unique is None``
+    (sampled stats) is treated as non-unique — conservative."""
+    for j in spec.joins:
+        fs = stats.field(j.build_table, j.build_key)
+        if fs is None or fs.is_unique is not True:
+            return False
+    return True
+
+
+def enumerate_candidates(
+    program: Program,
+    stats: DbStats,
+    n_parts: int = 1,
+    coeffs: Optional[CostCoefficients] = None,
+    allow_shard_map: bool = False,
+    backend: Optional[str] = None,
+) -> List[Candidate]:
+    """Enumerate and price every plan in the strategy space.  Programs whose
+    shape the vectorized lowering does not support are skipped (they would
+    fail at codegen anyway).  Raises UnsupportedProgram when *no* variant is
+    supported."""
+    model = CostModel(stats, coeffs, backend=backend)
+    orders: List[Tuple[str, Program]] = [("as-written", program)]
+    for k, variant in enumerate(T.join_orders(program)):
+        orders.append((f"interchanged[{k}]", variant))
+
+    out: List[Candidate] = []
+    last_err: Optional[Exception] = None
+    for order_name, prog in orders:
+        try:
+            spec = extract_spec(prog)
+        except UnsupportedProgram as e:
+            last_err = e
+            continue
+        if not _joins_lowerable(spec, stats):
+            last_err = UnsupportedProgram(
+                f"{order_name}: join build side is not key-unique"
+            )
+            continue
+        has_aggs = bool(spec.aggs)
+        methods: Sequence[str] = AGG_METHODS if has_aggs else ("dense",)
+        parallels: List[str] = ["none"]
+        if n_parts > 1:
+            parallels.append("vmap")
+            if allow_shard_map:
+                parallels.append("shard_map")
+        for method in methods:
+            for parallel in parallels:
+                pfields = _partition_candidates(spec, stats) if parallel != "none" else [None]
+                for pf in pfields:
+                    cost, breakdown = model.spec_cost(spec, method, parallel, n_parts, pf)
+                    out.append(
+                        Candidate(order_name, prog, method, parallel, pf, cost, tuple(breakdown))
+                    )
+    if not out:
+        raise last_err or UnsupportedProgram("no enumerable plan")
+    out.sort(key=lambda c: c.cost)
+    return out
+
+
+def plan_query(
+    program: Program,
+    stats: DbStats,
+    n_parts: int = 1,
+    coeffs: Optional[CostCoefficients] = None,
+    allow_shard_map: bool = False,
+    backend: Optional[str] = None,
+) -> Decision:
+    """Pick the cheapest plan; on unsupported shapes fall back to the
+    as-written program with the pipeline's fixed defaults."""
+    est = CardinalityEstimator(stats)
+    try:
+        cands = enumerate_candidates(
+            program, stats, n_parts, coeffs, allow_shard_map=allow_shard_map, backend=backend
+        )
+        chosen = cands[0]
+        return Decision(chosen, cands, est.loop_estimates(chosen.program), stats.epoch)
+    except UnsupportedProgram as e:
+        fallback = Candidate("as-written", program, "dense", "vmap" if n_parts > 1 else "none", None, float("inf"))
+        return Decision(
+            fallback, [fallback], est.loop_estimates(program), stats.epoch, fallback_reason=str(e)
+        )

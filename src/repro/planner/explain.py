@@ -1,0 +1,60 @@
+# EXPLAIN rendering: estimated cardinalities alongside the chosen plan and
+# the priced alternatives, so a user can see *why* the planner picked what
+# it picked (and whether the plan came from the cache).
+from __future__ import annotations
+
+from typing import Optional
+
+from .enumerate import Decision
+
+
+def _fmt(x: float) -> str:
+    if x >= 1e15:
+        return "inf"
+    if x >= 1e6:
+        return f"{x:.3g}"
+    if x == int(x):
+        return str(int(x))
+    return f"{x:.1f}"
+
+
+def render_explain(
+    decision: Decision,
+    name: str = "query",
+    cache_hit: bool = False,
+    max_alternatives: int = 6,
+) -> str:
+    lines = []
+    src = "cache HIT" if cache_hit else "cache MISS"
+    lines.append(f"EXPLAIN {name}  (planner=cost, {src}, epoch={decision.stats_epoch[:10]})")
+
+    lines.append("  estimated cardinalities:")
+    for le in decision.loop_estimates:
+        pad = "    " + "  " * le.depth
+        lines.append(f"{pad}{le.description:<52s} rows≈{_fmt(le.per_visit)}  total≈{_fmt(le.total)}")
+    if not decision.loop_estimates:
+        lines.append("    (no loops)")
+
+    c = decision.chosen
+    pf = f"{c.partition_field[0]}.{c.partition_field[1]}" if c.partition_field else "-"
+    lines.append(
+        f"  chosen: order={c.order} agg_method={c.agg_method} parallel={c.parallel} "
+        f"partition_field={pf} est_cost≈{_fmt(c.cost)}"
+    )
+    for op, cost in c.breakdown:
+        lines.append(f"    {op:<56s} cost≈{_fmt(cost)}")
+    if decision.fallback_reason:
+        lines.append(f"  (fallback to fixed defaults: {decision.fallback_reason})")
+
+    alts = [a for a in decision.candidates[1:]]
+    if alts:
+        lines.append(f"  rejected alternatives ({len(alts)} of {decision.n_enumerated} enumerated):")
+        for a in alts[:max_alternatives]:
+            apf = f"{a.partition_field[0]}.{a.partition_field[1]}" if a.partition_field else "-"
+            lines.append(
+                f"    order={a.order} agg_method={a.agg_method} parallel={a.parallel} "
+                f"partition_field={apf} est_cost≈{_fmt(a.cost)}"
+            )
+        if len(alts) > max_alternatives:
+            lines.append(f"    ... {len(alts) - max_alternatives} more")
+    return "\n".join(lines)

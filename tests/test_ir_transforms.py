@@ -4,6 +4,7 @@
 # supported pattern.  Property-based (hypothesis) over random programs/data.
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

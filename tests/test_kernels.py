@@ -2,6 +2,7 @@
 # pure-jnp oracle, plus hypothesis property tests on segreduce.
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

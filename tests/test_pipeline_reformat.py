@@ -1,6 +1,7 @@
 # Data pipeline (tokenize/pack/load) and reformatting (§III-C1) invariants.
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import OptimizeOptions, optimize

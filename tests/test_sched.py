@@ -1,6 +1,7 @@
 # Loop scheduling + fault tolerance (paper §III-A2/A3) + elastic re-meshing.
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.sched.elastic import ElasticController, plan_mesh
