@@ -1,0 +1,106 @@
+# Join benchmark: unique-lookup vs duplicate-key expansion lowering, plain
+# joins and GROUP-BY-over-join (the star-schema aggregate shape), with the
+# cost planner's choice recorded per query.  Emits BENCH_join.json.
+#
+# Run:  PYTHONPATH=src python benchmarks/bench_join.py
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core import OptimizeOptions, optimize
+from repro.core.lower import CodegenChoices, Plan
+from repro.data.multiset import Database, Multiset
+from repro.frontends.sql import sql_to_forelem
+from repro.planner import PlanCache
+
+SCHEMAS = {"fact": ["dim_id", "grp", "amount"], "dim": ["id", "region", "weight"]}
+
+
+def _make_db(n_fact: int = 200_000, n_dim: int = 1_000, dup: int = 1, seed: int = 0) -> Database:
+    """Star schema: `fact` rows point into `dim`; dup > 1 repeats every dim
+    key `dup` times (duplicate build keys → fan-out joins)."""
+    rng = np.random.default_rng(seed)
+    ids = np.repeat(np.arange(n_dim, dtype=np.int32), dup)
+    fact = Multiset.from_columns(
+        "fact",
+        dim_id=rng.integers(0, n_dim, n_fact).astype(np.int32),
+        grp=rng.integers(0, 64, n_fact).astype(np.int32),
+        amount=rng.integers(0, 1000, n_fact).astype(np.int32),
+    )
+    dim = Multiset.from_columns(
+        "dim",
+        id=ids,
+        region=rng.integers(0, 16, len(ids)).astype(np.int32),
+        weight=rng.integers(0, 100, len(ids)).astype(np.int32),
+    )
+    return Database().add(fact).add(dim)
+
+
+QUERIES = [
+    ("plain_join", "SELECT f.grp, d.region FROM fact f, dim d WHERE f.dim_id = d.id"),
+    ("groupby_over_join",
+     "SELECT d.region, COUNT(d.region), SUM(f.amount) "
+     "FROM fact f, dim d WHERE f.dim_id = d.id GROUP BY d.region"),
+]
+
+
+def _time_plan(plan: Plan, repeats: int = 3) -> float:
+    cols = plan.input_columns()
+    jax.block_until_ready(plan.fn(cols))  # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(plan.fn(cols))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    report: Dict = {"scenarios": []}
+
+    for dup in (1, 4):
+        db = _make_db(dup=dup)
+        label = "unique" if dup == 1 else f"dup{dup}"
+        for qname, sql in QUERIES:
+            prog = sql_to_forelem(sql, SCHEMAS, name=qname)
+            planned = optimize(prog, db, OptimizeOptions(planner="cost", plan_cache=PlanCache()))
+            t_planned = _time_plan(planned.plan)
+            chosen = planned.decision.chosen
+
+            # the always-correct expansion lowering as the baseline
+            t_expand = _time_plan(Plan(prog, db, CodegenChoices(join_method="expand")))
+
+            entry = {
+                "scenario": f"{qname}_{label}",
+                "sql": sql,
+                "dup_factor": dup,
+                "planner_choice": {
+                    "order": chosen.order,
+                    "agg_method": chosen.agg_method,
+                    "join_method": chosen.join_method,
+                },
+                "planned_us": t_planned * 1e6,
+                "expand_us": t_expand * 1e6,
+                "speedup_vs_expand": t_expand / max(t_planned, 1e-9),
+            }
+            report["scenarios"].append(entry)
+            rows.append((f"join_{qname}_{label}_planned", t_planned * 1e6,
+                         f"join={chosen.join_method}"))
+            rows.append((f"join_{qname}_{label}_expand", t_expand * 1e6,
+                         f"{entry['speedup_vs_expand']:.2f}x"))
+
+    with open("BENCH_join.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -34,15 +34,43 @@ def main() -> None:
     status = rng.choice([200, 200, 200, 304, 404, 500], n).astype(np.int32)
     latency = rng.gamma(2.0, 30.0, n).astype(np.float32)
     bytes_ = rng.integers(100, 1 << 20, n).astype(np.int32)
+    n_servers = 200
+    server_id = rng.integers(0, n_servers, n).astype(np.int32)
     db = Database().add(
         Multiset("logs", {
             "url": PlainColumn(urls), "status": PlainColumn(status),
             "latency": PlainColumn(latency), "bytes": PlainColumn(bytes_),
+            "server_id": PlainColumn(server_id),
+        })
+    ).add(
+        # dimension table: unique server ids (the planner picks the cheap
+        # unique-lookup join lowering for this side)
+        Multiset("servers", {
+            "id": PlainColumn(np.arange(n_servers, dtype=np.int32)),
+            "region": PlainColumn(rng.integers(0, 16, n_servers).astype(np.int32)),
+        })
+    ).add(
+        # each server has two mirror rows — duplicate build keys force the
+        # expansion join lowering
+        Multiset("mirrors", {
+            "id": PlainColumn(np.repeat(np.arange(n_servers, dtype=np.int32), 2)),
+            "host": PlainColumn(rng.integers(0, 1000, 2 * n_servers).astype(np.int32)),
         })
     )
-    schemas = {"logs": ["url", "status", "latency", "bytes"]}
+    schemas = {
+        "logs": ["url", "status", "latency", "bytes", "server_id"],
+        "servers": ["id", "region"],
+        "mirrors": ["id", "host"],
+    }
 
     queries = [
+        # star-schema aggregate: GROUP BY over a two-table join — the
+        # planner picks the unique-lookup join lowering for the dim table
+        "SELECT s.region, COUNT(s.region), SUM(l.latency) FROM logs l, servers s "
+        "WHERE l.server_id = s.id GROUP BY s.region",
+        # duplicate-key join (fan-out 2, expansion lowering) + probe filter
+        "SELECT l.url, m.host FROM logs l, mirrors m "
+        "WHERE l.server_id = m.id AND l.status = 500",
         "SELECT url, COUNT(url) FROM logs GROUP BY url",
         "SELECT status, COUNT(status) FROM logs GROUP BY status",
         "SELECT status, SUM(latency) FROM logs GROUP BY status",
@@ -51,9 +79,11 @@ def main() -> None:
         # top-k (ORDER BY/LIMIT) — the planner-relevant serving shape
         "SELECT url, COUNT(url) AS c FROM logs GROUP BY url ORDER BY c DESC LIMIT 5",
     ]
-    # repeat the first query at the end: identical (program, stats epoch)
+    # repeat the url-count query at the end: identical (program, stats
+    # epoch — the join queries up front let the reformatted layout settle)
     # must hit the plan cache on a cost-planned session
-    queries.append(queries[0])
+    repeat_q = queries[2]
+    queries.append(repeat_q)
 
     cache = PlanCache()
     print(f"{n} log rows; running {len(queries)} queries through the single IR "
@@ -74,23 +104,26 @@ def main() -> None:
             c = res.decision.chosen
             pf = f"{c.partition_field[0]}.{c.partition_field[1]}" if c.partition_field else "-"
             hit = "cache HIT" if res.cache_hit else "cache MISS"
+            jm = f" join={c.join_method}" if c.join_method else ""
             print(f"            plan: order={c.order} agg={c.agg_method} parallel={c.parallel} "
-                  f"partition={pf} ({hit})")
+                  f"partition={pf}{jm} ({hit})")
             if args.explain:
                 print("\n".join("            " + l for l in res.explain.splitlines()))
         db = res.db  # reformatting persists across the session (amortization)
     print(f"\nsession total: {(time.perf_counter()-t_all)*1e3:.1f} ms")
     if args.planner == "cost":
         print(f"plan cache: {cache.stats()}")
-        # full EXPLAIN for the first query of the session
-        first = sql_to_forelem(queries[0], schemas)
+        # full EXPLAIN for the repeated (cache-hitting) query
+        first = sql_to_forelem(repeat_q, schemas)
         res = optimize(first, db, OptimizeOptions(
             n_parts=8, expected_runs=len(queries), planner="cost", plan_cache=cache))
         print("\n" + res.explain)
 
     # --- distribution optimization across adjacent aggregates (§III-A4) ----
-    p1 = sql_to_forelem(queries[1], schemas)
-    p2 = sql_to_forelem(queries[2], schemas)
+    # the two status group-by queries (the orthogonalize calls below
+    # partition both on logs.status)
+    p1 = sql_to_forelem(queries[3], schemas)
+    p2 = sql_to_forelem(queries[4], schemas)
     combined = Program(p1.tables, p1.body + p2.body, ("R", "R2"), (), "session")
     # rename second result to avoid collision
     from dataclasses import replace

@@ -421,6 +421,14 @@ def tables_read(stmts: Sequence[Stmt]) -> Dict[str, set]:
                 note(base.table, base.field)
             elif isinstance(base, Filtered):
                 visit_expr(base.predicate)
+                inner = base.base
+                while isinstance(inner, Blocked):
+                    inner = inner.base
+                if isinstance(inner, Distinct):
+                    note(inner.table, inner.field)
+                elif isinstance(inner, FieldMatch):
+                    note(inner.table, inner.field)
+                    visit_expr(inner.value)
         if isinstance(s, ForValue):
             rp = s.range_part
             note(rp.base.table, rp.base.field)

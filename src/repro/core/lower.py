@@ -262,12 +262,17 @@ class AggSpec:
 
 @dataclass
 class DistinctReadSpec:
-    """forelem (i ∈ pT.distinct(f)) R ∪= tuple(field / ArrayRead items)."""
+    """forelem (i ∈ pT.distinct(f)) R ∪= tuple(field / ArrayRead items).
+
+    ``filter_pred`` is the presence guard of a Filtered-over-Distinct index
+    set (e.g. ``cnt[f] > 0`` emitted by the SQL frontend so that groups with
+    no surviving rows are omitted — SQL GROUP BY semantics)."""
 
     result: str
     table: str
     field: str
     items: Tuple[Expr, ...]
+    filter_pred: Optional[Expr] = None
 
 
 @dataclass
@@ -289,10 +294,26 @@ class FilterProjectSpec:
 
 
 @dataclass
-class JoinSpec:
-    """forelem (i ∈ pA) forelem (j ∈ pB.key[A[i].fk]) R ∪= tuple(...)"""
+class JoinAgg:
+    """``arr[key] op= value`` over the joined (probe, build) row pairs —
+    GROUP BY over a two-table join.  ``key`` is a FieldRef on either side."""
 
-    result: str
+    array: str
+    key: FieldRef
+    value: Expr
+    op: str
+
+
+@dataclass
+class JoinSpec:
+    """forelem (i ∈ pA) forelem (j ∈ pB.key[A[i].fk]) BODY
+
+    BODY is either a single ResultAppend (materialized equi-join; ``result``
+    and ``items`` are set) or a list of Accumulates (join-then-aggregate;
+    ``aggs`` is set and ``result`` is None).  ``probe_filter`` restricts the
+    probe side (a Filtered outer index set — WHERE over the probe table)."""
+
+    result: Optional[str]
     probe_table: str
     probe_fk: str
     build_table: str
@@ -300,6 +321,8 @@ class JoinSpec:
     items: Tuple[Expr, ...]
     probe_var: str
     build_var: str
+    probe_filter: Optional[Expr] = None
+    aggs: Tuple[JoinAgg, ...] = ()
 
 
 @dataclass
@@ -379,6 +402,12 @@ def extract_spec(program: Program) -> ProgramSpec:
             elif isinstance(st, ResultAppend):
                 if isinstance(ix, Distinct):
                     dreads.append(DistinctReadSpec(st.result, table, ix.field, st.tuple_expr.elements))
+                elif isinstance(ix, Filtered) and isinstance(ix.base, Distinct):
+                    # guarded distinct read: pT.distinct(f) | pred  (the SQL
+                    # frontend's presence guard for filtered / joined GROUP BY)
+                    dreads.append(
+                        DistinctReadSpec(st.result, table, ix.base.field, st.tuple_expr.elements, filt)
+                    )
                 elif match_field is None:
                     reads: Set[str] = set()
                     for el in st.tuple_expr.elements:
@@ -397,21 +426,56 @@ def extract_spec(program: Program) -> ProgramSpec:
                     and iix.value.loopvar == fe.loopvar
                 ):
                     inner_appends = [x for x in st.body if isinstance(x, ResultAppend)]
-                    if len(inner_appends) != 1 or len(st.body) != 1:
-                        raise UnsupportedProgram("join inner body")
-                    ra = inner_appends[0]
-                    joins.append(
-                        JoinSpec(
-                            ra.result,
-                            probe_table=table,
-                            probe_fk=iix.value.field,
-                            build_table=iix.table,
-                            build_key=iix.field,
-                            items=ra.tuple_expr.elements,
-                            probe_var=fe.loopvar,
-                            build_var=st.loopvar,
+                    inner_accs = [x for x in st.body if isinstance(x, Accumulate)]
+                    if len(inner_appends) == 1 and len(st.body) == 1:
+                        ra = inner_appends[0]
+                        joins.append(
+                            JoinSpec(
+                                ra.result,
+                                probe_table=table,
+                                probe_fk=iix.value.field,
+                                build_table=iix.table,
+                                build_key=iix.field,
+                                items=ra.tuple_expr.elements,
+                                probe_var=fe.loopvar,
+                                build_var=st.loopvar,
+                                probe_filter=filt,
+                            )
                         )
-                    )
+                    elif inner_accs and len(inner_accs) == len(st.body):
+                        # join-then-aggregate: GROUP BY over a two-table join
+                        jaggs: List[JoinAgg] = []
+                        for acc in inner_accs:
+                            key = acc.key
+                            on_probe = (
+                                isinstance(key, FieldRef)
+                                and key.loopvar == fe.loopvar
+                                and key.table == table
+                            )
+                            on_build = (
+                                isinstance(key, FieldRef)
+                                and key.loopvar == st.loopvar
+                                and key.table == iix.table
+                            )
+                            if not (on_probe or on_build):
+                                raise UnsupportedProgram(f"join-aggregate key {key!r}")
+                            jaggs.append(JoinAgg(acc.array, key, acc.value, acc.op))
+                        joins.append(
+                            JoinSpec(
+                                None,
+                                probe_table=table,
+                                probe_fk=iix.value.field,
+                                build_table=iix.table,
+                                build_key=iix.field,
+                                items=(),
+                                probe_var=fe.loopvar,
+                                build_var=st.loopvar,
+                                probe_filter=filt,
+                                aggs=tuple(jaggs),
+                            )
+                        )
+                    else:
+                        raise UnsupportedProgram("join inner body")
                 else:
                     raise UnsupportedProgram(f"nested forelem {iix!r}")
             else:
@@ -473,6 +537,13 @@ class CodegenChoices:
                              (semantics of the forall on one device),
                 'shard_map' — SPMD over a real mesh axis (psum combine);
                               the generated-MPI-code analogue.
+    join_method: 'auto'   — unique-lookup when the build key is unique on
+                             the actual data, expansion otherwise,
+                'lookup'  — one searchsorted probe, one match per probe row
+                             (requires a key-unique build side),
+                'expand'  — sort + searchsorted(left/right) + gather
+                             expansion to max key multiplicity (general
+                             duplicate-key equi-join).
     """
 
     agg_method: str = "dense"
@@ -480,6 +551,7 @@ class CodegenChoices:
     mesh: Optional[jax.sharding.Mesh] = None
     axis_name: str = "data"
     donate: bool = False
+    join_method: str = "auto"
 
 
 class JaxLowering:
@@ -490,24 +562,35 @@ class JaxLowering:
         self.db = db
         self.choices = choices or CodegenChoices()
         self.spec = extract_spec(program)
-        # The vectorized join materializes the build side as a sorted lookup
-        # (one match per probe row) — faithful only when the build key is
-        # unique.  Reject duplicates up front instead of silently dropping
-        # matches; the planner's interchange enumeration prunes on this too.
+        # Max build-side key multiplicity per join, from the actual data at
+        # compile time.  It sizes the static gather-expansion (probe_rows ×
+        # M output slots); M == 1 degenerates to the unique-lookup plan and
+        # M == 0 marks an empty build side (all probes miss).
+        self.join_multiplicity: List[int] = []
         for j in self.spec.joins:
-            if j.build_table in db:
+            if j.build_table in db and len(db[j.build_table]):
                 bk = np.asarray(db[j.build_table].field(j.build_key))
-                if len(bk) != len(np.unique(bk)):
-                    raise UnsupportedProgram(
-                        f"join build side {j.build_table}.{j.build_key} has duplicate "
-                        "keys — interchange the nest so the unique side builds"
-                    )
+                _, counts = np.unique(bk, return_counts=True)
+                mult = int(counts.max()) if len(counts) else 0
+            else:
+                mult = 0 if j.build_table in db else 1
+            if self.choices.join_method == "lookup" and mult > 1:
+                raise UnsupportedProgram(
+                    f"join_method='lookup' but build side {j.build_table}.{j.build_key} "
+                    "has duplicate keys — use 'expand' or 'auto'"
+                )
+            self.join_multiplicity.append(mult)
         # key-space sizes for dense accumulators (dictionary-encoded columns)
         self.num_keys: Dict[Tuple[str, str], int] = {}
         for agg in self.spec.aggs:
             self.num_keys[(agg.table, agg.key_field)] = self._key_space(agg.table, agg.key_field)
         for dr in self.spec.distinct_reads:
             self.num_keys[(dr.table, dr.field)] = self._key_space(dr.table, dr.field)
+        for j in self.spec.joins:
+            for ja in j.aggs:
+                self.num_keys[(ja.key.table, ja.key.field)] = self._key_space(
+                    ja.key.table, ja.key.field
+                )
 
     def _key_space(self, table: str, fld: str) -> int:
         col = self.db[table].columns[fld]
@@ -569,7 +652,13 @@ class JaxLowering:
         if method == "sort":
             order = jnp.argsort(keys)
             sk, sv = keys[order], values[order]
-            return jax.ops.segment_sum(sv, sk, num_segments=num_keys, indices_are_sorted=True)
+            if op == "+":
+                return jax.ops.segment_sum(sv, sk, num_segments=num_keys, indices_are_sorted=True)
+            if op == "max":
+                return jax.ops.segment_max(sv, sk, num_segments=num_keys, indices_are_sorted=True)
+            if op == "min":
+                return jax.ops.segment_min(sv, sk, num_segments=num_keys, indices_are_sorted=True)
+            raise UnsupportedProgram(op)
         if method == "kernel":
             from repro.kernels.segreduce import ops as segops
 
@@ -601,7 +690,11 @@ class JaxLowering:
                     member = jnp.isin(cols[agg.table][mf], cols[mt][mfld])
                     mask = member if mask is None else (mask & member)
                 if mask is not None:
-                    values = jnp.where(mask, values, 0)
+                    # masked-out rows must contribute the op's *identity* —
+                    # funneling them into segment 0 with value 0 corrupts
+                    # that segment's max/min whenever its true extremum is
+                    # on the other side of 0
+                    values = jnp.where(mask, values, _op_identity(agg.op, values.dtype))
                     safe_keys = jnp.where(mask, keys, 0)
                 else:
                     safe_keys = keys
@@ -611,6 +704,36 @@ class JaxLowering:
                 if mask is not None:
                     ones = jnp.where(mask, ones, 0)
                 presence[(agg.table, agg.key_field)] = self._parallel_aggregate(safe_keys, ones, nk, "+", mask)
+
+            # --- joins (unique-lookup or duplicate-key expansion) -------------
+            # Before distinct reads: join-aggregates fill `arrays`/`presence`
+            # that the guarded distinct-read result loops consume.
+            for j, mult in zip(spec.joins, self.join_multiplicity):
+                jr = self._join_rows(j, mult, cols)
+                if j.aggs:
+                    for ja in j.aggs:
+                        nk = self.num_keys[(ja.key.table, ja.key.field)]
+                        keys = self._join_gather(ja.key, j, jr, cols)
+                        if isinstance(ja.value, Const):
+                            values = jnp.full(
+                                keys.shape,
+                                ja.value.value,
+                                dtype=jnp.int32 if isinstance(ja.value.value, int) else jnp.float32,
+                            )
+                        else:
+                            values = jnp.broadcast_to(
+                                self._join_gather(ja.value, j, jr, cols), keys.shape
+                            )
+                        values = jnp.where(jr.present, values, _op_identity(ja.op, values.dtype))
+                        safe_keys = jnp.where(jr.present, keys, 0)
+                        arrays[ja.array] = self._aggregate(safe_keys, values, nk, ja.op)
+                        ones = jnp.where(jr.present, 1, 0).astype(jnp.int32)
+                        presence[(ja.key.table, ja.key.field)] = self._aggregate(
+                            safe_keys, ones, nk, "+"
+                        )
+                else:
+                    items = tuple(self._join_gather(el, j, jr, cols) for el in j.items)
+                    out[j.result] = {"columns": items, "present": jr.present}
 
             # --- scalar reductions -------------------------------------------
             for sr in spec.scalar_reduces:
@@ -644,7 +767,11 @@ class JaxLowering:
                 items = []
                 for el in dr.items:
                     items.append(self._vec_distinct(el, dr, key_ids, arrays, cols))
-                out[dr.result] = {"columns": tuple(items), "present": pres > 0}
+                present = pres > 0
+                if dr.filter_pred is not None:
+                    guard = self._vec_distinct(dr.filter_pred, dr, key_ids, arrays, cols)
+                    present = present & guard.astype(bool)
+                out[dr.result] = {"columns": tuple(items), "present": present}
 
             # --- filter/project -------------------------------------------------
             for fp in spec.filter_projects:
@@ -654,10 +781,6 @@ class JaxLowering:
                 if mask is None:
                     mask = jnp.ones((n,), bool)
                 out[fp.result] = {"columns": items, "present": mask}
-
-            # --- joins ----------------------------------------------------------
-            for j in spec.joins:
-                out[j.result] = self._join(j, cols)
 
             return out
 
@@ -691,7 +814,10 @@ class JaxLowering:
         pad = (-len(keys)) % n
         if pad:
             keys = jnp.concatenate([keys, jnp.zeros((pad,), keys.dtype)])
-            values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+            # pad with the op identity, not 0 — a padded 0 lands in segment 0
+            # and corrupts its max/min exactly like an unmasked filtered row
+            fill = jnp.full((pad,), _op_identity(op, values.dtype), values.dtype)
+            values = jnp.concatenate([values, fill])
         keys = keys.reshape(n, -1)
         values = values.reshape(n, -1)
         if c.parallel == "vmap":
@@ -719,32 +845,97 @@ class JaxLowering:
             return res[0]
         raise ValueError(f"bad parallel {c.parallel}")
 
-    def _join(self, j: JoinSpec, cols):
+    # -- equi-join engine --------------------------------------------------------
+    #
+    # The build side is sorted once; probes binary-search it.  With a
+    # key-unique build side one searchsorted gives the single candidate row
+    # ('lookup').  With duplicate keys the [left, right) searchsorted pair
+    # bounds each probe's match run, and the output is expanded to the
+    # static shape (probe_rows × M) where M is the max key multiplicity
+    # measured at compile time ('expand'); absent slots are masked out.
+
+    def _join_rows(self, j: JoinSpec, mult: int, cols) -> "_JoinRows":
         bk = cols[j.build_table][j.build_key]
         pk = cols[j.probe_table][j.probe_fk]
+        n_probe = pk.shape[0]
+        pmask = self._pred_mask(j.probe_filter, cols, j.probe_table)
+        if bk.shape[0] == 0 or mult == 0:
+            # empty build side: every probe misses (never index into the
+            # zero-length build columns — gather would clamp to garbage)
+            return _JoinRows(
+                None, jnp.zeros((n_probe,), jnp.int32), jnp.zeros((n_probe,), bool), True
+            )
         order = jnp.argsort(bk)
         sk = bk[order]
-        pos = jnp.searchsorted(sk, pk)
-        pos = jnp.clip(pos, 0, len(sk) - 1)
-        hit = sk[pos] == pk
-        build_rows = order[pos]
-        items = []
-        for el in j.items:
-            items.append(self._join_item(el, j, build_rows, cols))
-        return {"columns": tuple(items), "present": hit}
+        expand = self.choices.join_method == "expand" or mult > 1
+        if not expand:
+            pos = jnp.clip(jnp.searchsorted(sk, pk), 0, sk.shape[0] - 1)
+            present = sk[pos] == pk
+            if pmask is not None:
+                present = present & pmask
+            return _JoinRows(None, order[pos], present, False)
+        lo = jnp.searchsorted(sk, pk, side="left")
+        hi = jnp.searchsorted(sk, pk, side="right")
+        counts = hi - lo
+        slots = jnp.arange(mult)
+        pos = jnp.clip(lo[:, None] + slots[None, :], 0, sk.shape[0] - 1)  # (n_probe, M)
+        present = slots[None, :] < counts[:, None]
+        if pmask is not None:
+            present = present & pmask[:, None]
+        probe_idx = jnp.broadcast_to(
+            jnp.arange(n_probe, dtype=jnp.int32)[:, None], (n_probe, mult)
+        ).reshape(-1)
+        return _JoinRows(probe_idx, order[pos.reshape(-1)], present.reshape(-1), False)
 
-    def _join_item(self, e: Expr, j: JoinSpec, build_rows, cols):
+    def _join_gather(self, e: Expr, j: JoinSpec, jr: "_JoinRows", cols):
+        """Vectorize an expression over the joined (probe, build) row pairs."""
         if isinstance(e, FieldRef):
             if e.loopvar == j.probe_var:
-                return cols[j.probe_table][e.field]
+                col = cols[j.probe_table][e.field]
+                return col if jr.probe_idx is None else col[jr.probe_idx]
             if e.loopvar == j.build_var:
-                return cols[j.build_table][e.field][build_rows]
+                col = cols[j.build_table][e.field]
+                if jr.empty_build:
+                    col = jnp.zeros((1,), col.dtype)
+                return col[jr.build_rows]
             raise UnsupportedProgram(f"join item var {e.loopvar}")
         if isinstance(e, Const):
             return jnp.asarray(e.value)
+        if isinstance(e, Var):
+            params = cols.get("__params__", {})
+            if e.name in params:
+                return params[e.name]
+            raise UnsupportedProgram(f"free Var {e.name} in join expr")
         if isinstance(e, BinOp):
-            return _jnp_binop(e.op, self._join_item(e.lhs, j, build_rows, cols), self._join_item(e.rhs, j, build_rows, cols))
+            return _jnp_binop(
+                e.op, self._join_gather(e.lhs, j, jr, cols), self._join_gather(e.rhs, j, jr, cols)
+            )
         raise UnsupportedProgram(f"join item {e!r}")
+
+
+@dataclass
+class _JoinRows:
+    """Row pairing produced by the join engine, in static (padded) shape.
+
+    probe_idx is None when output slots align 1:1 with probe rows (lookup
+    path / empty build); otherwise it gathers the probe side into the
+    expanded (probe_rows × M) slot space."""
+
+    probe_idx: Optional[jnp.ndarray]
+    build_rows: jnp.ndarray
+    present: jnp.ndarray
+    empty_build: bool
+
+
+def _op_identity(op: str, dtype) -> Any:
+    """Identity element of an accumulate op for `dtype` — what masked-out /
+    padded rows must contribute so they cannot perturb any segment."""
+    if op == "+":
+        return 0
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        info = jnp.iinfo(dtype)
+        return info.min if op == "max" else info.max
+    return -jnp.inf if op == "max" else jnp.inf
 
 
 def cols_len_shape(cols, table) -> Tuple[int]:
@@ -807,6 +998,13 @@ class Plan:
         sp = self.lowering.spec
         for agg in sp.aggs:
             needed.setdefault(agg.table, set()).add(agg.key_field)
+        for j in sp.joins:
+            needed.setdefault(j.probe_table, set()).add(j.probe_fk)
+            needed.setdefault(j.build_table, set()).add(j.build_key)
+            for ja in j.aggs:
+                needed.setdefault(ja.key.table, set()).add(ja.key.field)
+                for t, f in ja.value.fields_used():
+                    needed.setdefault(t, set()).add(f)
         for t, fields in needed.items():
             if t not in self.db:
                 continue

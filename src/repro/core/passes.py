@@ -33,6 +33,7 @@ class OptimizeOptions:
     expected_runs: int = 10
     agg_method: str = "dense"
     parallel_exec: str = "vmap"        # 'none' | 'vmap' | 'shard_map'
+    join_method: str = "auto"          # 'auto' | 'lookup' | 'expand'
     mesh: Any = None
     trace: bool = False
     # 'none'  — the knobs above are used as-is (the historical behavior);
@@ -93,6 +94,7 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     agg_method = opts.agg_method
     parallel_exec = opts.parallel_exec
     partition_field = opts.partition_field
+    join_method = opts.join_method
     n_parts = opts.n_parts
     outcome = None
     decision = None
@@ -119,6 +121,8 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
         agg_method = chosen.agg_method
         parallel_exec = chosen.parallel
         partition_field = chosen.partition_field
+        if chosen.join_method is not None:
+            join_method = chosen.join_method
         if chosen.parallel == "none":
             n_parts = 1  # partitioning buys nothing without parallel execution
         log("planned", p)
@@ -148,6 +152,7 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
         agg_method=agg_method,
         parallel=parallel_exec if n_parts > 1 else "none",
         mesh=opts.mesh,
+        join_method=join_method,
     )
     plan = Plan(p, db, choices)
     if outcome is not None:

@@ -12,8 +12,8 @@
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.ir import (
     Accumulate,
@@ -102,7 +102,9 @@ class Query:
     tables: List[Tuple[str, Optional[str]]]  # (table, alias)
     where: Optional[Any]
     group_by: Optional[Tuple[Optional[str], str]]  # (tab, col)
-    order_by: List[Tuple[Tuple[Optional[str], str], bool]] = None  # ((tab, col), desc)
+    # each entry is (key, desc) with key either (tab, col) or an
+    # ('agg', name, arg_tree) for ORDER BY COUNT(...)-style keys
+    order_by: Tuple[Tuple[Any, bool], ...] = field(default_factory=tuple)
     limit: Optional[int] = None
 
 
@@ -152,17 +154,17 @@ class Parser:
         if self.accept("kw", "group"):
             self.expect("kw", "by")
             group_by = self.column()
-        order_by: List[Tuple[Tuple[Optional[str], str], bool]] = []
+        order_by: List[Tuple[Any, bool]] = []
         if self.accept("kw", "order"):
             self.expect("kw", "by")
             while True:
-                col = self.column()
+                key = self.order_key()
                 desc = False
                 if self.accept("kw", "desc"):
                     desc = True
                 elif self.accept("kw", "asc"):
                     desc = False
-                order_by.append((col, desc))
+                order_by.append((key, desc))
                 if not self.accept("op", ","):
                     break
         limit = None
@@ -171,7 +173,7 @@ class Parser:
         self.expect("eof")
         for on in self._on_preds:
             where = on if where is None else ("and", where, on)
-        return Query(items, tables, where, group_by, order_by, limit)
+        return Query(items, tables, where, group_by, tuple(order_by), limit)
 
     _on_preds: List[Any]
 
@@ -214,8 +216,26 @@ class Parser:
             return (a, b)
         return (None, a)
 
+    def order_key(self) -> Any:
+        """An ORDER BY key: a column, or an aggregate call matched against
+        the select list (``ORDER BY COUNT(url)`` without an alias)."""
+        k, t = self.peek()
+        if k == "kw" and t in ("count", "sum", "min", "max", "avg"):
+            self.next()
+            self.expect("op", "(")
+            if t == "count" and self.accept("op", "*"):
+                expr: Any = "*"
+            else:
+                expr = self.arith()
+            self.expect("op", ")")
+            return ("agg", t, expr)
+        return self.column()
+
     def atom(self) -> Any:
         k, t = self.peek()
+        if k == "op" and t == "-":  # unary minus: -x ≡ 0 - x
+            self.next()
+            return ("-", ("lit", 0), self.atom())
         if k == "num":
             self.next()
             return ("lit", float(t) if "." in t else int(t))
@@ -346,12 +366,24 @@ def _resolve_order_limit(q: Query, tables) -> Tuple[Tuple[Tuple[int, bool], ...]
     """Map ORDER BY columns to select-item positions (result tuple slots).
 
     A key resolves against, in order: a select-item alias, a bare selected
-    column, or the argument column of a selected aggregate (so
+    column, the argument column of a selected aggregate (so
     ``SELECT url, COUNT(url) AS c ... ORDER BY c`` and ``ORDER BY url``
-    both work)."""
+    both work), or a matching unaliased aggregate call
+    (``ORDER BY COUNT(url)``)."""
     out: List[Tuple[int, bool]] = []
-    for (tab, col), desc in q.order_by or []:
+    for key, desc in q.order_by:
         pos: Optional[int] = None
+        if isinstance(key, tuple) and len(key) == 3 and key[0] == "agg":
+            _, agg, arg = key
+            for i, it in enumerate(q.items):
+                if it.kind == "agg" and it.agg == agg and it.expr == arg:
+                    pos = i
+                    break
+            if pos is None:
+                raise SQLError(f"ORDER BY {agg.upper()}(...) is not in the select list")
+            out.append((pos, desc))
+            continue
+        tab, col = key
         for i, it in enumerate(q.items):
             if tab is None and it.alias == col:
                 pos = i
@@ -367,6 +399,79 @@ def _resolve_order_limit(q: Query, tables) -> Tuple[Tuple[Tuple[int, bool], ...]
             raise SQLError(f"ORDER BY column {col!r} is not in the select list")
         out.append((pos, desc))
     return tuple(out), q.limit
+
+
+def _pred_tables(node: Any, tables) -> Set[str]:
+    """Physical tables referenced by a SQL predicate/expression tree."""
+    out: Set[str] = set()
+
+    def go(n: Any) -> None:
+        if not isinstance(n, tuple):
+            return
+        if n[0] == "col":
+            out.add(_resolve(n[1], n[2], tables))
+        elif n[0] not in ("lit", "param"):
+            for ch in n[1:]:
+                go(ch)
+
+    go(node)
+    return out
+
+
+def _groupby_parts(
+    q: Query, lv: Dict[str, str], tables, gtab: str, gcol: str, readvar: str
+) -> Tuple[List[Accumulate], List[Expr], Optional[str]]:
+    """Accumulates for the scan/join loop + result-tuple reads for the
+    distinct loop of a GROUP BY query.  Returns (accs, reads, count_array)
+    where count_array names an accumulator that counts rows per group (for
+    the presence guard), if the select list happens to produce one."""
+    key = FieldRef(gtab, lv[gtab], gcol)
+    rkey = FieldRef(gtab, readvar, gcol)
+    accs: List[Accumulate] = []
+    reads: List[Expr] = []
+    count_arr: Optional[str] = None
+    arr_i = 0
+    for it in q.items:
+        if it.kind == "col":
+            e = _to_expr(it.expr, lv, tables)
+            if not (isinstance(e, FieldRef) and e.table == gtab and e.field == gcol):
+                raise SQLError("non-grouped bare column in GROUP BY select")
+            reads.append(rkey)
+        else:
+            arr = f"agg{arr_i}"
+            arr_i += 1
+            if it.agg == "count":
+                accs.append(Accumulate(arr, key, Const(1)))
+                reads.append(ArrayRead(arr, rkey))
+                count_arr = count_arr or arr
+            elif it.agg in ("sum", "min", "max"):
+                val = _to_expr(it.expr, lv, tables)
+                op = {"sum": "+", "min": "min", "max": "max"}[it.agg]
+                accs.append(Accumulate(arr, key, val, op))
+                reads.append(ArrayRead(arr, rkey))
+            elif it.agg == "avg":
+                sarr, carr = f"agg{arr_i}s", f"agg{arr_i}c"
+                accs.append(Accumulate(sarr, key, _to_expr(it.expr, lv, tables)))
+                accs.append(Accumulate(carr, key, Const(1)))
+                reads.append(BinOp("/", ArrayRead(sarr, rkey), ArrayRead(carr, rkey)))
+                count_arr = count_arr or carr
+            else:
+                raise SQLError(f"agg {it.agg}")
+    return accs, reads, count_arr
+
+
+def _guarded_distinct(
+    gtab: str, gcol: str, accs: List[Accumulate], count_arr: Optional[str], key: FieldRef
+) -> Filtered:
+    """Distinct index set over the group column, guarded so that groups
+    with no contributing rows are omitted (SQL GROUP BY semantics under
+    WHERE filters and joins).  Adds a hidden count accumulator when the
+    select list does not already provide one."""
+    if count_arr is None:
+        count_arr = "__cnt"
+        accs.append(Accumulate(count_arr, key, Const(1)))
+    guard = BinOp(">", ArrayRead(count_arr, FieldRef(gtab, "_", gcol)), Const(0))
+    return Filtered(gtab, guard, base=Distinct(gtab, gcol))
 
 
 def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[str] = None) -> Program:
@@ -391,42 +496,18 @@ def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[s
         if q.group_by is not None:
             gtab = _resolve(q.group_by[0], q.group_by[1], tables)
             gcol = q.group_by[1]
-            body: List[Any] = []
-            reads: List[Expr] = []
-            arr_i = 0
-            accs: List[Accumulate] = []
-            for it in q.items:
-                if it.kind == "col":
-                    e = _to_expr(it.expr, lv, tables)
-                    if not (isinstance(e, FieldRef) and e.field == gcol):
-                        raise SQLError("non-grouped bare column in GROUP BY select")
-                    reads.append(FieldRef(gtab, "i", gcol))
-                else:
-                    arr = f"agg{arr_i}"
-                    arr_i += 1
-                    if it.agg == "count":
-                        val: Expr = Const(1)
-                        accs.append(Accumulate(arr, FieldRef(gtab, "i", gcol), val))
-                        reads.append(ArrayRead(arr, FieldRef(gtab, "i", gcol)))
-                    elif it.agg in ("sum", "min", "max"):
-                        val = _to_expr(it.expr, lv, tables)
-                        op = {"sum": "+", "min": "min", "max": "max"}[it.agg]
-                        accs.append(Accumulate(arr, FieldRef(gtab, "i", gcol), val, op))
-                        reads.append(ArrayRead(arr, FieldRef(gtab, "i", gcol)))
-                    elif it.agg == "avg":
-                        sarr, carr = f"agg{arr_i}s", f"agg{arr_i}c"
-                        accs.append(Accumulate(sarr, FieldRef(gtab, "i", gcol), _to_expr(it.expr, lv, tables)))
-                        accs.append(Accumulate(carr, FieldRef(gtab, "i", gcol), Const(1)))
-                        reads.append(
-                            BinOp("/", ArrayRead(sarr, FieldRef(gtab, "i", gcol)), ArrayRead(carr, FieldRef(gtab, "i", gcol)))
-                        )
-                    else:
-                        raise SQLError(f"agg {it.agg}")
+            accs, reads, count_arr = _groupby_parts(q, lv, tables, gtab, gcol, "i")
             ix = FullSet(t) if pred is None else Filtered(t, pred)
-            body.append(Forelem("i", ix, tuple(accs)))
-            body.append(
-                Forelem("i", Distinct(t, gcol), (ResultAppend("R", TupleExpr(tuple(reads))),))
-            )
+            if pred is None:
+                # an unfiltered scan touches every distinct key at least once
+                dix: Any = Distinct(t, gcol)
+            else:
+                # WHERE may empty a group entirely — guard the distinct read
+                dix = _guarded_distinct(gtab, gcol, accs, count_arr, FieldRef(gtab, "i", gcol))
+            body: List[Any] = [
+                Forelem("i", ix, tuple(accs)),
+                Forelem("i", dix, (ResultAppend("R", TupleExpr(tuple(reads))),)),
+            ]
             return Program(decls, tuple(body), ("R",), tuple(params), name or "sql_groupby",
                            order_by=order_by, limit=limit)
 
@@ -463,24 +544,50 @@ def sql_to_forelem(sql: str, schemas: Dict[str, Sequence[str]], name: Optional[s
         if len(joins) != 1:
             raise SQLError("exactly one equi-join condition supported")
         ta, ca, tb, cb = joins[0]
-        lv = {ta: "i", tb: "j"}
+        probe_pred: Optional[Expr] = None
         if residual is not None:
-            raise SQLError("residual join predicates unsupported")
+            rtabs = _pred_tables(residual, tables)
+            if rtabs <= {tb}:
+                # the equi-join was written with the filtered table on the
+                # right — orient the nest so it drives the probe side
+                ta, ca, tb, cb = tb, cb, ta, ca
+            elif not rtabs <= {ta}:
+                raise SQLError(
+                    "residual join predicates may only reference one of the "
+                    f"joined tables, got {sorted(rtabs)}"
+                )
+            probe_pred = _to_pred(residual, {ta: "_"}, tables)
+        lv = {ta: "i", tb: "j"}
+        outer_ix = FullSet(ta) if probe_pred is None else Filtered(ta, probe_pred)
+        inner_match = FieldMatch(tb, cb, FieldRef(ta, "i", ca))
+
+        # GROUP BY over the join: aggregate over the joined row pairs, then
+        # read out one tuple per present group (paper §IV star-schema shape).
+        if q.group_by is not None:
+            gtab = _resolve(q.group_by[0], q.group_by[1], tables)
+            gcol = q.group_by[1]
+            accs, reads, count_arr = _groupby_parts(q, lv, tables, gtab, gcol, "g")
+            # a join can leave any group unmatched — always guard
+            dix = _guarded_distinct(gtab, gcol, accs, count_arr, FieldRef(gtab, lv[gtab], gcol))
+            body4: Tuple[Any, ...] = (
+                Forelem("i", outer_ix, (Forelem("j", inner_match, tuple(accs)),)),
+                Forelem("g", dix, (ResultAppend("R", TupleExpr(tuple(reads))),)),
+            )
+            return Program(decls, body4, ("R",), tuple(params), name or "sql_join_groupby",
+                           order_by=order_by, limit=limit)
+
+        if any(it.kind == "agg" for it in q.items):
+            raise SQLError("aggregates over a join require GROUP BY")
+
         items = tuple(_to_expr(it.expr, lv, tables) for it in q.items)
-        body4 = (
+        body5 = (
             Forelem(
                 "i",
-                FullSet(ta),
-                (
-                    Forelem(
-                        "j",
-                        FieldMatch(tb, cb, FieldRef(ta, "i", ca)),
-                        (ResultAppend("R", TupleExpr(items)),),
-                    ),
-                ),
+                outer_ix,
+                (Forelem("j", inner_match, (ResultAppend("R", TupleExpr(items)),)),),
             ),
         )
-        return Program(decls, body4, ("R",), tuple(params), name or "sql_join",
+        return Program(decls, body5, ("R",), tuple(params), name or "sql_join",
                        order_by=order_by, limit=limit)
 
     raise SQLError(">2 tables unsupported")

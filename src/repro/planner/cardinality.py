@@ -131,6 +131,14 @@ class CardinalityEstimator:
     def groupby_output(self, table: str, fld: str) -> float:
         return float(self.stats.n_distinct(table, fld))
 
+    # -- joins ----------------------------------------------------------------
+    def join_expansion_factor(self, build_table: str, build_key: str) -> float:
+        """Fan-out bound of the duplicate-key expansion lowering: the max
+        rows sharing one build-key value (1.0 for a unique key).  The
+        lowering's static output shape is probe_rows × this, which is what
+        every per-slot cost term scales with."""
+        return float(self.stats.max_multiplicity(build_table, build_key))
+
     # -- whole-program propagation -------------------------------------------
     def loop_estimates(self, program: Program) -> List[LoopEstimate]:
         out: List[LoopEstimate] = []

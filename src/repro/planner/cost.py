@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.lower import ProgramSpec
+from repro.core.lower import JoinSpec, ProgramSpec
 
 from .cardinality import CardinalityEstimator
 from .stats import DbStats
@@ -103,6 +103,40 @@ class CostModel:
             return base_cost / speedup + combine + c.c_shard_fixed
         raise ValueError(f"bad parallel {parallel}")
 
+    # -- joins ---------------------------------------------------------------
+    def resolve_join_method(self, j: JoinSpec, requested: str) -> str:
+        """'auto' → unique-lookup only when the build key is *provably*
+        unique (full-scan stats); sampled/unknown stats fall back to the
+        always-correct expansion lowering."""
+        if requested in ("lookup", "expand"):
+            return requested
+        fs = self.stats.field(j.build_table, j.build_key)
+        return "lookup" if (fs is not None and fs.is_unique is True) else "expand"
+
+    def join_cost(self, j: JoinSpec, method: str, agg_method: str) -> float:
+        """Cost of one equi-join under a lowering method, including the
+        aggregation over the joined pairs for join-then-aggregate specs."""
+        c = self.coeffs
+        probe = float(self.stats.n_rows(j.probe_table))
+        build = float(self.stats.n_rows(j.build_table))
+        sort_cost = build * c.c_sort * max(1.0, math.log2(max(2.0, build)))
+        if method == "lookup":
+            slots = probe
+            probe_cost = probe * c.c_join_probe
+        else:
+            # two binary searches + gather-expansion to probe × max-multiplicity
+            m = self.est.join_expansion_factor(j.build_table, j.build_key)
+            slots = probe * m
+            probe_cost = probe * 2.0 * c.c_join_probe + slots * c.c_scan
+        cost = sort_cost + probe_cost
+        if j.aggs:
+            for ja in j.aggs:
+                nk = float(self.stats.key_space(ja.key.table, ja.key.field))
+                cost += self.agg_cost(slots, nk, agg_method, ja.op) + slots * c.c_scan
+        else:
+            cost += slots * c.c_output * max(1, len(j.items))
+        return cost
+
     # -- whole-spec cost -----------------------------------------------------
     def spec_cost(
         self,
@@ -111,6 +145,7 @@ class CostModel:
         parallel: str,
         n_parts: int,
         partition_field: Optional[Tuple[str, str]] = None,
+        join_method: str = "auto",
     ) -> Tuple[float, List[Tuple[str, float]]]:
         """Total estimated cost + per-operator breakdown."""
         c = self.coeffs
@@ -143,18 +178,12 @@ class CostModel:
             )
 
         for j in spec.joins:
-            probe = float(self.stats.n_rows(j.probe_table))
-            build = float(self.stats.n_rows(j.build_table))
-            out_rows = probe * build / max(
-                self.stats.n_distinct(j.probe_table, j.probe_fk),
-                self.stats.n_distinct(j.build_table, j.build_key),
+            method = self.resolve_join_method(j, join_method)
+            cost = self.join_cost(j, method, agg_method)
+            kind = "join⋈agg" if j.aggs else "join"
+            breakdown.append(
+                (f"{kind} {j.probe_table}⋈{j.build_table} ({method})", cost)
             )
-            cost = (
-                build * c.c_sort * max(1.0, math.log2(max(2.0, build)))  # sort build side
-                + probe * c.c_join_probe
-                + out_rows * c.c_output * max(1, len(j.items))
-            )
-            breakdown.append((f"join {j.probe_table}⋈{j.build_table}", cost))
 
         return sum(x for _, x in breakdown), breakdown
 

@@ -29,6 +29,7 @@ class Candidate:
     partition_field: Optional[Tuple[str, str]]
     cost: float
     breakdown: Tuple[Tuple[str, float], ...] = ()
+    join_method: Optional[str] = None  # 'lookup' | 'expand'; None = no joins
 
 
 @dataclass
@@ -59,15 +60,20 @@ def _partition_candidates(spec: ProgramSpec, stats: DbStats) -> List[Optional[Tu
     return seen
 
 
-def _joins_lowerable(spec: ProgramSpec, stats: DbStats) -> bool:
-    """The vectorized join needs a key-unique build side (lower.py); prune
-    loop orders that cannot execute faithfully.  ``is_unique is None``
-    (sampled stats) is treated as non-unique — conservative."""
-    for j in spec.joins:
-        fs = stats.field(j.build_table, j.build_key)
-        if fs is None or fs.is_unique is not True:
-            return False
-    return True
+def _join_methods(spec: ProgramSpec, stats: DbStats) -> Sequence[Optional[str]]:
+    """Join lowerings worth pricing for this loop order.  Expansion is
+    always faithful; the cheaper unique-lookup is only a candidate when
+    every build key is *provably* unique (full-scan stats — ``is_unique is
+    None`` from sampling is treated as non-unique, conservative)."""
+    if not spec.joins:
+        return (None,)
+    methods: List[Optional[str]] = ["expand"]
+    if all(
+        (fs := stats.field(j.build_table, j.build_key)) is not None and fs.is_unique is True
+        for j in spec.joins
+    ):
+        methods.insert(0, "lookup")
+    return tuple(methods)
 
 
 def enumerate_candidates(
@@ -95,12 +101,7 @@ def enumerate_candidates(
         except UnsupportedProgram as e:
             last_err = e
             continue
-        if not _joins_lowerable(spec, stats):
-            last_err = UnsupportedProgram(
-                f"{order_name}: join build side is not key-unique"
-            )
-            continue
-        has_aggs = bool(spec.aggs)
+        has_aggs = bool(spec.aggs) or any(j.aggs for j in spec.joins)
         methods: Sequence[str] = AGG_METHODS if has_aggs else ("dense",)
         parallels: List[str] = ["none"]
         if n_parts > 1:
@@ -108,13 +109,19 @@ def enumerate_candidates(
             if allow_shard_map:
                 parallels.append("shard_map")
         for method in methods:
-            for parallel in parallels:
-                pfields = _partition_candidates(spec, stats) if parallel != "none" else [None]
-                for pf in pfields:
-                    cost, breakdown = model.spec_cost(spec, method, parallel, n_parts, pf)
-                    out.append(
-                        Candidate(order_name, prog, method, parallel, pf, cost, tuple(breakdown))
-                    )
+            for jm in _join_methods(spec, stats):
+                for parallel in parallels:
+                    pfields = _partition_candidates(spec, stats) if parallel != "none" else [None]
+                    for pf in pfields:
+                        cost, breakdown = model.spec_cost(
+                            spec, method, parallel, n_parts, pf, join_method=jm or "auto"
+                        )
+                        out.append(
+                            Candidate(
+                                order_name, prog, method, parallel, pf, cost,
+                                tuple(breakdown), join_method=jm,
+                            )
+                        )
     if not out:
         raise last_err or UnsupportedProgram("no enumerable plan")
     out.sort(key=lambda c: c.cost)

@@ -37,9 +37,10 @@ def render_explain(
 
     c = decision.chosen
     pf = f"{c.partition_field[0]}.{c.partition_field[1]}" if c.partition_field else "-"
+    jm = f" join_method={c.join_method}" if c.join_method else ""
     lines.append(
         f"  chosen: order={c.order} agg_method={c.agg_method} parallel={c.parallel} "
-        f"partition_field={pf} est_cost≈{_fmt(c.cost)}"
+        f"partition_field={pf}{jm} est_cost≈{_fmt(c.cost)}"
     )
     for op, cost in c.breakdown:
         lines.append(f"    {op:<56s} cost≈{_fmt(cost)}")
@@ -51,9 +52,10 @@ def render_explain(
         lines.append(f"  rejected alternatives ({len(alts)} of {decision.n_enumerated} enumerated):")
         for a in alts[:max_alternatives]:
             apf = f"{a.partition_field[0]}.{a.partition_field[1]}" if a.partition_field else "-"
+            ajm = f" join_method={a.join_method}" if a.join_method else ""
             lines.append(
                 f"    order={a.order} agg_method={a.agg_method} parallel={a.parallel} "
-                f"partition_field={apf} est_cost≈{_fmt(a.cost)}"
+                f"partition_field={apf}{ajm} est_cost≈{_fmt(a.cost)}"
             )
         if len(alts) > max_alternatives:
             lines.append(f"    ... {len(alts) - max_alternatives} more")

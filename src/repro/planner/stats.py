@@ -39,9 +39,14 @@ class FieldStats:
     # partition-field choice (1/n_distinct for perfectly uniform data)
     most_common_frac: float = 0.0
     # Exact key-uniqueness (True/False) when the full column was scanned;
-    # None when the column was sampled.  The vectorized join lowering
-    # requires a unique build-side key, so the planner prunes on this.
+    # None when the column was sampled.  The unique-lookup join lowering is
+    # only valid when this is provably True; otherwise the planner costs
+    # the duplicate-key expansion lowering.
     is_unique: Optional[bool] = None
+    # Largest number of rows sharing one value (exact on a full scan,
+    # scaled estimate when sampled).  The expansion join's static output is
+    # probe_rows × this — the key-multiplicity fan-out bound.
+    max_multiplicity: int = 1
 
     def range_fraction(self, lo: float, hi: float) -> float:
         """Estimated fraction of rows with value in [lo, hi] (clipped)."""
@@ -94,6 +99,14 @@ class DbStats:
             return max(1, self.n_rows(table))
         return max(1, fs.n_distinct)
 
+    def max_multiplicity(self, table: str, name: str) -> int:
+        """Largest per-value row count of a column (≥ 1) — bounds the
+        expanded output of a duplicate-key join built on it."""
+        fs = self.field(table, name)
+        if fs is None:
+            return max(1, self.n_rows(table))
+        return max(1, fs.max_multiplicity)
+
     def key_space(self, table: str, name: str) -> int:
         """Size of the dense accumulator the lowering will allocate for this
         key column: ``max_value + 1`` for integer columns (lower.py
@@ -106,6 +119,21 @@ class DbStats:
         if fs.is_numeric and fs.vmax is not None and fs.vmax >= 0:
             return int(fs.vmax) + 1
         return max(1, fs.n_distinct)
+
+
+def _estimate_max_multiplicity(counts: np.ndarray, scale: float, unique: Optional[bool]) -> int:
+    """Scaled estimate of the largest per-value row count.  A singleton max
+    in a strided sample must NOT be inflated by the stride — that would
+    report multiplicity ≈ stride for unique keys and skew join costing —
+    and proven uniqueness pins it to 1."""
+    if len(counts) == 0:
+        return 0
+    if unique is True:
+        return 1
+    cmax = int(counts.max())
+    if cmax <= 1:
+        return 1
+    return int(round(cmax * scale))
 
 
 def _field_stats(name: str, ms: Multiset, n_buckets: int, max_rows: int) -> FieldStats:
@@ -123,13 +151,15 @@ def _field_stats(name: str, ms: Multiset, n_buckets: int, max_rows: int) -> Fiel
 
     if sample.dtype == object:
         uniq, counts = np.unique(sample.astype(str), return_counts=True)
+        unique = (len(uniq) == n) if full_scan else None
         return FieldStats(
             name=name,
             n_rows=n,
             n_distinct=int(round(len(uniq))),
             is_numeric=False,
             most_common_frac=float(counts.max() / max(1, len(sample))) if len(counts) else 0.0,
-            is_unique=(len(uniq) == n) if full_scan else None,
+            is_unique=unique,
+            max_multiplicity=_estimate_max_multiplicity(counts, scale, unique),
         )
 
     uniq, counts = np.unique(sample, return_counts=True)
@@ -160,6 +190,7 @@ def _field_stats(name: str, ms: Multiset, n_buckets: int, max_rows: int) -> Fiel
         hist_edges=hist_edges,
         most_common_frac=float(counts.max() / max(1, len(sample))) if len(counts) else 0.0,
         is_unique=unique,
+        max_multiplicity=_estimate_max_multiplicity(counts, scale, unique),
     )
 
 

@@ -135,18 +135,21 @@ def test_join_orders_jax_lowering_1to1(rng):
         assert sorted(Plan(variant, d).run()["R"]) == ref
 
 
-def test_join_duplicate_build_keys_rejected(rng):
-    # the vectorized join would silently drop duplicate matches — it must
-    # refuse instead (the planner prunes these orientations via stats)
-    from repro.core.lower import UnsupportedProgram
-
+def test_join_duplicate_build_keys_expand(rng):
+    # both sides duplicated (many-to-many): the expansion lowering must
+    # produce every match pair, exactly like the reference interpreter
     A = Multiset.from_columns("A", b_id=rng.integers(0, 5, 50).astype(np.int32))
     B = Multiset.from_columns("B", id=rng.integers(0, 5, 50).astype(np.int32))
     d = Database().add(A).add(B)
     p = sql_to_forelem("SELECT a.b_id, b.id FROM A a, B b WHERE a.b_id = b.id",
                        {"A": ["b_id"], "B": ["id"]})
+    got = sorted(Plan(p, d).run()["R"])
+    assert got == sorted(ReferenceInterpreter(d).run(p)["R"])
+    # forcing the unique-lookup lowering onto duplicate keys must refuse
+    from repro.core.lower import UnsupportedProgram
+
     with pytest.raises(UnsupportedProgram):
-        Plan(p, d)
+        Plan(p, d, CodegenChoices(join_method="lookup"))
 
 
 def test_planner_enumerates_join_orders(rng):
@@ -161,9 +164,11 @@ def test_planner_enumerates_join_orders(rng):
     assert "as-written" in orders and any(o.startswith("interchanged") for o in orders)
 
 
-def test_planner_prunes_nonunique_build_side(rng):
-    # fk side duplicated: only the as-written orientation (unique build) is
-    # enumerable; the interchanged one must be pruned, and the plan runs
+def test_planner_join_method_per_orientation(rng):
+    # fk side duplicated: the as-written orientation (unique build) may use
+    # the cheap lookup; the interchanged orientation (duplicate build keys)
+    # must only be offered with the expansion lowering — and every
+    # enumerated candidate must execute to the reference answer
     A = Multiset.from_columns("A", b_id=rng.integers(0, 30, 500).astype(np.int32),
                               f=rng.integers(0, 9, 500).astype(np.int32))
     B = Multiset.from_columns("B", id=np.arange(30).astype(np.int32),
@@ -172,9 +177,16 @@ def test_planner_prunes_nonunique_build_side(rng):
     p = sql_to_forelem("SELECT a.f, b.g FROM A a, B b WHERE a.b_id = b.id",
                        {"A": ["b_id", "f"], "B": ["id", "g"]})
     decision = plan_query(p, collect_stats(d))
-    assert {c.order for c in decision.candidates} == {"as-written"}
-    got = sorted(Plan(decision.chosen.program, d).run()["R"])
-    assert got == sorted(ReferenceInterpreter(d).run(p)["R"])
+    pairs = {(c.order, c.join_method) for c in decision.candidates}
+    assert ("as-written", "lookup") in pairs
+    assert ("interchanged[0]", "expand") in pairs
+    assert ("interchanged[0]", "lookup") not in pairs
+    # the unique-build lookup orientation is the cheap one
+    assert decision.chosen.join_method == "lookup"
+    ref = sorted(ReferenceInterpreter(d).run(p)["R"])
+    for c in decision.candidates:
+        got = sorted(Plan(c.program, d, CodegenChoices(join_method=c.join_method)).run()["R"])
+        assert got == ref
 
 
 # ---------------------------------------------------------------------------
