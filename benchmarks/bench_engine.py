@@ -1,0 +1,119 @@
+# Engine smoke benchmark: what does the Session front door cost per query?
+#
+#   cold_optimize   — full pipeline per call (stats, enumeration, lowering,
+#                     jit compile) with a fresh plan cache: the seed-era
+#                     hand-wired `sql_to_forelem → optimize → plan.run` path,
+#   warm_session    — repeated submission of the same query text to one
+#                     Session: frontend memo + warm-dispatch memo + plan
+#                     cache, so the call is fingerprinting + plan.run,
+#   raw_plan_run    — the compiled plan alone (the floor).
+#
+# The difference warm_session − raw_plan_run is the engine's dispatch
+# overhead; BENCH_engine.json reports it per query alongside the speedup
+# of the warm path over cold optimization.
+#
+# Run:  PYTHONPATH=src python benchmarks/bench_engine.py
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro import MapReduceSpec, OptimizeOptions, Session, optimize, sql_to_forelem
+from repro.planner import PlanCache
+
+N_ROWS = 200_000
+WARM_REPEATS = 20
+
+
+def _make_columns(n: int = N_ROWS, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {
+        "url": (rng.zipf(1.3, n) % 3000).astype(np.int32),
+        "status": rng.choice([200, 200, 200, 304, 404, 500], n).astype(np.int32),
+        "latency": rng.gamma(2.0, 30.0, n).astype(np.float32),
+    }
+
+
+QUERIES = [
+    "SELECT url, COUNT(url) FROM logs GROUP BY url",
+    "SELECT status, SUM(latency) FROM logs GROUP BY status",
+    "SELECT url, COUNT(url) AS c FROM logs GROUP BY url ORDER BY c DESC LIMIT 10",
+]
+
+
+def _best(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> List[Tuple[str, float, str]]:
+    cols = _make_columns()
+    rows: List[Tuple[str, float, str]] = []
+    report = {"n_rows": N_ROWS, "queries": [], "mapreduce": None, "cache": None}
+
+    session = Session(n_parts=8)
+    session.register("logs", **cols)
+
+    for qi, q in enumerate(QUERIES):
+        # cold path: full optimize per call, fresh cache (no reuse at all)
+        schemas = session.schemas()
+        prog = sql_to_forelem(q, schemas, name=f"q{qi}")
+
+        def cold():
+            res = optimize(prog, session.db, OptimizeOptions(
+                n_parts=8, planner="cost", plan_cache=PlanCache()))
+            res.plan.run()
+
+        t_cold = _best(cold, 2)
+
+        # warm path: same text repeatedly through one session
+        first = session.sql(q)  # populate frontend/dispatch/plan caches + compile
+        t_warm = _best(lambda: session.sql(q), WARM_REPEATS)
+
+        # floor: the compiled plan alone (public on the QueryResult)
+        t_raw = _best(lambda: first.plan.run(), WARM_REPEATS)
+
+        dispatch_overhead = max(0.0, t_warm - t_raw)
+        speedup = t_cold / max(t_warm, 1e-9)
+        rows.append((f"engine_q{qi}_cold_optimize", t_cold * 1e6, "1.0x"))
+        rows.append((f"engine_q{qi}_warm_session", t_warm * 1e6, f"{speedup:.1f}x"))
+        rows.append((f"engine_q{qi}_dispatch_overhead", dispatch_overhead * 1e6, "us"))
+        report["queries"].append({
+            "sql": q,
+            "cold_optimize_us": t_cold * 1e6,
+            "warm_session_us": t_warm * 1e6,
+            "raw_plan_run_us": t_raw * 1e6,
+            "dispatch_overhead_us": dispatch_overhead * 1e6,
+            "warm_vs_cold_speedup": speedup,
+            "first_submission_cache_hit": bool(first.cache_hit),
+        })
+
+    # MapReduce through the engine: must hit the plan cache created by the
+    # equivalent SQL query (QUERIES[0])
+    mr = session.mapreduce(MapReduceSpec.count("logs", "url"))
+    t_mr_warm = _best(lambda: session.mapreduce(MapReduceSpec.count("logs", "url")), WARM_REPEATS)
+    report["mapreduce"] = {
+        "spec": "MapReduceSpec.count('logs','url')",
+        "plan_cache_hit_on_first_submission": bool(mr.cache_hit),
+        "warm_session_us": t_mr_warm * 1e6,
+    }
+    rows.append(("engine_mr_warm_session", t_mr_warm * 1e6,
+                 f"first_submit_cache_hit={mr.cache_hit}"))
+
+    report["cache"] = session.cache_stats()
+    with open("BENCH_engine.json", "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("engine_plan_cache_entries", float(len(session.plan_cache)), "BENCH_engine.json"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -9,7 +9,15 @@ import traceback
 
 def main() -> None:
     rows = []
-    from . import bench_fig2, bench_join, bench_kernels, bench_pipeline, bench_planner, bench_sched
+    from . import (
+        bench_engine,
+        bench_fig2,
+        bench_join,
+        bench_kernels,
+        bench_pipeline,
+        bench_planner,
+        bench_sched,
+    )
 
     suites = [
         ("fig2", bench_fig2.run),
@@ -18,6 +26,7 @@ def main() -> None:
         ("pipeline", bench_pipeline.run),
         ("planner", bench_planner.run),
         ("join", bench_join.run),
+        ("engine", bench_engine.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

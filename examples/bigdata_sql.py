@@ -1,9 +1,10 @@
 # End-to-end Big-Data analytics driver (the paper's application class):
-# a multi-query session over synthetic web logs, run through the single
-# intermediate with the cost-based planner choosing execution strategies
-# per query (EXPLAIN shows estimates vs. choices), distribution
-# optimization across queries (§III-A4), automatic reformatting (§III-C1),
-# and fault-tolerant chunked execution (§III-A3) over the row space.
+# a multi-query session over synthetic web logs through the unified query
+# engine — one Session, both frontends (SQL *and* MapReduce), the
+# cost-based planner choosing execution strategies per query (EXPLAIN
+# shows estimates vs. choices), a shared plan cache, automatic reformatting
+# (§III-C1), distribution optimization across queries (§III-A4) and
+# fault-tolerant chunked execution (§III-A3) over the row space.
 #
 # Run:  PYTHONPATH=src python examples/bigdata_sql.py [--rows 2000000]
 #       [--planner cost|none] [--explain]
@@ -12,12 +13,7 @@ import time
 
 import numpy as np
 
-from repro.core import OptimizeOptions, optimize
-from repro.core.distribution import optimize_distribution, partition_conflicts
-from repro.core.ir import Program
-from repro.data.multiset import Database, Multiset, PlainColumn
-from repro.frontends.sql import sql_to_forelem
-from repro.planner import PlanCache
+from repro import MapReduceSpec, Session
 from repro.sched.fault_tolerant import HybridFaultTolerantScheduler, verify_coverage
 
 
@@ -30,38 +26,30 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     n = args.rows
-    urls = np.array([f"http://s{u % 97}.com/p{u}" for u in rng.zipf(1.3, n) % 3000], dtype=object)
-    status = rng.choice([200, 200, 200, 304, 404, 500], n).astype(np.int32)
-    latency = rng.gamma(2.0, 30.0, n).astype(np.float32)
-    bytes_ = rng.integers(100, 1 << 20, n).astype(np.int32)
     n_servers = 200
-    server_id = rng.integers(0, n_servers, n).astype(np.int32)
-    db = Database().add(
-        Multiset("logs", {
-            "url": PlainColumn(urls), "status": PlainColumn(status),
-            "latency": PlainColumn(latency), "bytes": PlainColumn(bytes_),
-            "server_id": PlainColumn(server_id),
-        })
-    ).add(
-        # dimension table: unique server ids (the planner picks the cheap
-        # unique-lookup join lowering for this side)
-        Multiset("servers", {
-            "id": PlainColumn(np.arange(n_servers, dtype=np.int32)),
-            "region": PlainColumn(rng.integers(0, 16, n_servers).astype(np.int32)),
-        })
-    ).add(
-        # each server has two mirror rows — duplicate build keys force the
-        # expansion join lowering
-        Multiset("mirrors", {
-            "id": PlainColumn(np.repeat(np.arange(n_servers, dtype=np.int32), 2)),
-            "host": PlainColumn(rng.integers(0, 1000, 2 * n_servers).astype(np.int32)),
-        })
+    s = Session(n_parts=8, planner=args.planner, expected_runs=12)
+    s.register(
+        "logs",
+        url=np.array([f"http://s{u % 97}.com/p{u}" for u in rng.zipf(1.3, n) % 3000], dtype=object),
+        status=rng.choice([200, 200, 200, 304, 404, 500], n).astype(np.int32),
+        latency=rng.gamma(2.0, 30.0, n).astype(np.float32),
+        bytes=rng.integers(100, 1 << 20, n).astype(np.int32),
+        server_id=rng.integers(0, n_servers, n).astype(np.int32),
     )
-    schemas = {
-        "logs": ["url", "status", "latency", "bytes", "server_id"],
-        "servers": ["id", "region"],
-        "mirrors": ["id", "host"],
-    }
+    # dimension table: unique server ids (the planner picks the cheap
+    # unique-lookup join lowering for this side)
+    s.register(
+        "servers",
+        id=np.arange(n_servers, dtype=np.int32),
+        region=rng.integers(0, 16, n_servers).astype(np.int32),
+    )
+    # each server has two mirror rows — duplicate build keys force the
+    # expansion join lowering
+    s.register(
+        "mirrors",
+        id=np.repeat(np.arange(n_servers, dtype=np.int32), 2),
+        host=rng.integers(0, 1000, 2 * n_servers).astype(np.int32),
+    )
 
     queries = [
         # star-schema aggregate: GROUP BY over a two-table join — the
@@ -78,65 +66,66 @@ def main() -> None:
         "SELECT SUM(bytes) FROM logs WHERE status = 200",
         # top-k (ORDER BY/LIMIT) — the planner-relevant serving shape
         "SELECT url, COUNT(url) AS c FROM logs GROUP BY url ORDER BY c DESC LIMIT 5",
+        # repeat the url-count query: identical (program, stats epoch) must
+        # hit the plan cache on a cost-planned session
+        "SELECT url, COUNT(url) FROM logs GROUP BY url",
     ]
-    # repeat the url-count query at the end: identical (program, stats
-    # epoch — the join queries up front let the reformatted layout settle)
-    # must hit the plan cache on a cost-planned session
-    repeat_q = queries[2]
-    queries.append(repeat_q)
 
-    cache = PlanCache()
-    print(f"{n} log rows; running {len(queries)} queries through the single IR "
-          f"(planner={args.planner})\n")
+    print(f"{n} log rows; running {len(queries)} SQL queries + 2 MapReduce jobs "
+          f"through the single IR (planner={args.planner})\n")
     t_all = time.perf_counter()
-    for q in queries:
-        prog = sql_to_forelem(q, schemas)
-        t0 = time.perf_counter()
-        res = optimize(prog, db, OptimizeOptions(
-            n_parts=8, expected_runs=len(queries), planner=args.planner, plan_cache=cache))
-        out = res.plan.run()
-        dt = time.perf_counter() - t0
-        key = list(out)[0]
-        val = out[key]
+
+    def show(label: str, r) -> None:
+        key = next(iter(r.results))
+        val = r.results[key]
         head = val[:2] if isinstance(val, list) else val
-        print(f"  [{dt*1e3:7.1f} ms] {q}\n            -> {head}")
-        if res.decision is not None:
-            c = res.decision.chosen
+        print(f"  [{r.elapsed_s*1e3:7.1f} ms] {label}\n            -> {head}")
+        if r.decision is not None:
+            c = r.decision.chosen
             pf = f"{c.partition_field[0]}.{c.partition_field[1]}" if c.partition_field else "-"
-            hit = "cache HIT" if res.cache_hit else "cache MISS"
+            hit = "cache HIT" if r.cache_hit else "cache MISS"
             jm = f" join={c.join_method}" if c.join_method else ""
             print(f"            plan: order={c.order} agg={c.agg_method} parallel={c.parallel} "
                   f"partition={pf}{jm} ({hit})")
-            if args.explain:
-                print("\n".join("            " + l for l in res.explain.splitlines()))
-        db = res.db  # reformatting persists across the session (amortization)
+            if args.explain and r.explain:
+                print("\n".join("            " + l for l in r.explain.splitlines()))
+
+    for q in queries:
+        show(q, s.sql(q))
+
+    # --- MapReduce jobs through the SAME engine + planner + plan cache ------
+    # the url-count job is logically identical to the SQL url-count query
+    # above, so on a cost-planned session it is a plan-cache HIT
+    for spec in (MapReduceSpec.count("logs", "url"),
+                 MapReduceSpec.aggregate("logs", "status", "latency", "max")):
+        show(f"MR {spec.name}({spec.table}.{spec.key_field})", s.mapreduce(spec))
+
     print(f"\nsession total: {(time.perf_counter()-t_all)*1e3:.1f} ms")
     if args.planner == "cost":
-        print(f"plan cache: {cache.stats()}")
-        # full EXPLAIN for the repeated (cache-hitting) query
-        first = sql_to_forelem(repeat_q, schemas)
-        res = optimize(first, db, OptimizeOptions(
-            n_parts=8, expected_runs=len(queries), planner="cost", plan_cache=cache))
-        print("\n" + res.explain)
+        print(f"plan cache: {s.cache_stats()}")
+        print("\n" + s.explain(MapReduceSpec.count("logs", "url")))
 
-    # --- distribution optimization across adjacent aggregates (§III-A4) ----
-    # the two status group-by queries (the orthogonalize calls below
-    # partition both on logs.status)
+    # --- the raw pipeline underneath (one low-level snippet) ----------------
+    # distribution optimization across adjacent aggregates (§III-A4): the
+    # two status group-by queries partition both on logs.status
+    from repro import sql_to_forelem
+    from repro.core.distribution import optimize_distribution, partition_conflicts
+    from repro.core.ir import Program
+    from repro.core.transforms import orthogonalize, iteration_space_expansion
+    from dataclasses import replace
+
+    schemas = s.schemas()
     p1 = sql_to_forelem(queries[3], schemas)
     p2 = sql_to_forelem(queries[4], schemas)
     combined = Program(p1.tables, p1.body + p2.body, ("R", "R2"), (), "session")
-    # rename second result to avoid collision
-    from dataclasses import replace
-    from repro.core.ir import ResultAppend, Forelem
     body = list(combined.body)
     body[3] = replace(body[3], body=(replace(body[3].body[0], result="R2"),))
     combined = combined.with_body(body)
-    from repro.core.transforms import orthogonalize, iteration_space_expansion
     c = orthogonalize(combined, "logs", "status", 8, which=[0])
     c = orthogonalize(c, "logs", "status", 8, partvar="k2", valvar="l2", which=[0])
     c = iteration_space_expansion(c)
     print("\npartitioning conflicts before distribution optimization:", len(partition_conflicts(c)))
-    c2, report = optimize_distribution(c, db=db)
+    c2, report = optimize_distribution(c, db=s.db)
     print("after reorder+fusion:", report)
 
     # --- fault-tolerant chunked execution over the row space (§III-A3) ------

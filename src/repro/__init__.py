@@ -1,0 +1,30 @@
+# Public API of the forelem reproduction.
+#
+# The recommended entry point is the unified query engine:
+#
+#   >>> from repro import Session, MapReduceSpec
+#   >>> s = Session(n_parts=8)
+#   >>> s.register("access", url=urls)
+#   >>> s.sql("SELECT url, COUNT(url) FROM access GROUP BY url").rows
+#   >>> s.mapreduce(MapReduceSpec.count("access", "url")).rows
+#
+# The low-level pipeline (frontend → optimize → plan.run) stays available
+# for callers that need to drive individual passes.
+from repro.engine import EngineError, QueryResult, Session  # noqa: F401
+from repro.core.passes import OptimizeOptions, OptimizeResult, optimize  # noqa: F401
+from repro.frontends.sql import sql_to_forelem  # noqa: F401
+from repro.frontends.mapreduce import MapReduceSpec  # noqa: F401
+from repro.data.multiset import Database, Multiset  # noqa: F401
+
+__all__ = [
+    "Session",
+    "QueryResult",
+    "EngineError",
+    "optimize",
+    "OptimizeOptions",
+    "OptimizeResult",
+    "sql_to_forelem",
+    "MapReduceSpec",
+    "Database",
+    "Multiset",
+]

@@ -1,0 +1,56 @@
+# Pluggable executor backends for the forelem single intermediate
+# (paper §II Fig. 1, §III-B): "At a later compilation stage, the compiler
+# determines how to actually execute the iteration specified by a forelem
+# loop and accompanied index set."
+#
+#   interface.py  ExecutorBackend protocol + named registry,
+#   codegen.py    shared pattern extraction (ProgramSpec) + helpers,
+#   reference.py  the oracle interpreter backend ('reference'),
+#   jax_vec.py    the vectorized/shard_map JAX lowering ('jax').
+#
+# ``repro.core.lower`` remains as a thin compatibility shim re-exporting
+# these names; new code should import from here (or use the registry).
+from .interface import (  # noqa: F401
+    ExecutablePlan,
+    ExecutorBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from .codegen import (  # noqa: F401
+    AggSpec,
+    DistinctReadSpec,
+    FilterProjectSpec,
+    JoinAgg,
+    JoinSpec,
+    ProgramSpec,
+    ScalarReduceSpec,
+    UnsupportedProgram,
+    extract_spec,
+)
+from .reference import ReferenceBackend, ReferenceInterpreter, ReferencePlan  # noqa: F401
+from .jax_vec import CodegenChoices, JaxBackend, JaxLowering, Plan  # noqa: F401
+
+__all__ = [
+    "ExecutablePlan",
+    "ExecutorBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "AggSpec",
+    "DistinctReadSpec",
+    "FilterProjectSpec",
+    "JoinAgg",
+    "JoinSpec",
+    "ProgramSpec",
+    "ScalarReduceSpec",
+    "UnsupportedProgram",
+    "extract_spec",
+    "ReferenceBackend",
+    "ReferenceInterpreter",
+    "ReferencePlan",
+    "CodegenChoices",
+    "JaxBackend",
+    "JaxLowering",
+    "Plan",
+]

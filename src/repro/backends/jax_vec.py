@@ -1,0 +1,510 @@
+# Vectorized JAX executor backend: pattern-directed lowering of forelem
+# programs to jitted JAX with selectable index-set materialization methods
+# (the Fig. 1 'nested loop' vs 'hash table' choice becomes
+# scan/sort/one-hot-MXU/Pallas-kernel) and selectable parallel execution
+# (vmap emulation or shard_map over a mesh axis with psum/all_to_all — the
+# generated-MPI-code analogue).
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ir import (
+    ArrayRead,
+    BinOp,
+    Const,
+    Expr,
+    FieldRef,
+    Program,
+    Var,
+    apply_order_limit,
+    tables_read,
+)
+from repro.data.multiset import Database, DictColumn
+
+from .codegen import (
+    DistinctReadSpec,
+    JoinSpec,
+    UnsupportedProgram,
+    _densify,
+    _jnp_binop,
+    _op_identity,
+    cols_len_shape,
+    extract_spec,
+)
+from .interface import register_backend
+
+
+@dataclass
+class CodegenChoices:
+    """The Fig. 1 decision: how index sets are materialized and how foralls
+    execute.
+
+    agg_method: 'dense'   — scatter-add into a dense accumulator (requires
+                             dictionary-encoded integer keys; the TPU
+                             analogue of the paper's hash table),
+                'onehot'  — one-hot × MXU matmul histogram,
+                'sort'    — sort + segment reduction (tree-index analogue),
+                'kernel'  — Pallas segreduce kernel (VMEM-resident
+                             accumulator; interpret-mode on CPU).
+    parallel:   'none'    — single-program,
+                'vmap'    — N-way partitioned execution emulated with vmap
+                             (semantics of the forall on one device),
+                'shard_map' — SPMD over a real mesh axis (psum combine);
+                              the generated-MPI-code analogue.
+    join_method: 'auto'   — unique-lookup when the build key is unique on
+                             the actual data, expansion otherwise,
+                'lookup'  — one searchsorted probe, one match per probe row
+                             (requires a key-unique build side),
+                'expand'  — sort + searchsorted(left/right) + gather
+                             expansion to max key multiplicity (general
+                             duplicate-key equi-join).
+    """
+
+    agg_method: str = "dense"
+    parallel: str = "none"
+    mesh: Optional[jax.sharding.Mesh] = None
+    axis_name: str = "data"
+    donate: bool = False
+    join_method: str = "auto"
+
+
+class JaxLowering:
+    """Compile a forelem Program into a callable over jnp column arrays."""
+
+    def __init__(self, program: Program, db: Database, choices: Optional[CodegenChoices] = None):
+        self.program = program
+        self.db = db
+        self.choices = choices or CodegenChoices()
+        self.spec = extract_spec(program)
+        # Max build-side key multiplicity per join, from the actual data at
+        # compile time.  It sizes the static gather-expansion (probe_rows ×
+        # M output slots); M == 1 degenerates to the unique-lookup plan and
+        # M == 0 marks an empty build side (all probes miss).
+        self.join_multiplicity: List[int] = []
+        for j in self.spec.joins:
+            if j.build_table in db and len(db[j.build_table]):
+                bk = np.asarray(db[j.build_table].field(j.build_key))
+                _, counts = np.unique(bk, return_counts=True)
+                mult = int(counts.max()) if len(counts) else 0
+            else:
+                mult = 0 if j.build_table in db else 1
+            if self.choices.join_method == "lookup" and mult > 1:
+                raise UnsupportedProgram(
+                    f"join_method='lookup' but build side {j.build_table}.{j.build_key} "
+                    "has duplicate keys — use 'expand' or 'auto'"
+                )
+            self.join_multiplicity.append(mult)
+        # key-space sizes for dense accumulators (dictionary-encoded columns)
+        self.num_keys: Dict[Tuple[str, str], int] = {}
+        for agg in self.spec.aggs:
+            self.num_keys[(agg.table, agg.key_field)] = self._key_space(agg.table, agg.key_field)
+        for dr in self.spec.distinct_reads:
+            self.num_keys[(dr.table, dr.field)] = self._key_space(dr.table, dr.field)
+        for j in self.spec.joins:
+            for ja in j.aggs:
+                self.num_keys[(ja.key.table, ja.key.field)] = self._key_space(
+                    ja.key.table, ja.key.field
+                )
+
+    def _key_space(self, table: str, fld: str) -> int:
+        col = self.db[table].columns[fld]
+        if isinstance(col, DictColumn):
+            return col.num_keys
+        vals = np.asarray(col.materialize())
+        if vals.dtype == object:
+            raise UnsupportedProgram(
+                f"column {table}.{fld} holds strings — apply data reformatting "
+                "(dictionary encoding) before JAX lowering, or use the "
+                "reference/numpy backends"
+            )
+        if not np.issubdtype(vals.dtype, np.integer):
+            raise UnsupportedProgram(f"non-integer key column {table}.{fld}")
+        return int(vals.max()) + 1 if len(vals) else 1
+
+    # -- expression → jnp ------------------------------------------------------
+    def _vec(self, e: Expr, cols: Dict[str, Dict[str, jnp.ndarray]], table: str, arrays: Dict[str, jnp.ndarray]):
+        if isinstance(e, Const):
+            return jnp.asarray(e.value)
+        if isinstance(e, Var):
+            params = cols.get("__params__", {})
+            if e.name in params:
+                return params[e.name]
+            raise UnsupportedProgram(f"free Var {e.name} in vectorized expr")
+        if isinstance(e, FieldRef):
+            return cols[e.table][e.field]
+        if isinstance(e, ArrayRead):
+            key = self._vec(e.key, cols, table, arrays)
+            return arrays[e.array][key]
+        if isinstance(e, BinOp):
+            l = self._vec(e.lhs, cols, table, arrays)
+            r = self._vec(e.rhs, cols, table, arrays)
+            return _jnp_binop(e.op, l, r)
+        raise UnsupportedProgram(f"cannot vectorize {e!r}")
+
+    def _pred_mask(self, pred: Optional[Expr], cols, table) -> Optional[jnp.ndarray]:
+        if pred is None:
+            return None
+        # predicates use loopvar '_'
+        return self._vec(pred, cols, table, {})
+
+    # -- aggregation kernels ----------------------------------------------------
+    def _aggregate(self, keys, values, num_keys: int, op: str):
+        method = self.choices.agg_method
+        if op != "+" and method in ("onehot", "kernel"):
+            method = "dense"
+        if method == "dense":
+            if op == "+":
+                return jax.ops.segment_sum(values, keys, num_segments=num_keys)
+            if op == "max":
+                return jax.ops.segment_max(values, keys, num_segments=num_keys)
+            if op == "min":
+                return jax.ops.segment_min(values, keys, num_segments=num_keys)
+            raise UnsupportedProgram(op)
+        if method == "onehot":
+            oh = jax.nn.one_hot(keys, num_keys, dtype=values.dtype)
+            return oh.T @ values
+        if method == "sort":
+            order = jnp.argsort(keys)
+            sk, sv = keys[order], values[order]
+            if op == "+":
+                return jax.ops.segment_sum(sv, sk, num_segments=num_keys, indices_are_sorted=True)
+            if op == "max":
+                return jax.ops.segment_max(sv, sk, num_segments=num_keys, indices_are_sorted=True)
+            if op == "min":
+                return jax.ops.segment_min(sv, sk, num_segments=num_keys, indices_are_sorted=True)
+            raise UnsupportedProgram(op)
+        if method == "kernel":
+            from repro.kernels.segreduce import ops as segops
+
+            return segops.segreduce(keys, values, num_keys)
+        raise ValueError(f"bad agg method {method}")
+
+    # -- build the callable -------------------------------------------------------
+    def build(self) -> Callable[[Dict[str, Dict[str, jnp.ndarray]]], Dict[str, Any]]:
+        spec = self.spec
+
+        def run(cols: Dict[str, Dict[str, jnp.ndarray]]) -> Dict[str, Any]:
+            arrays: Dict[str, jnp.ndarray] = {}
+            presence: Dict[Tuple[str, str], jnp.ndarray] = {}
+            out: Dict[str, Any] = {}
+
+            # --- aggregations ------------------------------------------------
+            for agg in spec.aggs:
+                keys = cols[agg.table][agg.key_field]
+                nk = self.num_keys[(agg.table, agg.key_field)]
+                if isinstance(agg.value, Const):
+                    values = jnp.full(keys.shape, agg.value.value, dtype=jnp.int32 if isinstance(agg.value.value, int) else jnp.float32)
+                else:
+                    values = self._vec(agg.value, cols, agg.table, arrays)
+                    values = jnp.broadcast_to(values, keys.shape)
+                mask = self._pred_mask(agg.filter_pred, cols, agg.table)
+                if agg.member_filter is not None:
+                    mf, mt, mfld = agg.member_filter
+                    member = jnp.isin(cols[agg.table][mf], cols[mt][mfld])
+                    mask = member if mask is None else (mask & member)
+                if mask is not None:
+                    # masked-out rows must contribute the op's *identity* —
+                    # funneling them into segment 0 with value 0 corrupts
+                    # that segment's max/min whenever its true extremum is
+                    # on the other side of 0
+                    values = jnp.where(mask, values, _op_identity(agg.op, values.dtype))
+                    safe_keys = jnp.where(mask, keys, 0)
+                else:
+                    safe_keys = keys
+                acc = self._parallel_aggregate(safe_keys, values, nk, agg.op, mask)
+                arrays[agg.array] = acc
+                ones = jnp.ones(keys.shape, jnp.int32)
+                if mask is not None:
+                    ones = jnp.where(mask, ones, 0)
+                presence[(agg.table, agg.key_field)] = self._parallel_aggregate(safe_keys, ones, nk, "+", mask)
+
+            # --- joins (unique-lookup or duplicate-key expansion) -------------
+            # Before distinct reads: join-aggregates fill `arrays`/`presence`
+            # that the guarded distinct-read result loops consume.
+            for j, mult in zip(spec.joins, self.join_multiplicity):
+                jr = self._join_rows(j, mult, cols)
+                if j.aggs:
+                    for ja in j.aggs:
+                        nk = self.num_keys[(ja.key.table, ja.key.field)]
+                        keys = self._join_gather(ja.key, j, jr, cols)
+                        if isinstance(ja.value, Const):
+                            values = jnp.full(
+                                keys.shape,
+                                ja.value.value,
+                                dtype=jnp.int32 if isinstance(ja.value.value, int) else jnp.float32,
+                            )
+                        else:
+                            values = jnp.broadcast_to(
+                                self._join_gather(ja.value, j, jr, cols), keys.shape
+                            )
+                        values = jnp.where(jr.present, values, _op_identity(ja.op, values.dtype))
+                        safe_keys = jnp.where(jr.present, keys, 0)
+                        arrays[ja.array] = self._aggregate(safe_keys, values, nk, ja.op)
+                        ones = jnp.where(jr.present, 1, 0).astype(jnp.int32)
+                        presence[(ja.key.table, ja.key.field)] = self._aggregate(
+                            safe_keys, ones, nk, "+"
+                        )
+                else:
+                    items = tuple(self._join_gather(el, j, jr, cols) for el in j.items)
+                    out[j.result] = {"columns": items, "present": jr.present}
+
+            # --- scalar reductions -------------------------------------------
+            for sr in spec.scalar_reduces:
+                expr = self._vec(sr.expr, cols, sr.table, arrays)
+                mask = None
+                if sr.match_field is not None:
+                    mv = sr.match_value
+                    if isinstance(mv, Const):
+                        mval = jnp.asarray(mv.value)
+                    elif isinstance(mv, Var):
+                        mval = cols["__params__"][mv.name]
+                    else:
+                        raise UnsupportedProgram(f"match value {mv!r}")
+                    mask = cols[sr.table][sr.match_field] == mval
+                pmask = self._pred_mask(sr.filter_pred, cols, sr.table)
+                if pmask is not None:
+                    mask = pmask if mask is None else (mask & pmask)
+                vals = jnp.broadcast_to(expr, cols_len_shape(cols, sr.table))
+                if mask is not None:
+                    vals = jnp.where(mask, vals, 0)
+                out[sr.var] = jnp.sum(vals)
+
+            # --- distinct reads (group-by result construction) -----------------
+            for dr in spec.distinct_reads:
+                nk = self.num_keys[(dr.table, dr.field)]
+                pres = presence.get((dr.table, dr.field))
+                if pres is None:
+                    keys = cols[dr.table][dr.field]
+                    pres = jax.ops.segment_sum(jnp.ones(keys.shape, jnp.int32), keys, num_segments=nk)
+                key_ids = jnp.arange(nk, dtype=jnp.int32)
+                items = []
+                for el in dr.items:
+                    items.append(self._vec_distinct(el, dr, key_ids, arrays, cols))
+                present = pres > 0
+                if dr.filter_pred is not None:
+                    guard = self._vec_distinct(dr.filter_pred, dr, key_ids, arrays, cols)
+                    present = present & guard.astype(bool)
+                out[dr.result] = {"columns": tuple(items), "present": present}
+
+            # --- filter/project -------------------------------------------------
+            for fp in spec.filter_projects:
+                mask = self._pred_mask(fp.filter_pred, cols, fp.table)
+                items = tuple(self._vec(el, cols, fp.table, arrays) for el in fp.items)
+                n = cols_len_shape(cols, fp.table)[0]
+                if mask is None:
+                    mask = jnp.ones((n,), bool)
+                out[fp.result] = {"columns": items, "present": mask}
+
+            return out
+
+        return run
+
+    # distinct-read item: FieldRef(table,i,field) -> key ids;
+    # ArrayRead(arr, FieldRef(...field)) -> arrays[arr][key_ids]
+    def _vec_distinct(self, e: Expr, dr: DistinctReadSpec, key_ids, arrays, cols):
+        if isinstance(e, FieldRef):
+            if e.field == dr.field:
+                return key_ids
+            raise UnsupportedProgram("distinct read of a non-key field")
+        if isinstance(e, ArrayRead):
+            return arrays[e.array][self._vec_distinct(e.key, dr, key_ids, arrays, cols)]
+        if isinstance(e, BinOp):
+            return _jnp_binop(
+                e.op,
+                self._vec_distinct(e.lhs, dr, key_ids, arrays, cols),
+                self._vec_distinct(e.rhs, dr, key_ids, arrays, cols),
+            )
+        if isinstance(e, Const):
+            return jnp.asarray(e.value)
+        raise UnsupportedProgram(f"distinct item {e!r}")
+
+    # -- parallel aggregation (the forall execution strategies) -----------------
+    def _parallel_aggregate(self, keys, values, nk: int, op: str, mask):
+        c = self.choices
+        if c.parallel == "none" or self.spec.n_parts <= 1:
+            return self._aggregate(keys, values, nk, op)
+        n = self.spec.n_parts
+        pad = (-len(keys)) % n
+        if pad:
+            keys = jnp.concatenate([keys, jnp.zeros((pad,), keys.dtype)])
+            # pad with the op identity, not 0 — a padded 0 lands in segment 0
+            # and corrupts its max/min exactly like an unmasked filtered row
+            fill = jnp.full((pad,), _op_identity(op, values.dtype), values.dtype)
+            values = jnp.concatenate([values, fill])
+        keys = keys.reshape(n, -1)
+        values = values.reshape(n, -1)
+        if c.parallel == "vmap":
+            partials = jax.vmap(lambda k, v: self._aggregate(k, v, nk, op))(keys, values)
+            if op == "+":
+                return partials.sum(0)
+            return partials.max(0) if op == "max" else partials.min(0)
+        if c.parallel == "shard_map":
+            from jax.sharding import PartitionSpec as P
+            from jax import shard_map
+
+            mesh = c.mesh
+            if mesh is None:
+                raise UnsupportedProgram("shard_map parallel requires a mesh")
+            ax = c.axis_name
+
+            def local(k, v):
+                acc = self._aggregate(k[0], v[0], nk, op)
+                if op == "+":
+                    return jax.lax.psum(acc, ax)[None]
+                raise UnsupportedProgram("shard_map max/min")
+
+            f = shard_map(local, mesh=mesh, in_specs=(P(ax), P(ax)), out_specs=P(ax))
+            res = f(keys, values)
+            return res[0]
+        raise ValueError(f"bad parallel {c.parallel}")
+
+    # -- equi-join engine --------------------------------------------------------
+    #
+    # The build side is sorted once; probes binary-search it.  With a
+    # key-unique build side one searchsorted gives the single candidate row
+    # ('lookup').  With duplicate keys the [left, right) searchsorted pair
+    # bounds each probe's match run, and the output is expanded to the
+    # static shape (probe_rows × M) where M is the max key multiplicity
+    # measured at compile time ('expand'); absent slots are masked out.
+
+    def _join_rows(self, j: JoinSpec, mult: int, cols) -> "_JoinRows":
+        bk = cols[j.build_table][j.build_key]
+        pk = cols[j.probe_table][j.probe_fk]
+        n_probe = pk.shape[0]
+        pmask = self._pred_mask(j.probe_filter, cols, j.probe_table)
+        if bk.shape[0] == 0 or mult == 0:
+            # empty build side: every probe misses (never index into the
+            # zero-length build columns — gather would clamp to garbage)
+            return _JoinRows(
+                None, jnp.zeros((n_probe,), jnp.int32), jnp.zeros((n_probe,), bool), True
+            )
+        order = jnp.argsort(bk)
+        sk = bk[order]
+        expand = self.choices.join_method == "expand" or mult > 1
+        if not expand:
+            pos = jnp.clip(jnp.searchsorted(sk, pk), 0, sk.shape[0] - 1)
+            present = sk[pos] == pk
+            if pmask is not None:
+                present = present & pmask
+            return _JoinRows(None, order[pos], present, False)
+        lo = jnp.searchsorted(sk, pk, side="left")
+        hi = jnp.searchsorted(sk, pk, side="right")
+        counts = hi - lo
+        slots = jnp.arange(mult)
+        pos = jnp.clip(lo[:, None] + slots[None, :], 0, sk.shape[0] - 1)  # (n_probe, M)
+        present = slots[None, :] < counts[:, None]
+        if pmask is not None:
+            present = present & pmask[:, None]
+        probe_idx = jnp.broadcast_to(
+            jnp.arange(n_probe, dtype=jnp.int32)[:, None], (n_probe, mult)
+        ).reshape(-1)
+        return _JoinRows(probe_idx, order[pos.reshape(-1)], present.reshape(-1), False)
+
+    def _join_gather(self, e: Expr, j: JoinSpec, jr: "_JoinRows", cols):
+        """Vectorize an expression over the joined (probe, build) row pairs."""
+        if isinstance(e, FieldRef):
+            if e.loopvar == j.probe_var:
+                col = cols[j.probe_table][e.field]
+                return col if jr.probe_idx is None else col[jr.probe_idx]
+            if e.loopvar == j.build_var:
+                col = cols[j.build_table][e.field]
+                if jr.empty_build:
+                    col = jnp.zeros((1,), col.dtype)
+                return col[jr.build_rows]
+            raise UnsupportedProgram(f"join item var {e.loopvar}")
+        if isinstance(e, Const):
+            return jnp.asarray(e.value)
+        if isinstance(e, Var):
+            params = cols.get("__params__", {})
+            if e.name in params:
+                return params[e.name]
+            raise UnsupportedProgram(f"free Var {e.name} in join expr")
+        if isinstance(e, BinOp):
+            return _jnp_binop(
+                e.op, self._join_gather(e.lhs, j, jr, cols), self._join_gather(e.rhs, j, jr, cols)
+            )
+        raise UnsupportedProgram(f"join item {e!r}")
+
+
+@dataclass
+class _JoinRows:
+    """Row pairing produced by the join engine, in static (padded) shape.
+
+    probe_idx is None when output slots align 1:1 with probe rows (lookup
+    path / empty build); otherwise it gathers the probe side into the
+    expanded (probe_rows × M) slot space."""
+
+    probe_idx: Optional[jnp.ndarray]
+    build_rows: jnp.ndarray
+    present: jnp.ndarray
+    empty_build: bool
+
+
+# ===========================================================================
+# Plan — user-facing compiled program
+# ===========================================================================
+
+
+class Plan:
+    """A compiled forelem program.  ``run(db)`` executes on a Database and
+    densifies multiset results back to Python tuples (for comparison with the
+    reference interpreter); ``fn`` is the raw jitted callable."""
+
+    def __init__(self, program: Program, db: Database, choices: Optional[CodegenChoices] = None, jit: bool = True):
+        self.program = program
+        self.db = db
+        self.lowering = JaxLowering(program, db, choices)
+        raw = self.lowering.build()
+        self.fn = jax.jit(raw) if jit else raw
+
+    def input_columns(self) -> Dict[str, Dict[str, jnp.ndarray]]:
+        cols: Dict[str, Dict[str, jnp.ndarray]] = {}
+        needed: Dict[str, Set[str]] = {}
+        for t, fs in tables_read(self.program.body).items():
+            needed.setdefault(t, set()).update(fs)
+        sp = self.lowering.spec
+        for agg in sp.aggs:
+            needed.setdefault(agg.table, set()).add(agg.key_field)
+        for j in sp.joins:
+            needed.setdefault(j.probe_table, set()).add(j.probe_fk)
+            needed.setdefault(j.build_table, set()).add(j.build_key)
+            for ja in j.aggs:
+                needed.setdefault(ja.key.table, set()).add(ja.key.field)
+                for t, f in ja.value.fields_used():
+                    needed.setdefault(t, set()).add(f)
+        for t, fields in needed.items():
+            if t not in self.db:
+                continue
+            ms = self.db[t]
+            cols[t] = {}
+            for f in fields:
+                if f in ms.columns:
+                    cols[t][f] = jnp.asarray(ms.field(f))
+        return cols
+
+    def run(self, params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        cols = self.input_columns()
+        if params:
+            cols["__params__"] = {k: jnp.asarray(v) for k, v in params.items()}
+        raw = self.fn(cols)
+        out = {k: _densify(v) for k, v in raw.items() if k in self.program.results}
+        return apply_order_limit(self.program, out)
+
+
+class JaxBackend:
+    """The default production backend: vectorized, jitted JAX execution with
+    the full ``CodegenChoices`` strategy space."""
+
+    name = "jax"
+
+    def compile(self, program: Program, db: Database, choices: Optional[CodegenChoices] = None) -> Plan:
+        return Plan(program, db, choices)
+
+
+register_backend(JaxBackend())

@@ -2,6 +2,11 @@
 # representation: one IR in which query optimization, classic compiler
 # optimization, parallelization, data distribution and data reformatting are
 # all carried out (Rietveld & Wijshoff, 2022).
+#
+# Only the IR itself is imported eagerly; the executor re-exports (which
+# live in the pluggable ``repro.backends`` package since the engine
+# refactor) and the pass pipeline load lazily via PEP 562 so that
+# ``repro.backends`` can import ``repro.core.ir`` without a cycle.
 from .ir import (  # noqa: F401
     Accumulate,
     ArrayRead,
@@ -31,15 +36,34 @@ from .ir import (  # noqa: F401
     Var,
     program_str,
 )
-from .lower import (  # noqa: F401
-    CodegenChoices,
-    JaxLowering,
-    Plan,
-    ReferenceInterpreter,
-    UnsupportedProgram,
+
+# names re-exported from the executor-backend shim (repro.backends)
+_LOWER_NAMES = frozenset(
+    {"CodegenChoices", "JaxLowering", "Plan", "ReferenceInterpreter", "UnsupportedProgram"}
 )
-from .passes import OptimizeOptions, OptimizeResult, optimize  # noqa: F401
-from . import transforms  # noqa: F401
-from . import partition  # noqa: F401
-from . import distribution  # noqa: F401
-from . import reformat  # noqa: F401
+# names re-exported from the pass pipeline
+_PASSES_NAMES = frozenset({"OptimizeOptions", "OptimizeResult", "optimize"})
+# submodules importable as attributes (historically imported eagerly here)
+_SUBMODULES = frozenset(
+    {"transforms", "partition", "distribution", "reformat", "lower", "passes", "ir"}
+)
+
+
+def __getattr__(name):
+    if name in _LOWER_NAMES:
+        from . import lower
+
+        return getattr(lower, name)
+    if name in _PASSES_NAMES:
+        from . import passes
+
+        return getattr(passes, name)
+    if name in _SUBMODULES:
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _LOWER_NAMES | _PASSES_NAMES | _SUBMODULES)

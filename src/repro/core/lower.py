@@ -1,1036 +1,61 @@
-# Lowering of forelem programs to executable code (paper §II Fig. 1, §III-B):
-# "At a later compilation stage, the compiler determines how to actually
-# execute the iteration specified by a forelem loop and accompanied index
-# set."
+# DEPRECATED compatibility shim — the executor logic that lived here has
+# moved to the pluggable backends package ``repro.backends``:
 #
-# Two executors live here:
-#   * ReferenceInterpreter — a direct (slow, Python) denotational semantics
-#     of the IR.  It is the oracle for every transform/lowering test.
-#   * JaxLowering — pattern-directed vectorized lowering to jitted JAX with
-#     selectable index-set materialization methods (the Fig. 1 'nested loop'
-#     vs 'hash table' choice becomes scan/sort/one-hot-MXU/Pallas-kernel) and
-#     selectable parallel execution (vmap emulation or shard_map over a mesh
-#     axis with psum/all_to_all — the generated-MPI-code analogue).
+#   repro/backends/interface.py  ExecutorBackend protocol + registry
+#   repro/backends/codegen.py    pattern extraction (ProgramSpec) + helpers
+#   repro/backends/reference.py  ReferenceInterpreter (the oracle)
+#   repro/backends/jax_vec.py    JaxLowering / CodegenChoices / Plan
+#
+# This module re-exports the public names so existing imports keep working.
+# New code should import from ``repro.backends`` (or go through the
+# ``repro.engine.Session`` front door and never touch a backend directly).
+# The shim will be removed once nothing in-tree imports it.
+#
+# NOTE: submodule imports below are deliberate — ``repro.backends.X`` (not
+# ``from repro.backends import X``) keeps the import graph acyclic while
+# ``repro.core.__init__`` is still initializing.
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from repro.data.multiset import Database, DictColumn, Multiset
-from .ir import (
-    Accumulate,
-    ArrayRead,
-    BinOp,
-    Blocked,
-    CombinePartials,
-    Const,
-    Distinct,
-    Expr,
-    FieldMatch,
-    FieldRef,
-    Filtered,
-    ForValue,
-    Forall,
-    Forelem,
-    FullSet,
-    IndexSet,
-    Program,
-    ResultAppend,
-    ScalarAssign,
-    Stmt,
-    TupleExpr,
-    Var,
-    apply_order_limit,
-    children,
-    walk,
+from repro.backends.codegen import (  # noqa: F401
+    AggSpec,
+    DistinctReadSpec,
+    FilterProjectSpec,
+    JoinAgg,
+    JoinSpec,
+    ProgramSpec,
+    ScalarReduceSpec,
+    UnsupportedProgram,
+    cols_len_shape,
+    extract_spec,
+)
+from repro.backends.reference import (  # noqa: F401
+    ReferenceBackend,
+    ReferenceInterpreter,
+    ReferencePlan,
+)
+from repro.backends.jax_vec import (  # noqa: F401
+    CodegenChoices,
+    JaxBackend,
+    JaxLowering,
+    Plan,
 )
 
-# ===========================================================================
-# Reference interpreter (the oracle)
-# ===========================================================================
-
-
-class ReferenceInterpreter:
-    """Direct execution of the IR semantics.  O(rows × values) Python — used
-    on small data by the tests as ground truth."""
-
-    def __init__(self, db: Database, params: Optional[Dict[str, Any]] = None):
-        self.db = db
-        self.params = dict(params or {})
-
-    # -- public --------------------------------------------------------------
-    def run(self, program: Program) -> Dict[str, Any]:
-        self.scalars: Dict[str, Any] = {}
-        self.arrays: Dict[str, Dict[Any, Any]] = {}
-        self.results: Dict[str, List[Tuple]] = {}
-        env: Dict[str, Any] = dict(self.params)
-        for s in program.body:
-            self._exec(s, env)
-        out: Dict[str, Any] = {}
-        for r in program.results:
-            if r in self.results:
-                out[r] = self.results[r]
-            elif r in self.scalars:
-                out[r] = self.scalars[r]
-            elif r in self.arrays:
-                out[r] = dict(self.arrays[r])
-            else:
-                out[r] = []
-        return apply_order_limit(program, out)
-
-    # -- expression evaluation ------------------------------------------------
-    def _eval(self, e: Expr, env: Dict[str, Any]) -> Any:
-        if isinstance(e, Const):
-            return e.value
-        if isinstance(e, Var):
-            if e.name in env:
-                return env[e.name]
-            if e.name in self.scalars:
-                return self.scalars[e.name]
-            raise KeyError(f"unbound Var {e.name!r}")
-        if isinstance(e, FieldRef):
-            row = env[e.loopvar]
-            return _pyval(self.db[e.table].field(e.field)[row])
-        if isinstance(e, ArrayRead):
-            key = self._eval(e.key, env)
-            return self.arrays.get(e.array, {}).get(key, 0)
-        if isinstance(e, BinOp):
-            l, r = self._eval(e.lhs, env), self._eval(e.rhs, env)
-            return _binop(e.op, l, r)
-        if isinstance(e, TupleExpr):
-            return tuple(self._eval(el, env) for el in e.elements)
-        raise TypeError(f"cannot eval {e!r}")
-
-    # -- index-set iteration ----------------------------------------------------
-    def _rows(self, ix: IndexSet, env: Dict[str, Any]) -> List[int]:
-        if isinstance(ix, FullSet):
-            return list(range(len(self.db[ix.table])))
-        if isinstance(ix, FieldMatch):
-            v = self._eval(ix.value, env)
-            col = self.db[ix.table].field(ix.field)
-            return [i for i in range(len(col)) if _pyval(col[i]) == v]
-        if isinstance(ix, Distinct):
-            col = self.db[ix.table].field(ix.field)
-            vals = np.asarray(col)
-            _, first = np.unique(vals, return_index=True)
-            return sorted(int(i) for i in first)
-        if isinstance(ix, Filtered):
-            base_rows = self._rows(ix.base, env)
-            out = []
-            for i in base_rows:
-                env2 = dict(env)
-                env2["_"] = i
-                if self._eval(ix.predicate, env2):
-                    out.append(i)
-            return out
-        if isinstance(ix, Blocked):
-            base_rows = self._rows(ix.base, env)
-            k = env[ix.part_var]
-            return [list(x) for x in np.array_split(base_rows, ix.n_parts)][k]
-        raise TypeError(f"cannot iterate {ix!r}")
-
-    # -- statements ----------------------------------------------------------
-    def _exec(self, s: Stmt, env: Dict[str, Any]) -> None:
-        if isinstance(s, Forelem):
-            for i in self._rows(s.indexset, env):
-                env2 = dict(env)
-                env2[s.loopvar] = int(i)
-                for st in s.body:
-                    self._exec(st, env2)
-        elif isinstance(s, Forall):
-            for k in range(s.n_parts):
-                env2 = dict(env)
-                env2[s.partvar] = k
-                for st in s.body:
-                    self._exec(st, env2)
-        elif isinstance(s, ForValue):
-            rp = s.range_part
-            col = np.asarray(self.db[rp.base.table].field(rp.base.field))
-            values = np.unique(col)
-            part = np.array_split(values, rp.n_parts)[env[rp.part_var]]
-            for v in part:
-                env2 = dict(env)
-                env2[s.valvar] = _pyval(v)
-                for st in s.body:
-                    self._exec(st, env2)
-        elif isinstance(s, Accumulate):
-            name = s.array if s.partitioned is None else f"{s.array}@{env[s.partitioned]}"
-            key = self._eval(s.key, env)
-            val = self._eval(s.value, env)
-            d = self.arrays.setdefault(name, {})
-            if s.op == "+":
-                d[key] = d.get(key, 0) + val
-            elif s.op == "max":
-                d[key] = max(d.get(key, -np.inf), val)
-            elif s.op == "min":
-                d[key] = min(d.get(key, np.inf), val)
-            else:
-                raise ValueError(f"bad accumulate op {s.op}")
-        elif isinstance(s, CombinePartials):
-            combined: Dict[Any, Any] = {}
-            for k in range(s.n_parts):
-                for key, val in self.arrays.get(f"{s.array}@{k}", {}).items():
-                    if s.op == "+":
-                        combined[key] = combined.get(key, 0) + val
-                    elif s.op == "max":
-                        combined[key] = max(combined.get(key, -np.inf), val)
-                    elif s.op == "min":
-                        combined[key] = min(combined.get(key, np.inf), val)
-            self.arrays[s.array] = combined
-        elif isinstance(s, ResultAppend):
-            t = self._eval(s.tuple_expr, env)
-            self.results.setdefault(s.result, []).append(t)
-        elif isinstance(s, ScalarAssign):
-            v = self._eval(s.expr, env)
-            if s.op == "=":
-                self.scalars[s.var] = v
-            elif s.op == "+":
-                self.scalars[s.var] = self.scalars.get(s.var, 0) + v
-            else:
-                raise ValueError(f"bad scalar op {s.op}")
-        else:
-            raise TypeError(f"cannot execute {s!r}")
-
-
-def _pyval(v: Any) -> Any:
-    if isinstance(v, (np.generic,)):
-        return v.item()
-    return v
-
-
-def _binop(op: str, l: Any, r: Any) -> Any:
-    if op == "+":
-        return l + r
-    if op == "-":
-        return l - r
-    if op == "*":
-        return l * r
-    if op == "/":
-        return l / r
-    if op == "==":
-        return l == r
-    if op == "!=":
-        return l != r
-    if op == "<":
-        return l < r
-    if op == "<=":
-        return l <= r
-    if op == ">":
-        return l > r
-    if op == ">=":
-        return l >= r
-    if op == "and":
-        return bool(l) and bool(r)
-    if op == "or":
-        return bool(l) or bool(r)
-    raise ValueError(f"bad op {op}")
-
-
-# ===========================================================================
-# Pattern extraction for vectorized lowering
-# ===========================================================================
-#
-# The lowering recognizes the op-shapes that the frontends (SQL, MapReduce,
-# the LM data pipeline) produce.  Whether the program arrives in sequential
-# or parallelized (forall/forvalue) form does not change the extracted spec:
-# index sets encapsulate *what* is iterated; the execution method is chosen
-# here (paper Fig. 1).
-
-
-@dataclass
-class AggSpec:
-    """arr[key_field of table] op= value_expr   (+ presence counting)."""
-
-    array: str
-    table: str
-    key_field: str
-    value: Expr
-    op: str
-    filter_pred: Optional[Expr] = None  # from Filtered base index sets
-    # rows restricted to those whose `member_field` value occurs in the
-    # value range of (member_table, member_src_field) — arises when a loop
-    # matching on field B was fused under a ForValue ranging over field A.
-    member_filter: Optional[Tuple[str, str, str]] = None
-
-
-@dataclass
-class DistinctReadSpec:
-    """forelem (i ∈ pT.distinct(f)) R ∪= tuple(field / ArrayRead items).
-
-    ``filter_pred`` is the presence guard of a Filtered-over-Distinct index
-    set (e.g. ``cnt[f] > 0`` emitted by the SQL frontend so that groups with
-    no surviving rows are omitted — SQL GROUP BY semantics)."""
-
-    result: str
-    table: str
-    field: str
-    items: Tuple[Expr, ...]
-    filter_pred: Optional[Expr] = None
-
-
-@dataclass
-class ScalarReduceSpec:
-    var: str
-    table: str
-    expr: Expr
-    match_field: Optional[str]
-    match_value: Optional[Expr]
-    filter_pred: Optional[Expr]
-
-
-@dataclass
-class FilterProjectSpec:
-    result: str
-    table: str
-    items: Tuple[Expr, ...]
-    filter_pred: Optional[Expr]
-
-
-@dataclass
-class JoinAgg:
-    """``arr[key] op= value`` over the joined (probe, build) row pairs —
-    GROUP BY over a two-table join.  ``key`` is a FieldRef on either side."""
-
-    array: str
-    key: FieldRef
-    value: Expr
-    op: str
-
-
-@dataclass
-class JoinSpec:
-    """forelem (i ∈ pA) forelem (j ∈ pB.key[A[i].fk]) BODY
-
-    BODY is either a single ResultAppend (materialized equi-join; ``result``
-    and ``items`` are set) or a list of Accumulates (join-then-aggregate;
-    ``aggs`` is set and ``result`` is None).  ``probe_filter`` restricts the
-    probe side (a Filtered outer index set — WHERE over the probe table)."""
-
-    result: Optional[str]
-    probe_table: str
-    probe_fk: str
-    build_table: str
-    build_key: str
-    items: Tuple[Expr, ...]
-    probe_var: str
-    build_var: str
-    probe_filter: Optional[Expr] = None
-    aggs: Tuple[JoinAgg, ...] = ()
-
-
-@dataclass
-class ProgramSpec:
-    aggs: List[AggSpec]
-    distinct_reads: List[DistinctReadSpec]
-    scalar_reduces: List[ScalarReduceSpec]
-    filter_projects: List[FilterProjectSpec]
-    joins: List[JoinSpec]
-    n_parts: int  # parallelism declared by forall loops (1 = sequential)
-    mesh_axis: Optional[str]
-
-
-class UnsupportedProgram(Exception):
-    pass
-
-
-def extract_spec(program: Program) -> ProgramSpec:
-    congruence_set = set(program.congruences)
-    aggs: List[AggSpec] = []
-    dreads: List[DistinctReadSpec] = []
-    sreds: List[ScalarReduceSpec] = []
-    fprojs: List[FilterProjectSpec] = []
-    joins: List[JoinSpec] = []
-    n_parts = 1
-    mesh_axis: Optional[str] = None
-
-    def base_of(ix: IndexSet) -> IndexSet:
-        while isinstance(ix, Blocked):
-            ix = ix.base
-        return ix
-
-    def handle_forelem(fe: Forelem, valvar_field: Optional[Tuple[str, str]] = None) -> None:
-        """valvar_field = (valvar_name, field) when nested under ForValue."""
-        nonlocal aggs, dreads, sreds, fprojs, joins
-        ix = base_of(fe.indexset)
-        filt = None
-        table = ix.table
-        if isinstance(ix, Filtered):
-            filt = ix.predicate
-        # Determine effective iteration: FieldMatch with Var bound by the
-        # surrounding ForValue means "full table, partitioned by that field"
-        # — i.e. a plain scan once re-serialized.
-        match_field: Optional[str] = None
-        match_value: Optional[Expr] = None
-        member_filter: Optional[Tuple[str, str, str]] = None
-        if isinstance(ix, FieldMatch):
-            if (
-                valvar_field is not None
-                and isinstance(ix.value, Var)
-                and ix.value.name == valvar_field[0]
-            ):
-                if ix.field == valvar_field[1]:
-                    pass  # partitioned full scan
-                else:
-                    # fused under a congruent value range: if congruence is
-                    # recorded, this is still a full scan; otherwise restrict
-                    # rows to those whose value occurs in the range.
-                    pair = frozenset({(table, ix.field), (valvar_field[2], valvar_field[1])})
-                    if pair in congruence_set:
-                        pass
-                    else:
-                        member_filter = (ix.field, valvar_field[2], valvar_field[1])
-            else:
-                match_field, match_value = ix.field, ix.value
-
-        for st in fe.body:
-            if isinstance(st, Accumulate):
-                key = st.key
-                if not (isinstance(key, FieldRef) and key.loopvar == fe.loopvar and key.table == table):
-                    raise UnsupportedProgram(f"accumulate key {key!r}")
-                if match_field is not None:
-                    raise UnsupportedProgram("accumulate under residual FieldMatch")
-                aggs.append(AggSpec(st.array, table, key.field, st.value, st.op, filt, member_filter))
-            elif isinstance(st, ScalarAssign) and st.op == "+":
-                sreds.append(ScalarReduceSpec(st.var, table, st.expr, match_field, match_value, filt))
-            elif isinstance(st, ResultAppend):
-                if isinstance(ix, Distinct):
-                    dreads.append(DistinctReadSpec(st.result, table, ix.field, st.tuple_expr.elements))
-                elif isinstance(ix, Filtered) and isinstance(ix.base, Distinct):
-                    # guarded distinct read: pT.distinct(f) | pred  (the SQL
-                    # frontend's presence guard for filtered / joined GROUP BY)
-                    dreads.append(
-                        DistinctReadSpec(st.result, table, ix.base.field, st.tuple_expr.elements, filt)
-                    )
-                elif match_field is None:
-                    reads: Set[str] = set()
-                    for el in st.tuple_expr.elements:
-                        _collect_array_reads(el, reads)
-                    if reads:
-                        raise UnsupportedProgram("projection reading arrays outside distinct loop")
-                    fprojs.append(FilterProjectSpec(st.result, table, st.tuple_expr.elements, filt))
-                else:
-                    raise UnsupportedProgram("result append under FieldMatch (use join form)")
-            elif isinstance(st, Forelem):
-                # join: inner loop with FieldMatch on outer's field
-                iix = base_of(st.indexset)
-                if (
-                    isinstance(iix, FieldMatch)
-                    and isinstance(iix.value, FieldRef)
-                    and iix.value.loopvar == fe.loopvar
-                ):
-                    inner_appends = [x for x in st.body if isinstance(x, ResultAppend)]
-                    inner_accs = [x for x in st.body if isinstance(x, Accumulate)]
-                    if len(inner_appends) == 1 and len(st.body) == 1:
-                        ra = inner_appends[0]
-                        joins.append(
-                            JoinSpec(
-                                ra.result,
-                                probe_table=table,
-                                probe_fk=iix.value.field,
-                                build_table=iix.table,
-                                build_key=iix.field,
-                                items=ra.tuple_expr.elements,
-                                probe_var=fe.loopvar,
-                                build_var=st.loopvar,
-                                probe_filter=filt,
-                            )
-                        )
-                    elif inner_accs and len(inner_accs) == len(st.body):
-                        # join-then-aggregate: GROUP BY over a two-table join
-                        jaggs: List[JoinAgg] = []
-                        for acc in inner_accs:
-                            key = acc.key
-                            on_probe = (
-                                isinstance(key, FieldRef)
-                                and key.loopvar == fe.loopvar
-                                and key.table == table
-                            )
-                            on_build = (
-                                isinstance(key, FieldRef)
-                                and key.loopvar == st.loopvar
-                                and key.table == iix.table
-                            )
-                            if not (on_probe or on_build):
-                                raise UnsupportedProgram(f"join-aggregate key {key!r}")
-                            jaggs.append(JoinAgg(acc.array, key, acc.value, acc.op))
-                        joins.append(
-                            JoinSpec(
-                                None,
-                                probe_table=table,
-                                probe_fk=iix.value.field,
-                                build_table=iix.table,
-                                build_key=iix.field,
-                                items=(),
-                                probe_var=fe.loopvar,
-                                build_var=st.loopvar,
-                                probe_filter=filt,
-                                aggs=tuple(jaggs),
-                            )
-                        )
-                    else:
-                        raise UnsupportedProgram("join inner body")
-                else:
-                    raise UnsupportedProgram(f"nested forelem {iix!r}")
-            else:
-                raise UnsupportedProgram(f"statement {st!r}")
-
-    def visit(stmts: Sequence[Stmt], valvar_field=None) -> None:
-        nonlocal n_parts, mesh_axis
-        for s in stmts:
-            if isinstance(s, Forall):
-                n_parts = max(n_parts, s.n_parts)
-                if s.mesh_axis:
-                    mesh_axis = s.mesh_axis
-                visit(s.body, valvar_field)
-            elif isinstance(s, ForValue):
-                visit(s.body, (s.valvar, s.range_part.base.field, s.range_part.base.table))
-            elif isinstance(s, Forelem):
-                handle_forelem(s, valvar_field)
-            elif isinstance(s, CombinePartials):
-                pass  # implicit in vectorized execution
-            elif isinstance(s, ScalarAssign) and s.op == "=":
-                pass  # initialization; arrays start at 0
-            else:
-                raise UnsupportedProgram(f"top-level {s!r}")
-
-    visit(program.body)
-    return ProgramSpec(aggs, dreads, sreds, fprojs, joins, n_parts, mesh_axis)
-
-
-def _collect_array_reads(e: Expr, out: Set[str]) -> None:
-    if isinstance(e, ArrayRead):
-        out.add(e.array)
-    elif isinstance(e, BinOp):
-        _collect_array_reads(e.lhs, out)
-        _collect_array_reads(e.rhs, out)
-    elif isinstance(e, TupleExpr):
-        for el in e.elements:
-            _collect_array_reads(el, out)
-
-
-# ===========================================================================
-# Vectorized JAX lowering
-# ===========================================================================
-
-
-@dataclass
-class CodegenChoices:
-    """The Fig. 1 decision: how index sets are materialized and how foralls
-    execute.
-
-    agg_method: 'dense'   — scatter-add into a dense accumulator (requires
-                             dictionary-encoded integer keys; the TPU
-                             analogue of the paper's hash table),
-                'onehot'  — one-hot × MXU matmul histogram,
-                'sort'    — sort + segment reduction (tree-index analogue),
-                'kernel'  — Pallas segreduce kernel (VMEM-resident
-                             accumulator; interpret-mode on CPU).
-    parallel:   'none'    — single-program,
-                'vmap'    — N-way partitioned execution emulated with vmap
-                             (semantics of the forall on one device),
-                'shard_map' — SPMD over a real mesh axis (psum combine);
-                              the generated-MPI-code analogue.
-    join_method: 'auto'   — unique-lookup when the build key is unique on
-                             the actual data, expansion otherwise,
-                'lookup'  — one searchsorted probe, one match per probe row
-                             (requires a key-unique build side),
-                'expand'  — sort + searchsorted(left/right) + gather
-                             expansion to max key multiplicity (general
-                             duplicate-key equi-join).
-    """
-
-    agg_method: str = "dense"
-    parallel: str = "none"
-    mesh: Optional[jax.sharding.Mesh] = None
-    axis_name: str = "data"
-    donate: bool = False
-    join_method: str = "auto"
-
-
-class JaxLowering:
-    """Compile a forelem Program into a callable over jnp column arrays."""
-
-    def __init__(self, program: Program, db: Database, choices: Optional[CodegenChoices] = None):
-        self.program = program
-        self.db = db
-        self.choices = choices or CodegenChoices()
-        self.spec = extract_spec(program)
-        # Max build-side key multiplicity per join, from the actual data at
-        # compile time.  It sizes the static gather-expansion (probe_rows ×
-        # M output slots); M == 1 degenerates to the unique-lookup plan and
-        # M == 0 marks an empty build side (all probes miss).
-        self.join_multiplicity: List[int] = []
-        for j in self.spec.joins:
-            if j.build_table in db and len(db[j.build_table]):
-                bk = np.asarray(db[j.build_table].field(j.build_key))
-                _, counts = np.unique(bk, return_counts=True)
-                mult = int(counts.max()) if len(counts) else 0
-            else:
-                mult = 0 if j.build_table in db else 1
-            if self.choices.join_method == "lookup" and mult > 1:
-                raise UnsupportedProgram(
-                    f"join_method='lookup' but build side {j.build_table}.{j.build_key} "
-                    "has duplicate keys — use 'expand' or 'auto'"
-                )
-            self.join_multiplicity.append(mult)
-        # key-space sizes for dense accumulators (dictionary-encoded columns)
-        self.num_keys: Dict[Tuple[str, str], int] = {}
-        for agg in self.spec.aggs:
-            self.num_keys[(agg.table, agg.key_field)] = self._key_space(agg.table, agg.key_field)
-        for dr in self.spec.distinct_reads:
-            self.num_keys[(dr.table, dr.field)] = self._key_space(dr.table, dr.field)
-        for j in self.spec.joins:
-            for ja in j.aggs:
-                self.num_keys[(ja.key.table, ja.key.field)] = self._key_space(
-                    ja.key.table, ja.key.field
-                )
-
-    def _key_space(self, table: str, fld: str) -> int:
-        col = self.db[table].columns[fld]
-        if isinstance(col, DictColumn):
-            return col.num_keys
-        vals = np.asarray(col.materialize())
-        if vals.dtype == object:
-            raise UnsupportedProgram(
-                f"column {table}.{fld} holds strings — apply data reformatting "
-                "(dictionary encoding) before JAX lowering, or use the "
-                "reference/numpy backends"
-            )
-        if not np.issubdtype(vals.dtype, np.integer):
-            raise UnsupportedProgram(f"non-integer key column {table}.{fld}")
-        return int(vals.max()) + 1 if len(vals) else 1
-
-    # -- expression → jnp ------------------------------------------------------
-    def _vec(self, e: Expr, cols: Dict[str, Dict[str, jnp.ndarray]], table: str, arrays: Dict[str, jnp.ndarray]):
-        if isinstance(e, Const):
-            return jnp.asarray(e.value)
-        if isinstance(e, Var):
-            params = cols.get("__params__", {})
-            if e.name in params:
-                return params[e.name]
-            raise UnsupportedProgram(f"free Var {e.name} in vectorized expr")
-        if isinstance(e, FieldRef):
-            return cols[e.table][e.field]
-        if isinstance(e, ArrayRead):
-            key = self._vec(e.key, cols, table, arrays)
-            return arrays[e.array][key]
-        if isinstance(e, BinOp):
-            l = self._vec(e.lhs, cols, table, arrays)
-            r = self._vec(e.rhs, cols, table, arrays)
-            return _jnp_binop(e.op, l, r)
-        raise UnsupportedProgram(f"cannot vectorize {e!r}")
-
-    def _pred_mask(self, pred: Optional[Expr], cols, table) -> Optional[jnp.ndarray]:
-        if pred is None:
-            return None
-        # predicates use loopvar '_'
-        return self._vec(pred, cols, table, {})
-
-    # -- aggregation kernels ----------------------------------------------------
-    def _aggregate(self, keys, values, num_keys: int, op: str):
-        method = self.choices.agg_method
-        if op != "+" and method in ("onehot", "kernel"):
-            method = "dense"
-        if method == "dense":
-            if op == "+":
-                return jax.ops.segment_sum(values, keys, num_segments=num_keys)
-            if op == "max":
-                return jax.ops.segment_max(values, keys, num_segments=num_keys)
-            if op == "min":
-                return jax.ops.segment_min(values, keys, num_segments=num_keys)
-            raise UnsupportedProgram(op)
-        if method == "onehot":
-            oh = jax.nn.one_hot(keys, num_keys, dtype=values.dtype)
-            return oh.T @ values
-        if method == "sort":
-            order = jnp.argsort(keys)
-            sk, sv = keys[order], values[order]
-            if op == "+":
-                return jax.ops.segment_sum(sv, sk, num_segments=num_keys, indices_are_sorted=True)
-            if op == "max":
-                return jax.ops.segment_max(sv, sk, num_segments=num_keys, indices_are_sorted=True)
-            if op == "min":
-                return jax.ops.segment_min(sv, sk, num_segments=num_keys, indices_are_sorted=True)
-            raise UnsupportedProgram(op)
-        if method == "kernel":
-            from repro.kernels.segreduce import ops as segops
-
-            return segops.segreduce(keys, values, num_keys)
-        raise ValueError(f"bad agg method {method}")
-
-    # -- build the callable -------------------------------------------------------
-    def build(self) -> Callable[[Dict[str, Dict[str, jnp.ndarray]]], Dict[str, Any]]:
-        spec = self.spec
-        choices = self.choices
-
-        def run(cols: Dict[str, Dict[str, jnp.ndarray]]) -> Dict[str, Any]:
-            arrays: Dict[str, jnp.ndarray] = {}
-            presence: Dict[Tuple[str, str], jnp.ndarray] = {}
-            out: Dict[str, Any] = {}
-
-            # --- aggregations ------------------------------------------------
-            for agg in spec.aggs:
-                keys = cols[agg.table][agg.key_field]
-                nk = self.num_keys[(agg.table, agg.key_field)]
-                if isinstance(agg.value, Const):
-                    values = jnp.full(keys.shape, agg.value.value, dtype=jnp.int32 if isinstance(agg.value.value, int) else jnp.float32)
-                else:
-                    values = self._vec(agg.value, cols, agg.table, arrays)
-                    values = jnp.broadcast_to(values, keys.shape)
-                mask = self._pred_mask(agg.filter_pred, cols, agg.table)
-                if agg.member_filter is not None:
-                    mf, mt, mfld = agg.member_filter
-                    member = jnp.isin(cols[agg.table][mf], cols[mt][mfld])
-                    mask = member if mask is None else (mask & member)
-                if mask is not None:
-                    # masked-out rows must contribute the op's *identity* —
-                    # funneling them into segment 0 with value 0 corrupts
-                    # that segment's max/min whenever its true extremum is
-                    # on the other side of 0
-                    values = jnp.where(mask, values, _op_identity(agg.op, values.dtype))
-                    safe_keys = jnp.where(mask, keys, 0)
-                else:
-                    safe_keys = keys
-                acc = self._parallel_aggregate(safe_keys, values, nk, agg.op, mask)
-                arrays[agg.array] = acc
-                ones = jnp.ones(keys.shape, jnp.int32)
-                if mask is not None:
-                    ones = jnp.where(mask, ones, 0)
-                presence[(agg.table, agg.key_field)] = self._parallel_aggregate(safe_keys, ones, nk, "+", mask)
-
-            # --- joins (unique-lookup or duplicate-key expansion) -------------
-            # Before distinct reads: join-aggregates fill `arrays`/`presence`
-            # that the guarded distinct-read result loops consume.
-            for j, mult in zip(spec.joins, self.join_multiplicity):
-                jr = self._join_rows(j, mult, cols)
-                if j.aggs:
-                    for ja in j.aggs:
-                        nk = self.num_keys[(ja.key.table, ja.key.field)]
-                        keys = self._join_gather(ja.key, j, jr, cols)
-                        if isinstance(ja.value, Const):
-                            values = jnp.full(
-                                keys.shape,
-                                ja.value.value,
-                                dtype=jnp.int32 if isinstance(ja.value.value, int) else jnp.float32,
-                            )
-                        else:
-                            values = jnp.broadcast_to(
-                                self._join_gather(ja.value, j, jr, cols), keys.shape
-                            )
-                        values = jnp.where(jr.present, values, _op_identity(ja.op, values.dtype))
-                        safe_keys = jnp.where(jr.present, keys, 0)
-                        arrays[ja.array] = self._aggregate(safe_keys, values, nk, ja.op)
-                        ones = jnp.where(jr.present, 1, 0).astype(jnp.int32)
-                        presence[(ja.key.table, ja.key.field)] = self._aggregate(
-                            safe_keys, ones, nk, "+"
-                        )
-                else:
-                    items = tuple(self._join_gather(el, j, jr, cols) for el in j.items)
-                    out[j.result] = {"columns": items, "present": jr.present}
-
-            # --- scalar reductions -------------------------------------------
-            for sr in spec.scalar_reduces:
-                expr = self._vec(sr.expr, cols, sr.table, arrays)
-                mask = None
-                if sr.match_field is not None:
-                    mv = sr.match_value
-                    if isinstance(mv, Const):
-                        mval = jnp.asarray(mv.value)
-                    elif isinstance(mv, Var):
-                        mval = cols["__params__"][mv.name]
-                    else:
-                        raise UnsupportedProgram(f"match value {mv!r}")
-                    mask = cols[sr.table][sr.match_field] == mval
-                pmask = self._pred_mask(sr.filter_pred, cols, sr.table)
-                if pmask is not None:
-                    mask = pmask if mask is None else (mask & pmask)
-                vals = jnp.broadcast_to(expr, cols_len_shape(cols, sr.table))
-                if mask is not None:
-                    vals = jnp.where(mask, vals, 0)
-                out[sr.var] = jnp.sum(vals)
-
-            # --- distinct reads (group-by result construction) -----------------
-            for dr in spec.distinct_reads:
-                nk = self.num_keys[(dr.table, dr.field)]
-                pres = presence.get((dr.table, dr.field))
-                if pres is None:
-                    keys = cols[dr.table][dr.field]
-                    pres = jax.ops.segment_sum(jnp.ones(keys.shape, jnp.int32), keys, num_segments=nk)
-                key_ids = jnp.arange(nk, dtype=jnp.int32)
-                items = []
-                for el in dr.items:
-                    items.append(self._vec_distinct(el, dr, key_ids, arrays, cols))
-                present = pres > 0
-                if dr.filter_pred is not None:
-                    guard = self._vec_distinct(dr.filter_pred, dr, key_ids, arrays, cols)
-                    present = present & guard.astype(bool)
-                out[dr.result] = {"columns": tuple(items), "present": present}
-
-            # --- filter/project -------------------------------------------------
-            for fp in spec.filter_projects:
-                mask = self._pred_mask(fp.filter_pred, cols, fp.table)
-                items = tuple(self._vec(el, cols, fp.table, arrays) for el in fp.items)
-                n = cols_len_shape(cols, fp.table)[0]
-                if mask is None:
-                    mask = jnp.ones((n,), bool)
-                out[fp.result] = {"columns": items, "present": mask}
-
-            return out
-
-        return run
-
-    # distinct-read item: FieldRef(table,i,field) -> key ids;
-    # ArrayRead(arr, FieldRef(...field)) -> arrays[arr][key_ids]
-    def _vec_distinct(self, e: Expr, dr: DistinctReadSpec, key_ids, arrays, cols):
-        if isinstance(e, FieldRef):
-            if e.field == dr.field:
-                return key_ids
-            raise UnsupportedProgram("distinct read of a non-key field")
-        if isinstance(e, ArrayRead):
-            return arrays[e.array][self._vec_distinct(e.key, dr, key_ids, arrays, cols)]
-        if isinstance(e, BinOp):
-            return _jnp_binop(
-                e.op,
-                self._vec_distinct(e.lhs, dr, key_ids, arrays, cols),
-                self._vec_distinct(e.rhs, dr, key_ids, arrays, cols),
-            )
-        if isinstance(e, Const):
-            return jnp.asarray(e.value)
-        raise UnsupportedProgram(f"distinct item {e!r}")
-
-    # -- parallel aggregation (the forall execution strategies) -----------------
-    def _parallel_aggregate(self, keys, values, nk: int, op: str, mask):
-        c = self.choices
-        if c.parallel == "none" or self.spec.n_parts <= 1:
-            return self._aggregate(keys, values, nk, op)
-        n = self.spec.n_parts
-        pad = (-len(keys)) % n
-        if pad:
-            keys = jnp.concatenate([keys, jnp.zeros((pad,), keys.dtype)])
-            # pad with the op identity, not 0 — a padded 0 lands in segment 0
-            # and corrupts its max/min exactly like an unmasked filtered row
-            fill = jnp.full((pad,), _op_identity(op, values.dtype), values.dtype)
-            values = jnp.concatenate([values, fill])
-        keys = keys.reshape(n, -1)
-        values = values.reshape(n, -1)
-        if c.parallel == "vmap":
-            partials = jax.vmap(lambda k, v: self._aggregate(k, v, nk, op))(keys, values)
-            if op == "+":
-                return partials.sum(0)
-            return partials.max(0) if op == "max" else partials.min(0)
-        if c.parallel == "shard_map":
-            from jax.sharding import PartitionSpec as P
-            from jax import shard_map
-
-            mesh = c.mesh
-            if mesh is None:
-                raise UnsupportedProgram("shard_map parallel requires a mesh")
-            ax = c.axis_name
-
-            def local(k, v):
-                acc = self._aggregate(k[0], v[0], nk, op)
-                if op == "+":
-                    return jax.lax.psum(acc, ax)[None]
-                raise UnsupportedProgram("shard_map max/min")
-
-            f = shard_map(local, mesh=mesh, in_specs=(P(ax), P(ax)), out_specs=P(ax))
-            res = f(keys, values)
-            return res[0]
-        raise ValueError(f"bad parallel {c.parallel}")
-
-    # -- equi-join engine --------------------------------------------------------
-    #
-    # The build side is sorted once; probes binary-search it.  With a
-    # key-unique build side one searchsorted gives the single candidate row
-    # ('lookup').  With duplicate keys the [left, right) searchsorted pair
-    # bounds each probe's match run, and the output is expanded to the
-    # static shape (probe_rows × M) where M is the max key multiplicity
-    # measured at compile time ('expand'); absent slots are masked out.
-
-    def _join_rows(self, j: JoinSpec, mult: int, cols) -> "_JoinRows":
-        bk = cols[j.build_table][j.build_key]
-        pk = cols[j.probe_table][j.probe_fk]
-        n_probe = pk.shape[0]
-        pmask = self._pred_mask(j.probe_filter, cols, j.probe_table)
-        if bk.shape[0] == 0 or mult == 0:
-            # empty build side: every probe misses (never index into the
-            # zero-length build columns — gather would clamp to garbage)
-            return _JoinRows(
-                None, jnp.zeros((n_probe,), jnp.int32), jnp.zeros((n_probe,), bool), True
-            )
-        order = jnp.argsort(bk)
-        sk = bk[order]
-        expand = self.choices.join_method == "expand" or mult > 1
-        if not expand:
-            pos = jnp.clip(jnp.searchsorted(sk, pk), 0, sk.shape[0] - 1)
-            present = sk[pos] == pk
-            if pmask is not None:
-                present = present & pmask
-            return _JoinRows(None, order[pos], present, False)
-        lo = jnp.searchsorted(sk, pk, side="left")
-        hi = jnp.searchsorted(sk, pk, side="right")
-        counts = hi - lo
-        slots = jnp.arange(mult)
-        pos = jnp.clip(lo[:, None] + slots[None, :], 0, sk.shape[0] - 1)  # (n_probe, M)
-        present = slots[None, :] < counts[:, None]
-        if pmask is not None:
-            present = present & pmask[:, None]
-        probe_idx = jnp.broadcast_to(
-            jnp.arange(n_probe, dtype=jnp.int32)[:, None], (n_probe, mult)
-        ).reshape(-1)
-        return _JoinRows(probe_idx, order[pos.reshape(-1)], present.reshape(-1), False)
-
-    def _join_gather(self, e: Expr, j: JoinSpec, jr: "_JoinRows", cols):
-        """Vectorize an expression over the joined (probe, build) row pairs."""
-        if isinstance(e, FieldRef):
-            if e.loopvar == j.probe_var:
-                col = cols[j.probe_table][e.field]
-                return col if jr.probe_idx is None else col[jr.probe_idx]
-            if e.loopvar == j.build_var:
-                col = cols[j.build_table][e.field]
-                if jr.empty_build:
-                    col = jnp.zeros((1,), col.dtype)
-                return col[jr.build_rows]
-            raise UnsupportedProgram(f"join item var {e.loopvar}")
-        if isinstance(e, Const):
-            return jnp.asarray(e.value)
-        if isinstance(e, Var):
-            params = cols.get("__params__", {})
-            if e.name in params:
-                return params[e.name]
-            raise UnsupportedProgram(f"free Var {e.name} in join expr")
-        if isinstance(e, BinOp):
-            return _jnp_binop(
-                e.op, self._join_gather(e.lhs, j, jr, cols), self._join_gather(e.rhs, j, jr, cols)
-            )
-        raise UnsupportedProgram(f"join item {e!r}")
-
-
-@dataclass
-class _JoinRows:
-    """Row pairing produced by the join engine, in static (padded) shape.
-
-    probe_idx is None when output slots align 1:1 with probe rows (lookup
-    path / empty build); otherwise it gathers the probe side into the
-    expanded (probe_rows × M) slot space."""
-
-    probe_idx: Optional[jnp.ndarray]
-    build_rows: jnp.ndarray
-    present: jnp.ndarray
-    empty_build: bool
-
-
-def _op_identity(op: str, dtype) -> Any:
-    """Identity element of an accumulate op for `dtype` — what masked-out /
-    padded rows must contribute so they cannot perturb any segment."""
-    if op == "+":
-        return 0
-    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
-        info = jnp.iinfo(dtype)
-        return info.min if op == "max" else info.max
-    return -jnp.inf if op == "max" else jnp.inf
-
-
-def cols_len_shape(cols, table) -> Tuple[int]:
-    anyc = next(iter(cols[table].values()))
-    return (anyc.shape[0],)
-
-
-def _jnp_binop(op: str, l, r):
-    if op == "+":
-        return l + r
-    if op == "-":
-        return l - r
-    if op == "*":
-        return l * r
-    if op == "/":
-        return l / r
-    if op == "==":
-        return l == r
-    if op == "!=":
-        return l != r
-    if op == "<":
-        return l < r
-    if op == "<=":
-        return l <= r
-    if op == ">":
-        return l > r
-    if op == ">=":
-        return l >= r
-    if op == "and":
-        return l & r
-    if op == "or":
-        return l | r
-    raise ValueError(op)
-
-
-# ===========================================================================
-# Plan — user-facing compiled program
-# ===========================================================================
-
-
-class Plan:
-    """A compiled forelem program.  ``run(db)`` executes on a Database and
-    densifies multiset results back to Python tuples (for comparison with the
-    reference interpreter); ``fn`` is the raw jitted callable."""
-
-    def __init__(self, program: Program, db: Database, choices: Optional[CodegenChoices] = None, jit: bool = True):
-        self.program = program
-        self.db = db
-        self.lowering = JaxLowering(program, db, choices)
-        raw = self.lowering.build()
-        self.fn = jax.jit(raw) if jit else raw
-
-    def input_columns(self) -> Dict[str, Dict[str, jnp.ndarray]]:
-        cols: Dict[str, Dict[str, jnp.ndarray]] = {}
-        needed: Dict[str, Set[str]] = {}
-        from .ir import tables_read
-
-        for t, fs in tables_read(self.program.body).items():
-            needed.setdefault(t, set()).update(fs)
-        sp = self.lowering.spec
-        for agg in sp.aggs:
-            needed.setdefault(agg.table, set()).add(agg.key_field)
-        for j in sp.joins:
-            needed.setdefault(j.probe_table, set()).add(j.probe_fk)
-            needed.setdefault(j.build_table, set()).add(j.build_key)
-            for ja in j.aggs:
-                needed.setdefault(ja.key.table, set()).add(ja.key.field)
-                for t, f in ja.value.fields_used():
-                    needed.setdefault(t, set()).add(f)
-        for t, fields in needed.items():
-            if t not in self.db:
-                continue
-            ms = self.db[t]
-            cols[t] = {}
-            for f in fields:
-                if f in ms.columns:
-                    cols[t][f] = jnp.asarray(ms.field(f))
-        return cols
-
-    def run(self, params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        cols = self.input_columns()
-        if params:
-            cols["__params__"] = {k: jnp.asarray(v) for k, v in params.items()}
-        raw = self.fn(cols)
-        out = {k: _densify(v) for k, v in raw.items() if k in self.program.results}
-        return apply_order_limit(self.program, out)
-
-
-def _densify(v: Any) -> Any:
-    if isinstance(v, dict) and "columns" in v:
-        present = np.asarray(v["present"])
-        cols = [np.asarray(c) for c in v["columns"]]
-        cols = [np.broadcast_to(c, present.shape) if c.ndim == 0 else c for c in cols]
-        idx = np.nonzero(present)[0]
-        return [tuple(_pyval(c[i]) for c in cols) for i in idx]
-    if isinstance(v, jnp.ndarray):
-        return _pyval(np.asarray(v)[()])
-    return v
+__all__ = [
+    "AggSpec",
+    "DistinctReadSpec",
+    "FilterProjectSpec",
+    "JoinAgg",
+    "JoinSpec",
+    "ProgramSpec",
+    "ScalarReduceSpec",
+    "UnsupportedProgram",
+    "extract_spec",
+    "cols_len_shape",
+    "ReferenceBackend",
+    "ReferenceInterpreter",
+    "ReferencePlan",
+    "CodegenChoices",
+    "JaxBackend",
+    "JaxLowering",
+    "Plan",
+]

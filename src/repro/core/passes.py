@@ -20,7 +20,8 @@ from . import transforms as T
 from .partition import partition_direct, partition_indirect
 from .distribution import optimize_distribution, DistributionReport
 from .reformat import auto_reformat, ReformatPlan
-from .lower import CodegenChoices, Plan
+from repro.backends import ExecutablePlan, get_backend
+from repro.backends.jax_vec import CodegenChoices
 
 
 @dataclass
@@ -42,13 +43,16 @@ class OptimizeOptions:
     #           statistics, with a plan cache over (program, stats epoch).
     planner: str = "none"
     plan_cache: Any = None             # planner.PlanCache; None → shared default
+    # executor backend (repro.backends registry): 'jax' (vectorized, jitted)
+    # or 'reference' (the oracle interpreter); future backends plug in here.
+    backend: str = "jax"
 
 
 @dataclass
 class OptimizeResult:
     program: Program
     db: Database
-    plan: Plan
+    plan: ExecutablePlan
     distribution: Optional[DistributionReport]
     reformat: Optional[ReformatPlan]
     trace: List[str] = field(default_factory=list)
@@ -108,6 +112,7 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
             n_parts=opts.n_parts,
             plan_cache=opts.plan_cache,
             allow_shard_map=opts.mesh is not None,
+            backend=opts.backend,
         )
         decision, explain = outcome.decision, outcome.explain
         if outcome.cached_entry is not None:
@@ -154,7 +159,7 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
         mesh=opts.mesh,
         join_method=join_method,
     )
-    plan = Plan(p, db, choices)
+    plan = get_backend(opts.backend).compile(p, db, choices)
     if outcome is not None:
         outcome.store(plan, p)
     return OptimizeResult(

@@ -103,7 +103,9 @@ def apply_reformat(
     db: Database,
     include: Tuple[str, ...] = ("prune", "dict_encode", "compress_range"),
 ) -> Database:
-    out = Database()
+    # carry the owner's epoch salt: reformatting must not silently rewind
+    # the stats epoch of a database whose owner bumped it
+    out = Database(epoch_salt=getattr(db, "_epoch_salt", 0))
     for tname, ms in db.tables.items():
         cur = ms
         for a in plan.actions:

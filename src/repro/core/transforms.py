@@ -622,3 +622,64 @@ def parallelize_groupby(
     p = iteration_space_expansion(p)
     p = loop_fusion(p)
     return p
+
+
+# ---------------------------------------------------------------------------
+# Name canonicalization (engine front door)
+# ---------------------------------------------------------------------------
+
+
+def canonicalize_array_names(program: Program) -> Program:
+    """Rename every accumulator array to ``a0, a1, ...`` in order of first
+    appearance.
+
+    Frontends invent their own internal array names ('agg0' from SQL, 'acc'
+    from the MapReduce spec); the names carry no semantics, but they leak
+    into the program fingerprint and would split the plan cache between
+    frontends.  After canonicalization, the same logical query submitted
+    via SQL or MapReduce prints — and therefore fingerprints — identically.
+    Result multisets, scalars and loop variables are left untouched (they
+    are part of the program's observable interface)."""
+    mapping: Dict[str, str] = {}
+
+    def arr(name: str) -> str:
+        if name not in mapping:
+            mapping[name] = f"a{len(mapping)}"
+        return mapping[name]
+
+    def rw_expr(e: Expr) -> Expr:
+        if isinstance(e, ArrayRead):
+            return ArrayRead(arr(e.array), rw_expr(e.key))
+        if isinstance(e, BinOp):
+            return BinOp(e.op, rw_expr(e.lhs), rw_expr(e.rhs))
+        if isinstance(e, TupleExpr):
+            return TupleExpr(tuple(rw_expr(el) for el in e.elements))
+        return e
+
+    def rw_ix(ix: IndexSet) -> IndexSet:
+        if isinstance(ix, Filtered):
+            return Filtered(ix.table, rw_expr(ix.predicate), rw_ix(ix.base))
+        if isinstance(ix, FieldMatch):
+            return FieldMatch(ix.table, ix.field, rw_expr(ix.value))
+        if isinstance(ix, Blocked):
+            return Blocked(rw_ix(ix.base), ix.n_parts, ix.part_var)
+        return ix
+
+    def rw_stmt(s: Stmt) -> Stmt:
+        if isinstance(s, Forelem):
+            return Forelem(s.loopvar, rw_ix(s.indexset), tuple(rw_stmt(x) for x in s.body))
+        if isinstance(s, Forall):
+            return Forall(s.partvar, s.n_parts, tuple(rw_stmt(x) for x in s.body), s.mesh_axis)
+        if isinstance(s, ForValue):
+            return ForValue(s.valvar, s.range_part, tuple(rw_stmt(x) for x in s.body))
+        if isinstance(s, Accumulate):
+            return Accumulate(arr(s.array), rw_expr(s.key), rw_expr(s.value), s.op, s.partitioned)
+        if isinstance(s, ResultAppend):
+            return ResultAppend(s.result, rw_expr(s.tuple_expr), s.partitioned)
+        if isinstance(s, ScalarAssign):
+            return ScalarAssign(s.var, rw_expr(s.expr), s.op)
+        if isinstance(s, CombinePartials):
+            return CombinePartials(arr(s.array), s.partvar, s.n_parts, s.op)
+        return s
+
+    return program.with_body([rw_stmt(s) for s in program.body])

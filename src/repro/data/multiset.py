@@ -107,9 +107,16 @@ def dict_encode(values: np.ndarray) -> DictColumn:
 class Multiset:
     """A multiset of tuples, stored column-wise."""
 
+    # monotonic creation counter: a process-unique identity for each
+    # Multiset (unlike id(), never reused after garbage collection) —
+    # owners use it to detect table swaps cheaply
+    _next_uid = 0
+
     def __init__(self, name: str, columns: Dict[str, Column]):
         self.name = name
         self.columns = dict(columns)
+        Multiset._next_uid += 1
+        self.uid = Multiset._next_uid
         lens = {len(c) for c in columns.values()}
         if len(lens) > 1:
             raise ValueError(f"ragged columns in multiset {name}: {lens}")
@@ -232,12 +239,20 @@ class Multiset:
 class Database:
     """Named multisets — the program's data environment."""
 
-    def __init__(self, tables: Optional[Dict[str, Multiset]] = None):
+    def __init__(self, tables: Optional[Dict[str, Multiset]] = None, epoch_salt: int = 0):
         self.tables: Dict[str, Multiset] = dict(tables or {})
+        # Mixed into ``stats_epoch``: bumped by owners (e.g. the engine's
+        # Session) on table replacement so that a swap to content the cheap
+        # fingerprint cannot distinguish still lands in a fresh epoch.
+        self._epoch_salt = int(epoch_salt)
 
     def add(self, ms: Multiset) -> "Database":
         self.tables[ms.name] = ms
         return self
+
+    def bump_epoch(self) -> None:
+        """Force the next ``stats_epoch`` into a new value (mutation marker)."""
+        self._epoch_salt += 1
 
     def __getitem__(self, name: str) -> Multiset:
         return self.tables[name]
@@ -253,6 +268,7 @@ class Database:
         added, dropped, reformatted, or their contents change.  Plan-cache
         entries are keyed on this epoch (planner/cache.py)."""
         h = hashlib.sha1()
+        h.update(str(self._epoch_salt).encode())
         for name in sorted(self.tables):
             h.update(self.tables[name].fingerprint().encode())
         return h.hexdigest()

@@ -35,7 +35,7 @@ from repro.core import (
     optimize,
     OptimizeOptions,
 )
-from repro.core.lower import Plan
+from repro.backends import Plan
 from repro.data.multiset import (
     CompressedRangeColumn,
     Database,

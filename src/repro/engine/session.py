@@ -1,0 +1,333 @@
+# The unified query engine's front door (paper §I: "all problems can be
+# expressed in this single intermediate representation, allowing a single
+# 'super'-optimizer to be employed").
+#
+# A ``Session`` owns a Database, a plan cache and the planning options, and
+# routes *every* frontend through one pipeline:
+#
+#   frontend (SQL | MapReduce) → forelem IR → canonicalization →
+#   query-optimization passes → cost planner → plan cache →
+#   backend lowering (repro.backends registry) → results
+#
+# Routing MapReduce through the planner means MR jobs get cost-picked
+# agg_method / parallel / partition-field decisions exactly like SQL — and
+# because array names are canonicalized and fingerprints are
+# name-independent, the same logical query submitted via either frontend
+# hits the *same* plan-cache entry.
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.ir import Program
+from repro.core.passes import OptimizeOptions, OptimizeResult, optimize
+from repro.core.transforms import canonicalize_array_names
+from repro.data.multiset import Database, Multiset
+from repro.frontends.mapreduce import MapReduceSpec, mapreduce_to_forelem
+from repro.frontends.sql import sql_to_forelem
+from repro.planner import PlanCache
+
+
+class EngineError(Exception):
+    pass
+
+
+@dataclass
+class QueryResult:
+    """Outcome of one query submitted through a ``Session``.
+
+    ``results`` maps result names to densified values (lists of tuples for
+    multiset results, Python scalars otherwise); ``rows`` is the
+    conventional single multiset result ``R``."""
+
+    results: Dict[str, Any]
+    source: str                      # 'sql' | 'mapreduce'
+    query: str                       # original SQL text / MR spec repr
+    explain: Optional[str]           # EXPLAIN text (cost planner only)
+    cache_hit: bool                  # plan served from the plan cache
+    dispatch_hit: bool               # whole dispatch served from the warm path
+    elapsed_s: float
+    program: Program
+    decision: Any = None             # planner.Decision
+    plan: Any = None                 # the backend's ExecutablePlan
+
+    @property
+    def rows(self) -> Optional[List[Tuple]]:
+        r = self.results.get("R")
+        return r if isinstance(r, list) else None
+
+    def scalar(self, name: str = "scalar") -> Any:
+        return self.results[name]
+
+
+@dataclass(frozen=True)
+class QueryLogEntry:
+    """Metadata-only record kept in ``Session.history`` (no result rows,
+    no plan objects — a bounded log must not pin those)."""
+
+    source: str
+    query: str
+    cache_hit: bool
+    dispatch_hit: bool
+    elapsed_s: float
+
+
+class Session:
+    """Front door of the unified query engine.
+
+    >>> s = Session(n_parts=8)
+    >>> s.register("access", url=np.array([...]))
+    >>> s.sql("SELECT url, COUNT(url) FROM access GROUP BY url").rows
+    >>> s.mapreduce(MapReduceSpec.count("access", "url")).rows   # same plan-cache entry
+    >>> print(s.explain("SELECT url, COUNT(url) FROM access GROUP BY url"))
+
+    The session owns the stats epoch: registering or replacing a table bumps
+    it (replacement also invalidates the old epoch's plan-cache entries so a
+    stale compiled plan can never be served), and data reformatting done by
+    the optimizer persists across queries (the paper's amortization model).
+    """
+
+    def __init__(
+        self,
+        db: Optional[Database] = None,
+        *,
+        n_parts: int = 1,
+        planner: str = "cost",
+        backend: str = "jax",
+        plan_cache: Optional[PlanCache] = None,
+        reformat: bool = True,
+        expected_runs: int = 20,
+        mesh: Any = None,
+        history_limit: int = 256,
+        revalidate: str = "content",
+    ):
+        if revalidate not in ("content", "signature"):
+            raise EngineError(f"revalidate must be 'content' or 'signature', got {revalidate!r}")
+        self.db = db if db is not None else Database()
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self.n_parts = n_parts
+        self.planner = planner
+        self.backend = backend
+        self.reformat = reformat
+        self.expected_runs = expected_runs
+        self.mesh = mesh
+        self.revalidate = revalidate
+        # lightweight query log: metadata only — QueryResults pin their full
+        # densified rows and compiled plans, which a log must not retain
+        self.history: Deque[QueryLogEntry] = deque(maxlen=history_limit)
+        # warm-dispatch memo: (query key, stats epoch) → OptimizeResult;
+        # bounded like the plan cache — serving traffic with per-request
+        # literals would otherwise pin one compiled plan per query text
+        self._dispatch: Dict[Tuple[str, str], OptimizeResult] = {}
+        self._dispatch_cap = 512
+        # frontend memo: query key → canonicalized Program (parse once);
+        # cleared whenever the database changes (programs bind schemas)
+        self._programs: Dict[str, Program] = {}
+        self._programs_cap = 1024
+        self._epoch = self.db.stats_epoch()
+        self._db_sig = self._signature()
+
+    # -- table registration --------------------------------------------------
+    def register(self, table: Any, **columns: Any) -> "Session":
+        """Register (or replace) a table.
+
+        ``table`` is either a ``Multiset`` or a table name accompanied by
+        column keyword arguments (array-likes).  Replacing an existing table
+        bumps the stats epoch and invalidates the old epoch's plan-cache
+        entries — compiled plans bake in key-space sizes and join
+        multiplicities measured from the data, so serving one against
+        swapped data would be silently wrong."""
+        if isinstance(table, Multiset):
+            ms = table
+            if columns:
+                raise EngineError("pass either a Multiset or name+columns, not both")
+        else:
+            if not columns:
+                raise EngineError(f"register({table!r}) needs column arrays")
+            ms = Multiset.from_columns(str(table), **columns)
+        replacing = ms.name in self.db
+        old_epoch = self._epoch
+        self.db.add(ms)
+        if replacing:
+            self.db.bump_epoch()
+            self.plan_cache.invalidate_epoch(old_epoch)
+        self._refresh_epoch()
+        return self
+
+    def drop(self, name: str) -> "Session":
+        if name not in self.db:
+            raise EngineError(f"no table {name!r}")
+        old_epoch = self._epoch
+        del self.db.tables[name]
+        self.db.bump_epoch()
+        self.plan_cache.invalidate_epoch(old_epoch)
+        self._refresh_epoch()
+        return self
+
+    def tables(self) -> List[str]:
+        return sorted(self.db.tables)
+
+    def schemas(self) -> Dict[str, Sequence[str]]:
+        return {name: ms.field_names() for name, ms in self.db.tables.items()}
+
+    def _signature(self) -> Tuple:
+        """Cheap O(#tables) identity of the database's table objects
+        (``Multiset.uid`` is a monotonic counter — unlike id(), it cannot
+        be reused by a table allocated after another was collected)."""
+        return tuple((name, ms.uid, len(ms)) for name, ms in sorted(self.db.tables.items()))
+
+    def _refresh_epoch(self) -> None:
+        self._epoch = self.db.stats_epoch()
+        self._db_sig = self._signature()
+        # warm-dispatch entries from older epochs are unreachable — prune;
+        # parsed programs bind table schemas that may just have changed
+        self._dispatch = {k: v for k, v in self._dispatch.items() if k[1] == self._epoch}
+        self._programs.clear()
+
+    def _revalidate(self) -> None:
+        """``self.db`` is public and mutable (examples hand it to low-level
+        passes) — detect out-of-band mutation before touching any memo, so
+        a stale parse or compiled plan is never served.
+
+        ``revalidate='content'`` (default) recomputes the content-hashed
+        epoch per dispatch — the same guarantee the hand-wired
+        ``optimize()`` path always had, catching in-place column edits
+        (vectorized hash; cost scales with data size).
+        ``revalidate='signature'`` only compares (name, object id, length)
+        per table — O(#tables), for serving sessions whose tables are
+        treated as immutable: swaps/adds/drops are caught, in-place buffer
+        edits are NOT."""
+        if self.revalidate == "signature":
+            if self._signature() != self._db_sig:
+                self._refresh_epoch()
+            return
+        if self.db.stats_epoch() != self._epoch:
+            self._refresh_epoch()
+
+    # -- frontends -----------------------------------------------------------
+    def _sql_program(self, query: str) -> Tuple[str, Program]:
+        key = f"sql::{query}"
+        prog = self._get_program(key)
+        if prog is None:
+            prog = canonicalize_array_names(sql_to_forelem(query, self.schemas()))
+            self._memo_program(key, prog)
+        return key, prog
+
+    def _mr_program(self, spec: MapReduceSpec) -> Tuple[str, Program]:
+        if spec.table not in self.db:
+            raise EngineError(f"mapreduce over unregistered table {spec.table!r}")
+        key = f"mr::{spec!r}"
+        prog = self._get_program(key)
+        if prog is None:
+            prog = canonicalize_array_names(
+                mapreduce_to_forelem(spec, self.db[spec.table].field_names())
+            )
+            self._memo_program(key, prog)
+        return key, prog
+
+    def _get_program(self, key: str) -> Optional[Program]:
+        prog = self._programs.get(key)
+        if prog is not None:
+            # LRU: re-insert so cap eviction removes the coldest entry
+            self._programs[key] = self._programs.pop(key)
+        return prog
+
+    def _memo_program(self, key: str, prog: Program) -> None:
+        if len(self._programs) >= self._programs_cap:
+            self._programs.pop(next(iter(self._programs)))
+        self._programs[key] = prog
+
+    def sql(self, query: str, params: Optional[Dict[str, Any]] = None) -> QueryResult:
+        """Submit a SQL query through the engine pipeline."""
+        self._revalidate()
+        key, prog = self._sql_program(query)
+        return self._submit(key, prog, params, source="sql", text=query)
+
+    def mapreduce(self, spec: MapReduceSpec, params: Optional[Dict[str, Any]] = None) -> QueryResult:
+        """Submit a declarative MapReduce job through the *same* pipeline as
+        SQL — the job is translated onto the forelem IR (paper §IV) and gets
+        planner-chosen execution strategies and plan caching for free."""
+        self._revalidate()
+        key, prog = self._mr_program(spec)
+        return self._submit(key, prog, params, source="mapreduce", text=repr(spec))
+
+    def explain(self, query: Any) -> str:
+        """Plan (and compile+cache, but do not execute) a SQL string or
+        ``MapReduceSpec`` and return the planner's EXPLAIN text."""
+        if self.planner != "cost":
+            raise EngineError("explain requires a cost-planned session (planner='cost')")
+        self._revalidate()
+        if isinstance(query, MapReduceSpec):
+            key, prog = self._mr_program(query)
+        else:
+            key, prog = self._sql_program(str(query))
+        res, _ = self._prepare(key, prog)
+        return res.explain or "(no explain available)"
+
+    # -- the one pipeline ----------------------------------------------------
+    def _prepare(self, key: str, prog: Program) -> Tuple[OptimizeResult, bool]:
+        """Returns (optimize outcome, dispatch_hit).  Callers run
+        ``_revalidate`` first, so ``self._epoch`` is trustworthy here."""
+        dkey = (key, self._epoch)
+        hit = self._dispatch.get(dkey)
+        if hit is not None:
+            # LRU: re-insert so cap eviction removes the coldest entry
+            self._dispatch[dkey] = self._dispatch.pop(dkey)
+            return hit, True
+        res = optimize(
+            prog,
+            self.db,
+            OptimizeOptions(
+                n_parts=self.n_parts,
+                planner=self.planner,
+                plan_cache=self.plan_cache,
+                backend=self.backend,
+                reformat=self.reformat,
+                expected_runs=self.expected_runs,
+                mesh=self.mesh,
+            ),
+        )
+        # reformatting persists across the session (amortization, §III-C1);
+        # adopting the reformatted database moves the epoch forward
+        if res.db is not self.db:
+            self.db = res.db
+            self._refresh_epoch()
+        if len(self._dispatch) >= self._dispatch_cap:
+            self._dispatch.pop(next(iter(self._dispatch)))
+        self._dispatch[(key, self._epoch)] = res
+        return res, False
+
+    def _submit(
+        self, key: str, prog: Program, params: Optional[Dict[str, Any]], source: str, text: str
+    ) -> QueryResult:
+        t0 = time.perf_counter()
+        res, dispatch_hit = self._prepare(key, prog)
+        out = res.plan.run(params)
+        qr = QueryResult(
+            results=out,
+            source=source,
+            query=text,
+            explain=res.explain,
+            cache_hit=res.cache_hit or dispatch_hit,
+            dispatch_hit=dispatch_hit,
+            elapsed_s=time.perf_counter() - t0,
+            program=res.program,
+            decision=res.decision,
+            plan=res.plan,
+        )
+        self.history.append(
+            QueryLogEntry(source, text, qr.cache_hit, qr.dispatch_hit, qr.elapsed_s)
+        )
+        return qr
+
+    # -- introspection -------------------------------------------------------
+    def cache_stats(self) -> Dict[str, Any]:
+        st = dict(self.plan_cache.stats())
+        st["dispatch_entries"] = len(self._dispatch)
+        return st
+
+    def stats_epoch(self) -> str:
+        self._revalidate()  # never report an epoch a query wouldn't plan under
+        return self._epoch

@@ -24,7 +24,7 @@ from repro.core.ir import (
     TupleExpr,
     walk,
 )
-from repro.core.lower import extract_spec, UnsupportedProgram
+from repro.backends import UnsupportedProgram, extract_spec
 
 
 @dataclass

@@ -48,6 +48,22 @@ class MapReduceSpec:
     reduce_op: str = "+"  # '+', 'max', 'min'
     name: str = "mapreduce"
 
+    @staticmethod
+    def count(table: str, key_field: str, name: str = "mr_count") -> "MapReduceSpec":
+        """Word-count shape: emit (row.key_field, 1), reduce with '+'."""
+        return MapReduceSpec(table, key_field, Const(1), "+", name)
+
+    @staticmethod
+    def aggregate(
+        table: str, key_field: str, value_field: str, reduce_op: str = "+",
+        name: str = "mr_aggregate",
+    ) -> "MapReduceSpec":
+        """Sum/min/max-by-key shape: emit (row.key_field, row.value_field),
+        reduce with ``reduce_op``."""
+        return MapReduceSpec(
+            table, key_field, FieldRef(table, "i", value_field), reduce_op, name
+        )
+
 
 def mapreduce_to_forelem(spec: MapReduceSpec, schema: Sequence[str]) -> Program:
     """The paper's mapping: 'two adjacent forelem loops where the former

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 from typing import Any, Optional, Tuple
 
 from repro.core.ir import Program, program_str
@@ -18,9 +18,13 @@ from repro.core.ir import Program, program_str
 def program_fingerprint(program: Program) -> str:
     """Deterministic fingerprint of a program's semantics: the pretty-printed
     body (stable across parses of the same SQL) plus results/params and the
-    ORDER BY / LIMIT post-ops."""
+    ORDER BY / LIMIT post-ops.
+
+    The display name is *excluded*: two frontends producing the same logical
+    program under different names (e.g. 'sql_groupby' vs 'mapreduce' through
+    the Session front door) must share one cache entry."""
     h = hashlib.sha1()
-    h.update(program_str(program).encode())
+    h.update(program_str(replace(program, name="")).encode())
     h.update(repr(program.results).encode())
     h.update(repr(program.params).encode())
     h.update(repr(program.order_by).encode())

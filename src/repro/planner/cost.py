@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.lower import JoinSpec, ProgramSpec
+from repro.backends import JoinSpec, ProgramSpec
 
 from .cardinality import CardinalityEstimator
 from .stats import DbStats

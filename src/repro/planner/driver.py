@@ -49,12 +49,18 @@ def run_planner(
     plan_cache: Optional[PlanCache] = None,
     allow_shard_map: bool = False,
     coeffs: Any = None,
+    backend: str = "jax",
 ) -> PlannerOutcome:
     cache = plan_cache if plan_cache is not None else DEFAULT_CACHE
     # the cached plan was compiled under these planning inputs — different
     # inputs must miss, even for the same program text (and DEFAULT_CACHE
-    # is shared across callers with different options)
-    fp = f"{program_fingerprint(program)}|n{n_parts}|s{int(allow_shard_map)}|c{hash(coeffs)}"
+    # is shared across callers with different options).  The executor
+    # backend is part of the key: a plan compiled by one backend must never
+    # be served to a caller asking for another.
+    fp = (
+        f"{program_fingerprint(program)}|n{n_parts}|s{int(allow_shard_map)}"
+        f"|c{hash(coeffs)}|b{backend}"
+    )
     epoch = db.stats_epoch()
 
     entry = cache.get(fp, epoch)

@@ -9,7 +9,7 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.core import transforms as T
 from repro.core.ir import Program
-from repro.core.lower import ProgramSpec, UnsupportedProgram, extract_spec
+from repro.backends import ProgramSpec, UnsupportedProgram, extract_spec
 
 from .cardinality import CardinalityEstimator, LoopEstimate
 from .cost import CostCoefficients, CostModel
