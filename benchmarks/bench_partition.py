@@ -1,0 +1,143 @@
+# Partitioned-execution benchmark: data distribution + loop scheduling
+# (backends/partitioned.py) vs the monolithic jitted backend at 1M+ rows.
+#
+#   * GROUP-BY aggregation over uniform and skewed (zipf) keys, per chunk
+#     schedule policy (static / fixed / guided self-scheduling),
+#   * a co-partitioned equi-join (shuffle-on-key) vs the monolithic join,
+#   * the planner's (K, schedule) decision for each distribution.
+#
+# Emits BENCH_partition.json; the ``key_ratios`` block is what
+# benchmarks/check_regression.py gates in CI.
+#
+# Run:  PYTHONPATH=src python benchmarks/bench_partition.py
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.backends import CodegenChoices, PartitionedChoices, Plan, get_backend
+from repro.data.multiset import Database, Multiset
+from repro.frontends.sql import sql_to_forelem
+from repro.planner import collect_stats, plan_query
+
+N_ROWS = 1_500_000
+N_KEYS = 4_096
+N_JOIN_ROWS = 400_000
+K = 8
+SCHEDULES = ("static", "fixed", "guided")
+
+
+def _best(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _agg_db(skewed: bool, seed: int = 0) -> Database:
+    rng = np.random.default_rng(seed)
+    if skewed:
+        keys = (rng.zipf(1.25, N_ROWS) % N_KEYS).astype(np.int32)
+    else:
+        keys = rng.integers(0, N_KEYS, N_ROWS).astype(np.int32)
+    vals = rng.integers(0, 100, N_ROWS).astype(np.int32)
+    return Database().add(Multiset.from_columns("logs", k=keys, v=vals))
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    report: Dict = {
+        "n_rows": N_ROWS, "n_keys": N_KEYS, "k": K,
+        "agg": {}, "join": {}, "key_ratios": {},
+    }
+    backend = get_backend("partitioned")
+    sql = "SELECT k, SUM(v) FROM logs GROUP BY k"
+    prog = sql_to_forelem(sql, {"logs": ["k", "v"]})
+
+    for dist in ("uniform", "skewed"):
+        db = _agg_db(skewed=dist == "skewed")
+        mono = Plan(prog, db, CodegenChoices())
+        expected = sorted(mono.run()["R"])  # warm the jit before timing
+        t_mono = _best(lambda: mono.run())
+
+        entry: Dict = {"sql": sql, "monolithic_us": t_mono * 1e6, "schedules": {}}
+        for sched in SCHEDULES:
+            plan = backend.compile(
+                prog, db,
+                PartitionedChoices(n_partitions=K, schedule=sched, partition_field=("logs", "k")),
+            )
+            got = sorted(plan.run()["R"])
+            assert got == expected, f"partitioned {sched} diverged from monolithic"
+            t = _best(lambda: plan.run(), repeats=2)
+            entry["schedules"][sched] = {
+                "us": t * 1e6,
+                "n_chunks": len(plan.dispatch_log),
+                "monolithic_vs_partitioned": t_mono / t,
+            }
+            rows.append((f"partition_agg_{dist}_{sched}", t * 1e6,
+                         f"{t_mono / t:.2f}x_vs_mono_chunks={len(plan.dispatch_log)}"))
+        # the planner's decision for this distribution, from live stats
+        decision = plan_query(prog, collect_stats(db), n_parts=K, executor="partitioned")
+        entry["planner_choice"] = {
+            "n_partitions": decision.chosen.n_partitions,
+            "schedule": decision.chosen.schedule,
+        }
+        report["agg"][dist] = entry
+        rows.append((f"partition_agg_{dist}_monolithic", t_mono * 1e6,
+                     f"planner_K={decision.chosen.n_partitions}_{decision.chosen.schedule}"))
+
+    # --- co-partitioned equi-join (shuffle-on-key) --------------------------
+    rng = np.random.default_rng(7)
+    fact = Multiset.from_columns(
+        "fact",
+        dim_id=rng.integers(0, N_KEYS, N_JOIN_ROWS).astype(np.int32),
+        amount=rng.integers(0, 50, N_JOIN_ROWS).astype(np.int32),
+    )
+    dim = Multiset.from_columns(
+        "dim",
+        id=np.arange(N_KEYS, dtype=np.int32),
+        region=rng.integers(0, 32, N_KEYS).astype(np.int32),
+    )
+    jdb = Database().add(fact).add(dim)
+    jsql = ("SELECT d.region, COUNT(d.region), SUM(f.amount) FROM fact f, dim d "
+            "WHERE f.dim_id = d.id GROUP BY d.region")
+    jprog = sql_to_forelem(jsql, {"fact": ["dim_id", "amount"], "dim": ["id", "region"]})
+    jmono = Plan(jprog, jdb, CodegenChoices())
+    jexpected = sorted(jmono.run()["R"])
+    t_jmono = _best(lambda: jmono.run())
+    jplan = backend.compile(jprog, jdb, PartitionedChoices(n_partitions=K, schedule="static"))
+    assert sorted(jplan.run()["R"]) == jexpected, "co-partitioned join diverged"
+    t_jpart = _best(lambda: jplan.run(), repeats=2)
+    report["join"] = {
+        "sql": jsql, "n_rows": N_JOIN_ROWS,
+        "monolithic_us": t_jmono * 1e6, "partitioned_us": t_jpart * 1e6,
+        "monolithic_vs_partitioned": t_jmono / t_jpart,
+        "n_chunks": len(jplan.dispatch_log),
+    }
+    rows.append(("partition_join_monolithic", t_jmono * 1e6, "1.0x"))
+    rows.append(("partition_join_partitioned", t_jpart * 1e6, f"{t_jmono / t_jpart:.2f}x_vs_mono"))
+
+    # ratios the CI regression gate watches (higher is better)
+    ag = report["agg"]
+    report["key_ratios"] = {
+        "agg_uniform_mono_vs_partitioned": ag["uniform"]["schedules"]["static"]["monolithic_vs_partitioned"],
+        "agg_skewed_mono_vs_partitioned": ag["skewed"]["schedules"]["static"]["monolithic_vs_partitioned"],
+        "agg_skewed_static_vs_guided": (
+            ag["skewed"]["schedules"]["static"]["us"] / ag["skewed"]["schedules"]["guided"]["us"]
+        ),
+        "join_mono_vs_partitioned": report["join"]["monolithic_vs_partitioned"],
+    }
+    with open("BENCH_partition.json", "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("partition_report", 0.0, "BENCH_partition.json"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,150 @@
+# CI benchmark-regression gate: compare freshly produced BENCH_*.json
+# reports against the committed baselines in benchmarks/baselines/ and exit
+# non-zero when a key performance ratio regressed past the tolerance.
+#
+# The gated metrics are *ratios* (warm-vs-cold speedup, planner-picked vs
+# forced plan, monolithic vs partitioned), which are stable across machines
+# in a way raw microseconds are not; each family is reduced to its
+# geometric mean before comparison.  A fresh value below
+# ``baseline / tolerance`` is a regression.
+#
+# Run:  PYTHONPATH=src python benchmarks/check_regression.py \
+#           [--tolerance 1.5] [--baseline-dir benchmarks/baselines] [--fresh-dir .]
+#
+# Refresh the baselines by re-running the smoke benchmarks and copying the
+# BENCH_*.json files over benchmarks/baselines/ in the same PR that makes
+# them faster (the gate also *documents* expected wins).
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+
+def _geomean(xs: List[float]) -> Optional[float]:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return None
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def _engine_metrics(d: Dict) -> Dict[str, float]:
+    g = _geomean([q["warm_vs_cold_speedup"] for q in d.get("queries", [])])
+    return {"warm_vs_cold_speedup": g} if g else {}
+
+
+def _join_metrics(d: Dict) -> Dict[str, float]:
+    g = _geomean([s["speedup_vs_expand"] for s in d.get("scenarios", [])])
+    return {"lookup_vs_expand_speedup": g} if g else {}
+
+
+def _planner_metrics(d: Dict) -> Dict[str, float]:
+    g = _geomean([q["speedup_vs_fixed"] for q in d.get("queries", [])])
+    return {"cost_vs_fixed_speedup": g} if g else {}
+
+
+def _partition_metrics(d: Dict) -> Dict[str, float]:
+    return {k: float(v) for k, v in d.get("key_ratios", {}).items() if v and v > 0}
+
+
+# report file -> metric extractor (name -> higher-is-better ratio)
+EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
+    "BENCH_engine.json": _engine_metrics,
+    "BENCH_join.json": _join_metrics,
+    "BENCH_planner.json": _planner_metrics,
+    "BENCH_partition.json": _partition_metrics,
+}
+
+
+@dataclass
+class Comparison:
+    report: str
+    metric: str
+    fresh: Optional[float]
+    baseline: float
+    tolerance: float
+
+    @property
+    def floor(self) -> float:
+        return self.baseline / self.tolerance
+
+    @property
+    def regressed(self) -> bool:
+        return self.fresh is None or self.fresh < self.floor
+
+
+def load_metrics(path: str) -> Optional[Dict[str, float]]:
+    """Extract the gated ratios from one report file; None if the file does
+    not exist (callers decide whether that is fatal)."""
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        data = json.load(f)
+    extractor = EXTRACTORS.get(os.path.basename(path))
+    if extractor is None:
+        return {}
+    return extractor(data)
+
+
+def compare(
+    fresh_dir: str, baseline_dir: str, tolerance: float, files: Optional[List[str]] = None
+) -> List[Comparison]:
+    """Compare every known report in ``baseline_dir`` against its fresh
+    counterpart.  Reports without a committed baseline are skipped (first
+    run of a new benchmark); a missing *fresh* report for an existing
+    baseline is a regression (the benchmark rotted or stopped emitting)."""
+    out: List[Comparison] = []
+    names = files if files else sorted(EXTRACTORS)
+    for name in names:
+        base = load_metrics(os.path.join(baseline_dir, name))
+        if base is None or not base:
+            continue  # no baseline committed yet — nothing to gate
+        fresh = load_metrics(os.path.join(fresh_dir, name))
+        for metric, bval in sorted(base.items()):
+            fval = None if fresh is None else fresh.get(metric)
+            out.append(Comparison(name, metric, fval, bval, tolerance))
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", help="report names to gate (default: all known)")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="allowed shrink factor on each ratio (default 1.5x)")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument("--require-baselines", action="store_true",
+                    help="fail (exit 2) when no baselines are found — CI passes this "
+                         "so a missing/misconfigured baseline dir cannot pass silently")
+    args = ap.parse_args(argv)
+
+    comps = compare(args.fresh_dir, args.baseline_dir, args.tolerance, args.files or None)
+    if not comps:
+        if args.require_baselines:
+            print(f"benchmark gate: no baselines found under {args.baseline_dir!r} "
+                  "but --require-baselines is set", file=sys.stderr)
+            return 2
+        print("benchmark gate: no baselines found — nothing to check")
+        return 0
+
+    regressions = [c for c in comps if c.regressed]
+    width = max(len(f"{c.report}:{c.metric}") for c in comps)
+    print(f"benchmark gate (tolerance {args.tolerance}x, baselines in {args.baseline_dir}):")
+    for c in comps:
+        fresh = "MISSING" if c.fresh is None else f"{c.fresh:8.3f}"
+        status = "REGRESSED" if c.regressed else "ok"
+        print(f"  {f'{c.report}:{c.metric}':<{width}}  baseline={c.baseline:8.3f}  "
+              f"fresh={fresh}  floor={c.floor:8.3f}  {status}")
+    if regressions:
+        print(f"\n{len(regressions)} metric(s) regressed past {args.tolerance}x tolerance", file=sys.stderr)
+        return 1
+    print(f"\nall {len(comps)} gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

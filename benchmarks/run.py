@@ -14,6 +14,7 @@ def main() -> None:
         bench_fig2,
         bench_join,
         bench_kernels,
+        bench_partition,
         bench_pipeline,
         bench_planner,
         bench_sched,
@@ -27,6 +28,7 @@ def main() -> None:
         ("planner", bench_planner.run),
         ("join", bench_join.run),
         ("engine", bench_engine.run),
+        ("partition", bench_partition.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -30,6 +30,11 @@ from .codegen import (  # noqa: F401
 )
 from .reference import ReferenceBackend, ReferenceInterpreter, ReferencePlan  # noqa: F401
 from .jax_vec import CodegenChoices, JaxBackend, JaxLowering, Plan  # noqa: F401
+from .partitioned import (  # noqa: F401
+    PartitionedBackend,
+    PartitionedChoices,
+    PartitionedPlan,
+)
 
 __all__ = [
     "ExecutablePlan",
@@ -53,4 +58,7 @@ __all__ = [
     "JaxBackend",
     "JaxLowering",
     "Plan",
+    "PartitionedBackend",
+    "PartitionedChoices",
+    "PartitionedPlan",
 ]

@@ -305,6 +305,28 @@ def extract_spec(program: Program) -> ProgramSpec:
     return ProgramSpec(aggs, dreads, sreds, fprojs, joins, n_parts, mesh_axis)
 
 
+def required_columns(program: Program, spec: ProgramSpec) -> Dict[str, Set[str]]:
+    """table -> columns an executor must materialize to run ``spec``: every
+    field the program reads plus the key/probe columns the extracted op
+    shapes consume.  Shared by the jax and partitioned backends so their
+    input surfaces cannot drift apart."""
+    from repro.core.ir import tables_read
+
+    needed: Dict[str, Set[str]] = {}
+    for t, fs in tables_read(program.body).items():
+        needed.setdefault(t, set()).update(fs)
+    for agg in spec.aggs:
+        needed.setdefault(agg.table, set()).add(agg.key_field)
+    for j in spec.joins:
+        needed.setdefault(j.probe_table, set()).add(j.probe_fk)
+        needed.setdefault(j.build_table, set()).add(j.build_key)
+        for ja in j.aggs:
+            needed.setdefault(ja.key.table, set()).add(ja.key.field)
+            for t, f in ja.value.fields_used():
+                needed.setdefault(t, set()).add(f)
+    return needed
+
+
 def _collect_array_reads(e: Expr, out: Set[str]) -> None:
     if isinstance(e, ArrayRead):
         out.add(e.array)

@@ -7,7 +7,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -23,7 +23,6 @@ from repro.core.ir import (
     Program,
     Var,
     apply_order_limit,
-    tables_read,
 )
 from repro.data.multiset import Database, DictColumn
 
@@ -36,6 +35,7 @@ from .codegen import (
     _op_identity,
     cols_len_shape,
     extract_spec,
+    required_columns,
 )
 from .interface import register_backend
 
@@ -185,6 +185,58 @@ class JaxLowering:
             return segops.segreduce(keys, values, num_keys)
         raise ValueError(f"bad agg method {method}")
 
+    # -- shared per-op input preparation ----------------------------------------
+    #
+    # These encapsulate the masking subtleties fixed in PR 2 (masked/padded
+    # rows must contribute the op *identity*, funneled to key 0) so every
+    # backend that evaluates an aggregation — monolithic or per-chunk
+    # (backends/partitioned.py) — goes through one implementation.
+
+    def _agg_value(self, value: Expr, keys, cols, table: str, arrays):
+        if isinstance(value, Const):
+            return jnp.full(
+                keys.shape, value.value,
+                dtype=jnp.int32 if isinstance(value.value, int) else jnp.float32,
+            )
+        return jnp.broadcast_to(self._vec(value, cols, table, arrays), keys.shape)
+
+    def agg_inputs(self, agg, cols, arrays):
+        """(keys, values, presence-ones, mask) for one AggSpec over ``cols``
+        (which may be a chunk's column view)."""
+        keys = cols[agg.table][agg.key_field]
+        values = self._agg_value(agg.value, keys, cols, agg.table, arrays)
+        mask = self._pred_mask(agg.filter_pred, cols, agg.table)
+        if agg.member_filter is not None:
+            mf, mt, mfld = agg.member_filter
+            member = jnp.isin(cols[agg.table][mf], cols[mt][mfld])
+            mask = member if mask is None else (mask & member)
+        if mask is not None:
+            # masked-out rows must contribute the op's *identity* —
+            # funneling them into segment 0 with value 0 corrupts that
+            # segment's max/min whenever its true extremum is beyond 0
+            values = jnp.where(mask, values, _op_identity(agg.op, values.dtype))
+            keys = jnp.where(mask, keys, 0)
+        ones = jnp.ones(keys.shape, jnp.int32)
+        if mask is not None:
+            ones = jnp.where(mask, ones, 0)
+        return keys, values, ones, mask
+
+    def join_agg_inputs(self, ja, j: JoinSpec, jr: "_JoinRows", cols):
+        """(keys, values, presence-ones) for one JoinAgg over the joined
+        row pairs ``jr`` (absent slots contribute the op identity)."""
+        keys = self._join_gather(ja.key, j, jr, cols)
+        if isinstance(ja.value, Const):
+            values = jnp.full(
+                keys.shape, ja.value.value,
+                dtype=jnp.int32 if isinstance(ja.value.value, int) else jnp.float32,
+            )
+        else:
+            values = jnp.broadcast_to(self._join_gather(ja.value, j, jr, cols), keys.shape)
+        values = jnp.where(jr.present, values, _op_identity(ja.op, values.dtype))
+        keys = jnp.where(jr.present, keys, 0)
+        ones = jnp.where(jr.present, 1, 0).astype(jnp.int32)
+        return keys, values, ones
+
     # -- build the callable -------------------------------------------------------
     def build(self) -> Callable[[Dict[str, Dict[str, jnp.ndarray]]], Dict[str, Any]]:
         spec = self.spec
@@ -196,32 +248,9 @@ class JaxLowering:
 
             # --- aggregations ------------------------------------------------
             for agg in spec.aggs:
-                keys = cols[agg.table][agg.key_field]
                 nk = self.num_keys[(agg.table, agg.key_field)]
-                if isinstance(agg.value, Const):
-                    values = jnp.full(keys.shape, agg.value.value, dtype=jnp.int32 if isinstance(agg.value.value, int) else jnp.float32)
-                else:
-                    values = self._vec(agg.value, cols, agg.table, arrays)
-                    values = jnp.broadcast_to(values, keys.shape)
-                mask = self._pred_mask(agg.filter_pred, cols, agg.table)
-                if agg.member_filter is not None:
-                    mf, mt, mfld = agg.member_filter
-                    member = jnp.isin(cols[agg.table][mf], cols[mt][mfld])
-                    mask = member if mask is None else (mask & member)
-                if mask is not None:
-                    # masked-out rows must contribute the op's *identity* —
-                    # funneling them into segment 0 with value 0 corrupts
-                    # that segment's max/min whenever its true extremum is
-                    # on the other side of 0
-                    values = jnp.where(mask, values, _op_identity(agg.op, values.dtype))
-                    safe_keys = jnp.where(mask, keys, 0)
-                else:
-                    safe_keys = keys
-                acc = self._parallel_aggregate(safe_keys, values, nk, agg.op, mask)
-                arrays[agg.array] = acc
-                ones = jnp.ones(keys.shape, jnp.int32)
-                if mask is not None:
-                    ones = jnp.where(mask, ones, 0)
+                safe_keys, values, ones, mask = self.agg_inputs(agg, cols, arrays)
+                arrays[agg.array] = self._parallel_aggregate(safe_keys, values, nk, agg.op, mask)
                 presence[(agg.table, agg.key_field)] = self._parallel_aggregate(safe_keys, ones, nk, "+", mask)
 
             # --- joins (unique-lookup or duplicate-key expansion) -------------
@@ -232,21 +261,8 @@ class JaxLowering:
                 if j.aggs:
                     for ja in j.aggs:
                         nk = self.num_keys[(ja.key.table, ja.key.field)]
-                        keys = self._join_gather(ja.key, j, jr, cols)
-                        if isinstance(ja.value, Const):
-                            values = jnp.full(
-                                keys.shape,
-                                ja.value.value,
-                                dtype=jnp.int32 if isinstance(ja.value.value, int) else jnp.float32,
-                            )
-                        else:
-                            values = jnp.broadcast_to(
-                                self._join_gather(ja.value, j, jr, cols), keys.shape
-                            )
-                        values = jnp.where(jr.present, values, _op_identity(ja.op, values.dtype))
-                        safe_keys = jnp.where(jr.present, keys, 0)
+                        safe_keys, values, ones = self.join_agg_inputs(ja, j, jr, cols)
                         arrays[ja.array] = self._aggregate(safe_keys, values, nk, ja.op)
-                        ones = jnp.where(jr.present, 1, 0).astype(jnp.int32)
                         presence[(ja.key.table, ja.key.field)] = self._aggregate(
                             safe_keys, ones, nk, "+"
                         )
@@ -346,7 +362,11 @@ class JaxLowering:
             return partials.max(0) if op == "max" else partials.min(0)
         if c.parallel == "shard_map":
             from jax.sharding import PartitionSpec as P
-            from jax import shard_map
+
+            try:  # jax ≥ 0.5 exports it at top level
+                from jax import shard_map
+            except ImportError:  # 0.4.x
+                from jax.experimental.shard_map import shard_map
 
             mesh = c.mesh
             if mesh is None:
@@ -354,10 +374,21 @@ class JaxLowering:
             ax = c.axis_name
 
             def local(k, v):
-                acc = self._aggregate(k[0], v[0], nk, op)
+                # each device may hold several of the n_parts row blocks
+                # (mesh smaller than n_parts): reduce them all locally, then
+                # combine across the axis with the op's collective —
+                # psum/pmax/pmin are the partitioned-merge analogues, so
+                # max/min no longer raise UnsupportedProgram here
+                acc = self._aggregate(k.reshape(-1), v.reshape(-1), nk, op)
                 if op == "+":
-                    return jax.lax.psum(acc, ax)[None]
-                raise UnsupportedProgram("shard_map max/min")
+                    acc = jax.lax.psum(acc, ax)
+                elif op == "max":
+                    acc = jax.lax.pmax(acc, ax)
+                elif op == "min":
+                    acc = jax.lax.pmin(acc, ax)
+                else:
+                    raise UnsupportedProgram(f"shard_map op {op}")
+                return acc[None]
 
             f = shard_map(local, mesh=mesh, in_specs=(P(ax), P(ax)), out_specs=P(ax))
             res = f(keys, values)
@@ -373,7 +404,10 @@ class JaxLowering:
     # static shape (probe_rows × M) where M is the max key multiplicity
     # measured at compile time ('expand'); absent slots are masked out.
 
-    def _join_rows(self, j: JoinSpec, mult: int, cols) -> "_JoinRows":
+    def _join_rows(self, j: JoinSpec, mult: int, cols, build_sorted=None) -> "_JoinRows":
+        """``build_sorted`` is an optional precomputed ``(order, sorted_keys)``
+        of the build side in ``cols`` — chunked executors that probe the same
+        build partition many times pass it to sort once per partition."""
         bk = cols[j.build_table][j.build_key]
         pk = cols[j.probe_table][j.probe_fk]
         n_probe = pk.shape[0]
@@ -384,8 +418,11 @@ class JaxLowering:
             return _JoinRows(
                 None, jnp.zeros((n_probe,), jnp.int32), jnp.zeros((n_probe,), bool), True
             )
-        order = jnp.argsort(bk)
-        sk = bk[order]
+        if build_sorted is not None:
+            order, sk = build_sorted
+        else:
+            order = jnp.argsort(bk)
+            sk = bk[order]
         expand = self.choices.join_method == "expand" or mult > 1
         if not expand:
             pos = jnp.clip(jnp.searchsorted(sk, pk), 0, sk.shape[0] - 1)
@@ -465,19 +502,7 @@ class Plan:
 
     def input_columns(self) -> Dict[str, Dict[str, jnp.ndarray]]:
         cols: Dict[str, Dict[str, jnp.ndarray]] = {}
-        needed: Dict[str, Set[str]] = {}
-        for t, fs in tables_read(self.program.body).items():
-            needed.setdefault(t, set()).update(fs)
-        sp = self.lowering.spec
-        for agg in sp.aggs:
-            needed.setdefault(agg.table, set()).add(agg.key_field)
-        for j in sp.joins:
-            needed.setdefault(j.probe_table, set()).add(j.probe_fk)
-            needed.setdefault(j.build_table, set()).add(j.build_key)
-            for ja in j.aggs:
-                needed.setdefault(ja.key.table, set()).add(ja.key.field)
-                for t, f in ja.value.fields_used():
-                    needed.setdefault(t, set()).add(f)
+        needed = required_columns(self.program, self.lowering.spec)
         for t, fields in needed.items():
             if t not in self.db:
                 continue

@@ -1,0 +1,418 @@
+# Partitioned executor backend (paper §III-A: "many traditional compiler
+# techniques for parallelization such as data distribution and loop
+# scheduling ... can be re-used"): execute a compiled plan over
+# hash/range-partitioned tables in bounded-memory chunks.
+#
+# Data distribution: each table an operator iterates is split into K
+# partitions — hash-partitioned on the planner-chosen partition field (or
+# the operator's own key/join column) when one is available, range
+# (row-block) partitioned otherwise.  Equi-joins shuffle *both* sides with
+# the same hash of the join key, so co-partitioned matches never cross a
+# partition boundary and each partition joins independently.
+#
+# Loop scheduling: the dispatch order and chunk sizes over the partitioned
+# iteration space come from ``repro.sched.loop_schedule`` ``ChunkPolicy``
+# objects (static / fixed / guided self-scheduling, §III-A2) — a chunk
+# never crosses a partition boundary, so skewed partitions are simply
+# broken into more chunks and load-balance across (virtual) workers.
+#
+# Each chunk runs through the *existing* jax_vec kernels (``JaxLowering``'s
+# aggregation and join engines); partial aggregates are merged with the
+# accumulate op's own reduction (+/max/min re-aggregation), streaming
+# results (projections, materialized joins) concatenate, and group read-out
+# happens once over the merged accumulators.  This is the first backend
+# that can execute a query whose working set exceeds a single kernel
+# invocation: tables stay host-resident (numpy; the storage layer), and
+# only one chunk's column slices plus the dense accumulators are uploaded
+# to the device at a time.
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.ir import Const, Program, apply_order_limit
+from repro.data.multiset import Database
+from repro.sched.loop_schedule import make_policy
+
+from .codegen import _densify, required_columns
+from .interface import register_backend
+from .jax_vec import CodegenChoices, JaxLowering
+
+SCHEDULES = ("static", "fixed", "guided")
+# accepted alternate spellings (sched/loop_schedule.py's own policy names)
+_SCHEDULE_ALIASES = {"gss": "guided"}
+
+
+def normalize_schedule(name: str) -> str:
+    """Canonical schedule-policy name; raises ValueError for names the
+    partitioned backend does not execute (validate knobs *early* — at
+    Session construction / optimize entry — not after planning)."""
+    name = _SCHEDULE_ALIASES.get(name, name)
+    if name not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {name!r}; expected one of {SCHEDULES} (or 'gss')"
+        )
+    return name
+
+# multiplicative hash mix (Knuth/Fibonacci): decorrelates partition ids
+# from arithmetic key patterns; int64 wraparound is intentional
+_HASH_MIX = np.int64(0x9E3779B1)
+
+
+def hash_partition(values: np.ndarray, k: int) -> np.ndarray:
+    """Deterministic partition id per value in [0, k).  Both sides of an
+    equi-join use this same function, which is what makes co-partitioned
+    joins local to a partition."""
+    v = np.asarray(values).astype(np.int64, copy=False)
+    return np.mod(v * _HASH_MIX, np.int64(max(1, k)))
+
+
+@dataclass
+class PartitionedChoices:
+    """Strategy knobs of the partitioned backend: the wrapped jax_vec
+    choices (which kernels run per chunk) plus the data-distribution and
+    loop-scheduling decision."""
+
+    base: CodegenChoices = field(default_factory=CodegenChoices)
+    n_partitions: int = 4
+    schedule: str = "static"          # 'static' | 'fixed' | 'guided'
+    partition_field: Optional[Tuple[str, str]] = None  # (table, field)
+
+
+@dataclass(frozen=True)
+class ChunkDispatch:
+    """One dispatched chunk (the backend's observable schedule)."""
+
+    op: str
+    partition: int
+    rows: int
+    worker: int
+
+
+@dataclass
+class _Layout:
+    """A table's K-way partitioning: row indices grouped by partition id
+    plus the K+1 prefix bounds into that grouping."""
+
+    order: np.ndarray
+    bounds: np.ndarray
+    mode: str  # 'hash(<field>)' | 'range'
+
+    def rows(self, p: int) -> np.ndarray:
+        return self.order[self.bounds[p]: self.bounds[p + 1]]
+
+
+class PartitionedPlan:
+    """A compiled forelem program bound to partitioned data.  ``run``
+    executes chunk-by-chunk and merges partials; results are densified
+    exactly like the jax backend's ``Plan.run``."""
+
+    def __init__(
+        self,
+        program: Program,
+        db: Database,
+        choices: Optional[PartitionedChoices] = None,
+    ):
+        if choices is None:
+            choices = PartitionedChoices()
+        elif isinstance(choices, CodegenChoices):
+            choices = PartitionedChoices(base=choices)
+        choices = replace(choices, schedule=normalize_schedule(choices.schedule))
+        self.program = program
+        self.db = db
+        self.choices = choices
+        self.k = max(1, int(choices.n_partitions))
+        # per-chunk kernels come from the existing vectorized lowering; the
+        # forall strategy inside a chunk is always 'none' (the partitioned
+        # runner IS the parallel execution strategy)
+        self.lowering = JaxLowering(program, db, replace(choices.base, parallel="none"))
+        self.spec = self.lowering.spec
+        # numpy view of every needed column (sliced per chunk at run time)
+        self._cols_np: Dict[str, Dict[str, np.ndarray]] = {}
+        needed = required_columns(program, self.spec)
+        pf = choices.partition_field
+        if pf is not None and pf[0] in db and pf[1] in db[pf[0]].columns:
+            needed.setdefault(pf[0], set()).add(pf[1])
+        for t, fields in needed.items():
+            if t not in db:
+                continue
+            ms = db[t]
+            self._cols_np[t] = {
+                f: np.asarray(ms.field(f)) for f in fields if f in ms.columns
+            }
+        self._layouts: Dict[Tuple[str, Optional[str]], _Layout] = {}
+        self.dispatch_log: List[ChunkDispatch] = []
+
+    # -- data distribution ---------------------------------------------------
+    def _table_len(self, table: str) -> int:
+        return len(self.db[table]) if table in self.db else 0
+
+    def _partition_key_for(self, table: str, preferred: Optional[str]) -> Optional[str]:
+        """Column to hash-partition ``table`` on: the operator's preferred
+        key column, else the planner-chosen partition field when it lives on
+        this table; None → range partitioning."""
+        if preferred is not None and preferred in self._cols_np.get(table, {}):
+            return preferred
+        pf = self.choices.partition_field
+        if pf is not None and pf[0] == table and pf[1] in self._cols_np.get(table, {}):
+            return pf[1]
+        return None
+
+    def _layout(self, table: str, key_field: Optional[str]) -> _Layout:
+        ck = (table, key_field)
+        cached = self._layouts.get(ck)
+        if cached is not None:
+            return cached
+        n = self._table_len(table)
+        if key_field is None or self.k == 1:
+            # range distribution: contiguous row blocks
+            bounds = np.array([(i * n) // self.k for i in range(self.k + 1)], np.int64)
+            layout = _Layout(np.arange(n, dtype=np.int64), bounds, "range")
+        else:
+            pid = hash_partition(self._cols_np[table][key_field], self.k)
+            order = np.argsort(pid, kind="stable").astype(np.int64)
+            bounds = np.searchsorted(pid[order], np.arange(self.k + 1)).astype(np.int64)
+            layout = _Layout(order, bounds, f"hash({key_field})")
+        self._layouts[ck] = layout
+        return layout
+
+    # -- loop scheduling -----------------------------------------------------
+    def _chunks(self, layout: _Layout, op: str) -> List[Tuple[int, np.ndarray]]:
+        """Chunk the partitioned iteration space under the configured
+        ``ChunkPolicy``.  Chunks are clipped at partition boundaries (a
+        chunk must see exactly one partition's rows — joins depend on it),
+        so a skewed partition simply yields more chunks."""
+        total = int(layout.bounds[-1])
+        if total == 0:
+            return []
+        policy = make_policy(self.choices.schedule, total, self.k)
+        policy.reset()
+        out: List[Tuple[int, np.ndarray]] = []
+        pos, w, p = 0, 0, 0
+        while pos < total:
+            while layout.bounds[p + 1] <= pos:
+                p += 1
+            size = policy.next_chunk(total - pos, self.k, w % self.k, [])
+            size = max(1, min(size, int(layout.bounds[p + 1]) - pos))
+            out.append((p, layout.order[pos: pos + size]))
+            self.dispatch_log.append(ChunkDispatch(op, p, size, w % self.k))
+            pos += size
+            w += 1
+        return out
+
+    # -- chunk column views ----------------------------------------------------
+    def _global_cols(self, params: Optional[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
+        """Column environment for expression evaluation.  Tables stay as
+        host-resident numpy views — only the per-chunk slices are uploaded
+        (jnp.asarray in ``_slice``); jnp ops coerce any numpy side-table
+        operand on demand.  Uploading every full column here would make
+        peak device residency identical to the monolithic backend and
+        defeat the bounded-memory execution the planner priced."""
+        cols: Dict[str, Dict[str, Any]] = {t: dict(fs) for t, fs in self._cols_np.items()}
+        if params:
+            cols["__params__"] = {k: jnp.asarray(v) for k, v in params.items()}
+        return cols
+
+    def _slice(self, table: str, idx: np.ndarray) -> Dict[str, jnp.ndarray]:
+        return {f: jnp.asarray(a[idx]) for f, a in self._cols_np.get(table, {}).items()}
+
+    # -- partial merging -----------------------------------------------------
+    @staticmethod
+    def _merge(acc, part, op: str):
+        if acc is None:
+            return part
+        if op == "+":
+            return acc + part
+        if op == "max":
+            return jnp.maximum(acc, part)
+        if op == "min":
+            return jnp.minimum(acc, part)
+        raise ValueError(f"bad merge op {op}")
+
+    # -- execution -------------------------------------------------------------
+    def run(self, params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        low = self.lowering
+        spec = self.spec
+        self.dispatch_log = []
+        cols = self._global_cols(params)
+        arrays: Dict[str, Any] = {}
+        presence: Dict[Tuple[str, str], Any] = {}
+        out: Dict[str, Any] = {}
+
+        # --- aggregations: per-chunk partials, merged with the op ----------
+        for agg in spec.aggs:
+            nk = low.num_keys[(agg.table, agg.key_field)]
+            layout = self._layout(agg.table, self._partition_key_for(agg.table, agg.key_field))
+            acc = pres = None
+            for _, idx in self._chunks(layout, f"agg:{agg.array}"):
+                c2 = dict(cols)
+                c2[agg.table] = self._slice(agg.table, idx)
+                keys, values, ones, _ = low.agg_inputs(agg, c2, arrays)
+                acc = self._merge(acc, low._aggregate(keys, values, nk, agg.op), agg.op)
+                pres = self._merge(pres, low._aggregate(keys, ones, nk, "+"), "+")
+            if acc is None:  # empty table: identity accumulators
+                acc = jnp.zeros((nk,), jnp.int32)
+                pres = jnp.zeros((nk,), jnp.int32)
+            arrays[agg.array] = acc
+            presence[(agg.table, agg.key_field)] = pres
+
+        # --- joins: shuffle-on-key, each partition joins locally ------------
+        for j, mult in zip(spec.joins, low.join_multiplicity):
+            probe_layout = self._layout(j.probe_table, self._partition_key_for(j.probe_table, j.probe_fk))
+            build_layout = self._layout(j.build_table, self._partition_key_for(j.build_table, j.build_key))
+            co_partitioned = probe_layout.mode.startswith("hash") and build_layout.mode.startswith("hash")
+            jaccs: Dict[str, Any] = {}
+            jpres: Dict[Tuple[str, str], Any] = {}
+            # (original probe row, emitted tuple): chunks arrive in hash-
+            # partition order, but the visible row order must not depend on
+            # the (K, schedule) choice — restore probe-row-major order (the
+            # jax backend's emission order) before returning
+            rows_out: List[Tuple[int, Tuple]] = []
+            # a partition's build side is probed by every chunk of that
+            # partition: slice + sort it once, not per chunk
+            build_cache: Dict[int, Tuple[Dict[str, Any], Optional[Tuple[Any, Any]]]] = {}
+
+            def build_side(p: int):
+                key = p if co_partitioned else -1
+                hit = build_cache.get(key)
+                if hit is None:
+                    # co-partitioned: only partition p of the build side can
+                    # match; otherwise (range-partitioned probe) every build
+                    # row is a candidate and the build side is broadcast
+                    bidx = build_layout.rows(p) if co_partitioned else build_layout.order
+                    bcols = self._slice(j.build_table, bidx)
+                    bk = bcols.get(j.build_key)
+                    if bk is not None and bk.shape[0]:
+                        order = jnp.argsort(bk)
+                        hit = (bcols, (order, bk[order]))
+                    else:
+                        hit = (bcols, None)
+                    build_cache[key] = hit
+                return hit
+
+            for p, idx in self._chunks(probe_layout, f"join:{j.probe_table}⋈{j.build_table}"):
+                bcols, bsorted = build_side(p)
+                c2 = dict(cols)
+                c2[j.probe_table] = self._slice(j.probe_table, idx)
+                c2[j.build_table] = bcols
+                jr = low._join_rows(j, mult, c2, build_sorted=bsorted)
+                if j.aggs:
+                    for ja in j.aggs:
+                        nk = low.num_keys[(ja.key.table, ja.key.field)]
+                        keys, values, ones = low.join_agg_inputs(ja, j, jr, c2)
+                        jaccs[ja.array] = self._merge(
+                            jaccs.get(ja.array), low._aggregate(keys, values, nk, ja.op), ja.op
+                        )
+                        jpres[(ja.key.table, ja.key.field)] = self._merge(
+                            jpres.get((ja.key.table, ja.key.field)),
+                            low._aggregate(keys, ones, nk, "+"),
+                            "+",
+                        )
+                else:
+                    items = tuple(low._join_gather(el, j, jr, c2) for el in j.items)
+                    chunk_rows = _densify({"columns": items, "present": jr.present})
+                    sel = np.nonzero(np.asarray(jr.present))[0]
+                    local_probe = (
+                        np.asarray(jr.probe_idx)[sel] if jr.probe_idx is not None else sel
+                    )
+                    rows_out.extend(zip(idx[local_probe].tolist(), chunk_rows))
+            if j.aggs:
+                for ja in j.aggs:
+                    nk = low.num_keys[(ja.key.table, ja.key.field)]
+                    arrays[ja.array] = (
+                        jaccs[ja.array] if ja.array in jaccs else jnp.zeros((nk,), jnp.int32)
+                    )
+                    pk = (ja.key.table, ja.key.field)
+                    presence[pk] = jpres.get(pk, jnp.zeros((nk,), jnp.int32))
+            else:
+                # stable: within one probe row, match slots keep their
+                # sorted-build emission order — identical to the jax backend
+                out[j.result] = [r for _, r in sorted(rows_out, key=lambda t: t[0])]
+
+        # --- scalar reductions: chunked partial sums -------------------------
+        for sr in spec.scalar_reduces:
+            layout = self._layout(sr.table, self._partition_key_for(sr.table, None))
+            total = None
+            for _, idx in self._chunks(layout, f"reduce:{sr.var}"):
+                c2 = dict(cols)
+                c2[sr.table] = self._slice(sr.table, idx)
+                expr = low._vec(sr.expr, c2, sr.table, arrays)
+                mask = None
+                if sr.match_field is not None:
+                    mv = sr.match_value
+                    if isinstance(mv, Const):
+                        mval = jnp.asarray(mv.value)
+                    else:
+                        mval = c2["__params__"][mv.name]
+                    mask = c2[sr.table][sr.match_field] == mval
+                pmask = low._pred_mask(sr.filter_pred, c2, sr.table)
+                if pmask is not None:
+                    mask = pmask if mask is None else (mask & pmask)
+                vals = jnp.broadcast_to(expr, (int(idx.shape[0]),))
+                if mask is not None:
+                    vals = jnp.where(mask, vals, 0)
+                total = self._merge(total, jnp.sum(vals), "+")
+            out[sr.var] = total if total is not None else jnp.asarray(0)
+
+        # --- distinct reads: one read-out over the MERGED accumulators ------
+        for dr in spec.distinct_reads:
+            nk = low.num_keys[(dr.table, dr.field)]
+            pres = presence.get((dr.table, dr.field))
+            if pres is None:
+                keys = cols[dr.table][dr.field]
+                pres = jnp.zeros((nk,), jnp.int32).at[keys].add(1)
+            key_ids = jnp.arange(nk, dtype=jnp.int32)
+            items = tuple(low._vec_distinct(el, dr, key_ids, arrays, cols) for el in dr.items)
+            present = pres > 0
+            if dr.filter_pred is not None:
+                guard = low._vec_distinct(dr.filter_pred, dr, key_ids, arrays, cols)
+                present = present & guard.astype(bool)
+            out[dr.result] = _densify({"columns": items, "present": present})
+
+        # --- filter/project: streaming chunks, concatenated ------------------
+        for fp in spec.filter_projects:
+            layout = self._layout(fp.table, self._partition_key_for(fp.table, None))
+            rows_out = []
+            for _, idx in self._chunks(layout, f"project:{fp.result}"):
+                c2 = dict(cols)
+                c2[fp.table] = self._slice(fp.table, idx)
+                mask = low._pred_mask(fp.filter_pred, c2, fp.table)
+                items = tuple(low._vec(el, c2, fp.table, arrays) for el in fp.items)
+                if mask is None:
+                    mask = jnp.ones((int(idx.shape[0]),), bool)
+                chunk_rows = _densify({"columns": items, "present": mask})
+                sel = np.nonzero(np.asarray(mask))[0]
+                rows_out.extend(zip(idx[sel].tolist(), chunk_rows))
+            # original row order, independent of the partitioning
+            out[fp.result] = [r for _, r in sorted(rows_out, key=lambda t: t[0])]
+
+        final = {k: _densify(v) for k, v in out.items() if k in self.program.results}
+        return apply_order_limit(self.program, final)
+
+    # -- introspection -------------------------------------------------------
+    def describe(self) -> str:
+        pf = self.choices.partition_field
+        pfs = f"{pf[0]}.{pf[1]}" if pf else "-"
+        return (
+            f"partition={pfs} K={self.k} schedule={self.choices.schedule} "
+            f"chunks={len(self.dispatch_log)}"
+        )
+
+
+class PartitionedBackend:
+    """Planner-driven data distribution + loop scheduling over the jax_vec
+    kernels: the third registered executor."""
+
+    name = "partitioned"
+
+    def compile(
+        self, program: Program, db: Database, choices: Any = None
+    ) -> PartitionedPlan:
+        return PartitionedPlan(program, db, choices)
+
+
+register_backend(PartitionedBackend())

@@ -43,9 +43,18 @@ class OptimizeOptions:
     #           statistics, with a plan cache over (program, stats epoch).
     planner: str = "none"
     plan_cache: Any = None             # planner.PlanCache; None → shared default
-    # executor backend (repro.backends registry): 'jax' (vectorized, jitted)
-    # or 'reference' (the oracle interpreter); future backends plug in here.
+    # executor backend (repro.backends registry): 'jax' (vectorized, jitted),
+    # 'reference' (the oracle interpreter) or 'partitioned' (K-way data
+    # distribution + chunk-scheduled execution over the jax kernels).
     backend: str = "jax"
+    # -- partitioned-backend knobs (backend='partitioned') -------------------
+    # K-way data distribution; None → planner-chosen (planner='cost') or
+    # max(1, n_parts) with the fixed pipeline.
+    n_partitions: Optional[int] = None
+    # chunk-schedule policy over the partitioned iteration space
+    # (sched/loop_schedule.py): 'auto' → planner-chosen ('static' with the
+    # fixed pipeline); or pin 'static' | 'fixed' | 'guided'.
+    schedule: str = "auto"
 
 
 @dataclass
@@ -100,6 +109,15 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     partition_field = opts.partition_field
     join_method = opts.join_method
     n_parts = opts.n_parts
+    n_partitions = opts.n_partitions or max(1, opts.n_parts)
+    if opts.schedule == "auto":
+        schedule = "static"
+    else:
+        # validate (and canonicalize 'gss'→'guided') before planning, so an
+        # unknown policy fails here, not after the whole pipeline has run
+        from repro.backends.partitioned import normalize_schedule
+
+        schedule = normalize_schedule(opts.schedule)
     outcome = None
     decision = None
     explain = None
@@ -113,6 +131,8 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
             plan_cache=opts.plan_cache,
             allow_shard_map=opts.mesh is not None,
             backend=opts.backend,
+            n_partitions=opts.n_partitions,
+            schedule=None if opts.schedule == "auto" else schedule,
         )
         decision, explain = outcome.decision, outcome.explain
         if outcome.cached_entry is not None:
@@ -128,6 +148,10 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
         partition_field = chosen.partition_field
         if chosen.join_method is not None:
             join_method = chosen.join_method
+        if chosen.n_partitions is not None:
+            n_partitions = chosen.n_partitions
+        if chosen.schedule is not None:
+            schedule = chosen.schedule
         if chosen.parallel == "none":
             n_parts = 1  # partitioning buys nothing without parallel execution
         log("planned", p)
@@ -135,7 +159,10 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
         raise ValueError(f"unknown planner {opts.planner!r} (use 'none' or 'cost')")
 
     # -- 3/4. parallelization ---------------------------------------------------
-    if n_parts > 1 and opts.partition != "none":
+    # The partitioned backend distributes the *data* (hash/range partitions
+    # + scheduled chunk dispatch) instead of restructuring the IR, so the
+    # loop-level partitioning transform is skipped for it.
+    if n_parts > 1 and opts.partition != "none" and opts.backend != "partitioned":
         if opts.partition == "direct":
             p = partition_direct(p, n_parts, mesh_axis=opts.mesh_axis)
         else:
@@ -153,12 +180,21 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     log("distributed", p)
 
     # -- 6. codegen ----------------------------------------------------------------
-    choices = CodegenChoices(
+    choices: Any = CodegenChoices(
         agg_method=agg_method,
         parallel=parallel_exec if n_parts > 1 else "none",
         mesh=opts.mesh,
         join_method=join_method,
     )
+    if opts.backend == "partitioned":
+        from repro.backends.partitioned import PartitionedChoices
+
+        choices = PartitionedChoices(
+            base=choices,
+            n_partitions=n_partitions,
+            schedule=schedule,
+            partition_field=partition_field,
+        )
     plan = get_backend(opts.backend).compile(p, db, choices)
     if outcome is not None:
         outcome.store(plan, p)

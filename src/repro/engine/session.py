@@ -96,6 +96,8 @@ class Session:
         n_parts: int = 1,
         planner: str = "cost",
         backend: str = "jax",
+        n_partitions: Optional[int] = None,
+        schedule: str = "auto",
         plan_cache: Optional[PlanCache] = None,
         reformat: bool = True,
         expected_runs: int = 20,
@@ -105,11 +107,23 @@ class Session:
     ):
         if revalidate not in ("content", "signature"):
             raise EngineError(f"revalidate must be 'content' or 'signature', got {revalidate!r}")
+        if schedule != "auto":
+            from repro.backends.partitioned import normalize_schedule
+
+            try:
+                schedule = normalize_schedule(schedule)
+            except ValueError as e:
+                raise EngineError(str(e)) from None
         self.db = db if db is not None else Database()
         self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
         self.n_parts = n_parts
         self.planner = planner
         self.backend = backend
+        # partitioned-backend knobs (ignored by the monolithic executors):
+        # K-way data distribution and the chunk-schedule policy; None /
+        # 'auto' leave the choice to the cost planner
+        self.n_partitions = n_partitions
+        self.schedule = schedule
         self.reformat = reformat
         self.expected_runs = expected_runs
         self.mesh = mesh
@@ -284,6 +298,8 @@ class Session:
                 planner=self.planner,
                 plan_cache=self.plan_cache,
                 backend=self.backend,
+                n_partitions=self.n_partitions,
+                schedule=self.schedule,
                 reformat=self.reformat,
                 expected_runs=self.expected_runs,
                 mesh=self.mesh,

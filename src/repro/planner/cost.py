@@ -42,6 +42,10 @@ class CostCoefficients:
     c_shard_fixed: float = 5e4   # shard_map trace/collective setup
     c_join_probe: float = 3.0    # searchsorted probe per row
     c_output: float = 1.0        # materializing one output cell
+    # -- partitioned execution (backends/partitioned.py) --------------------
+    c_part_launch: float = 6e3   # per-chunk dispatch / kernel-launch overhead
+    c_mem_rows: float = 1e6      # rows whose working set fits device memory
+    c_mem_penalty: float = 4.0   # per element beyond c_mem_rows (spill/paging)
 
 
 def default_coefficients(backend: Optional[str] = None) -> CostCoefficients:
@@ -103,6 +107,133 @@ class CostModel:
             return base_cost / speedup + combine + c.c_shard_fixed
         raise ValueError(f"bad parallel {parallel}")
 
+    # -- partitioned execution ----------------------------------------------
+    def memory_penalty(self, resident_rows: float) -> float:
+        """Penalty for a working set exceeding device memory: monolithic
+        execution keeps every row resident; partitioned execution only one
+        chunk (≈ rows / K), which is what makes larger-than-memory tables a
+        *costed* reason to partition."""
+        c = self.coeffs
+        return max(0.0, resident_rows - c.c_mem_rows) * c.c_mem_penalty
+
+    def est_chunks(self, schedule: str, n_partitions: int, rows: float) -> float:
+        """Expected dispatch count of a schedule policy over K partitions
+        (sched/loop_schedule.py): static pre-blocks ≈ one chunk per
+        partition; fixed uses rows/(8K)-sized chunks; guided (GSS) starts at
+        remaining/K and decays geometrically."""
+        if rows <= 0:
+            return 0.0
+        K = max(1, n_partitions)
+        if schedule == "fixed":
+            return 8.0 * K
+        if schedule in ("guided", "gss"):
+            return max(float(K), K * math.log2(max(2.0, rows / K)))
+        if schedule == "static":
+            return float(K)
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    def partition_skew(
+        self, table: str, partition_field: Optional[Tuple[str, str]], n_partitions: int, schedule: str
+    ) -> float:
+        """Hash-partitioning on a skewed field leaves one partition with
+        most of the rows.  A static schedule dispatches it as one block
+        (full skew penalty); the self-scheduling policies break it into
+        shrinking chunks that rebalance, retaining only a fraction of it."""
+        base = self._skew_penalty(table, partition_field, "partitioned", n_partitions)
+        if schedule == "static":
+            return base
+        # self-scheduling re-chunks the heavy partition into shrinking
+        # pieces, so most of the imbalance is recovered (§III-A2)
+        return 1.0 + (base - 1.0) * 0.15
+
+    def spec_cost_partitioned(
+        self,
+        spec: ProgramSpec,
+        agg_method: str,
+        n_partitions: int,
+        schedule: str,
+        partition_field: Optional[Tuple[str, str]] = None,
+        join_method: str = "auto",
+    ) -> Tuple[float, List[Tuple[str, float]]]:
+        """Cost of executing the spec on the partitioned backend: the same
+        per-operator kernel work as the monolithic plan, plus the shuffle
+        pass, per-chunk launch overhead and per-chunk accumulator combine —
+        against the bounded per-chunk working set (memory penalty on
+        rows/K instead of rows)."""
+        c = self.coeffs
+        K = max(1, n_partitions)
+        breakdown: List[Tuple[str, float]] = []
+
+        for agg in spec.aggs:
+            rows = float(self.stats.n_rows(agg.table))
+            nk = float(self.stats.key_space(agg.table, agg.key_field))
+            base = self.agg_cost(rows, nk, agg_method, agg.op) + rows * c.c_scan
+            nch = self.est_chunks(schedule, K, rows)
+            # skew is priced on the field the runtime actually hashes on:
+            # the backend always prefers the op's own key column
+            # (PartitionedPlan._partition_key_for), not the global choice
+            pf = (agg.table, agg.key_field)
+            total = (
+                base * self.partition_skew(agg.table, pf, K, schedule)
+                + rows * c.c_scan                     # hash + shuffle pass
+                + nch * c.c_part_launch               # chunk dispatches
+                + nch * nk * c.c_combine              # partial-accumulator merges
+                + self.memory_penalty(rows / K)       # per-chunk working set
+            )
+            breakdown.append(
+                (f"agg {agg.array}[{agg.table}.{agg.key_field}] ({agg_method}, K={K}, {schedule})", total)
+            )
+
+        for sr in spec.scalar_reduces:
+            rows = float(self.stats.n_rows(sr.table))
+            nch = self.est_chunks(schedule, K, rows)
+            breakdown.append(
+                (f"reduce {sr.var} over {sr.table} (K={K})", rows * c.c_scan + nch * c.c_part_launch)
+            )
+
+        for dr in spec.distinct_reads:
+            nk = float(self.stats.key_space(dr.table, dr.field))
+            breakdown.append(
+                (f"distinct {dr.table}.{dr.field}", nk * c.c_output * max(1, len(dr.items)))
+            )
+
+        for fp in spec.filter_projects:
+            rows = float(self.stats.n_rows(fp.table))
+            sel = self.est.selectivity(fp.filter_pred, fp.table)
+            nch = self.est_chunks(schedule, K, rows)
+            breakdown.append(
+                (
+                    f"filter/project {fp.table} (K={K})",
+                    rows * c.c_scan
+                    + sel * rows * c.c_output * max(1, len(fp.items))
+                    + nch * c.c_part_launch,
+                )
+            )
+
+        for j in spec.joins:
+            method = self.resolve_join_method(j, join_method)
+            probe = float(self.stats.n_rows(j.probe_table))
+            build = float(self.stats.n_rows(j.build_table))
+            nch = self.est_chunks(schedule, K, probe)
+            cost = (
+                self.join_cost(j, method, agg_method)
+                * self.partition_skew(j.probe_table, (j.probe_table, j.probe_fk), K, schedule)
+                + (probe + build) * c.c_scan          # shuffle both sides on the key
+                + nch * c.c_part_launch
+                + self.memory_penalty((probe + build) / K)
+            )
+            if j.aggs:
+                nk = sum(
+                    float(self.stats.key_space(ja.key.table, ja.key.field)) for ja in j.aggs
+                )
+                cost += nch * nk * c.c_combine
+            kind = "join⋈agg" if j.aggs else "join"
+            breakdown.append(
+                (f"{kind} {j.probe_table}⋈{j.build_table} ({method}, K={K}, {schedule})", cost)
+            )
+
+        return sum(x for _, x in breakdown), breakdown
+
     # -- joins ---------------------------------------------------------------
     def resolve_join_method(self, j: JoinSpec, requested: str) -> str:
         """'auto' → unique-lookup only when the build key is *provably*
@@ -160,6 +291,12 @@ class CostModel:
             base += rows * c.c_scan  # key/value/mask streaming
             total = self.parallel_cost(base, rows, num_keys, parallel, n_parts)
             total *= self._skew_penalty(agg.table, partition_field, parallel, n_parts)
+            # monolithic execution keeps the whole table resident (shard_map
+            # splits it across the mesh); the partitioned backend's bounded
+            # chunks are the costed alternative (spec_cost_partitioned)
+            total += self.memory_penalty(
+                rows / n_parts if parallel == "shard_map" else rows
+            )
             breakdown.append((f"agg {agg.array}[{agg.table}.{agg.key_field}] ({agg_method})", total))
 
         for sr in spec.scalar_reduces:
@@ -180,6 +317,9 @@ class CostModel:
         for j in spec.joins:
             method = self.resolve_join_method(j, join_method)
             cost = self.join_cost(j, method, agg_method)
+            cost += self.memory_penalty(
+                float(self.stats.n_rows(j.probe_table)) + float(self.stats.n_rows(j.build_table))
+            )
             kind = "join⋈agg" if j.aggs else "join"
             breakdown.append(
                 (f"{kind} {j.probe_table}⋈{j.build_table} ({method})", cost)

@@ -50,16 +50,19 @@ def run_planner(
     allow_shard_map: bool = False,
     coeffs: Any = None,
     backend: str = "jax",
+    n_partitions: Optional[int] = None,
+    schedule: Optional[str] = None,
 ) -> PlannerOutcome:
     cache = plan_cache if plan_cache is not None else DEFAULT_CACHE
     # the cached plan was compiled under these planning inputs — different
     # inputs must miss, even for the same program text (and DEFAULT_CACHE
     # is shared across callers with different options).  The executor
     # backend is part of the key: a plan compiled by one backend must never
-    # be served to a caller asking for another.
+    # be served to a caller asking for another; likewise a pinned K /
+    # schedule produces a different compiled plan than the planner's pick.
     fp = (
         f"{program_fingerprint(program)}|n{n_parts}|s{int(allow_shard_map)}"
-        f"|c{hash(coeffs)}|b{backend}"
+        f"|c{hash(coeffs)}|b{backend}|K{n_partitions}|sch{schedule}"
     )
     epoch = db.stats_epoch()
 
@@ -79,7 +82,8 @@ def run_planner(
 
     stats = collect_stats(db)
     decision = plan_query(
-        program, stats, n_parts=n_parts, coeffs=coeffs, allow_shard_map=allow_shard_map
+        program, stats, n_parts=n_parts, coeffs=coeffs, allow_shard_map=allow_shard_map,
+        executor=backend, n_partitions=n_partitions, schedule=schedule,
     )
     explain = render_explain(decision, name=program.name, cache_hit=False)
     return PlannerOutcome(decision.chosen.program, decision, explain, False, fp, epoch, cache)

@@ -16,6 +16,7 @@ from .cost import CostCoefficients, CostModel
 from .stats import DbStats
 
 AGG_METHODS = ("dense", "sort", "onehot", "kernel")
+PARTITION_SCHEDULES = ("static", "fixed", "guided")
 
 
 @dataclass(frozen=True)
@@ -30,6 +31,11 @@ class Candidate:
     cost: float
     breakdown: Tuple[Tuple[str, float], ...] = ()
     join_method: Optional[str] = None  # 'lookup' | 'expand'; None = no joins
+    # partitioned-executor distribution decision (backends/partitioned.py):
+    # K-way hash/range data distribution + chunk-schedule policy; None when
+    # the candidate targets a monolithic executor
+    n_partitions: Optional[int] = None
+    schedule: Optional[str] = None
 
 
 @dataclass
@@ -47,17 +53,37 @@ class Decision:
         return len(self.candidates)
 
 
-def _partition_candidates(spec: ProgramSpec, stats: DbStats) -> List[Optional[Tuple[str, str]]]:
+def _partition_candidates(
+    spec: ProgramSpec, stats: DbStats, include_join_keys: bool = False
+) -> List[Optional[Tuple[str, str]]]:
     """Candidate (table, field) pairs for indirect partitioning: the
-    aggregation keys (the paper's X = Access.url choice)."""
+    aggregation keys (the paper's X = Access.url choice), plus — for the
+    partitioned executor — the equi-join probe keys (shuffle-on-key)."""
     seen: List[Optional[Tuple[str, str]]] = []
     for agg in spec.aggs:
         tf = (agg.table, agg.key_field)
         if tf not in seen:
             seen.append(tf)
+    if include_join_keys:
+        for j in spec.joins:
+            tf = (j.probe_table, j.probe_fk)
+            if tf not in seen:
+                seen.append(tf)
     if not seen:
         seen.append(None)
     return seen
+
+
+def _k_choices(n_parts: int, override: Optional[int]) -> Tuple[int, ...]:
+    """Partition counts worth pricing: K=1 (effectively monolithic — the
+    launch-overhead floor), the session's parallel width, and 8 (the
+    conventional device count)."""
+    if override is not None:
+        return (max(1, override),)
+    ks = {1, 8}
+    if n_parts > 1:
+        ks.add(n_parts)
+    return tuple(sorted(ks))
 
 
 def _join_methods(spec: ProgramSpec, stats: DbStats) -> Sequence[Optional[str]]:
@@ -83,16 +109,25 @@ def enumerate_candidates(
     coeffs: Optional[CostCoefficients] = None,
     allow_shard_map: bool = False,
     backend: Optional[str] = None,
+    executor: Optional[str] = None,
+    n_partitions: Optional[int] = None,
+    schedule: Optional[str] = None,
 ) -> List[Candidate]:
     """Enumerate and price every plan in the strategy space.  Programs whose
     shape the vectorized lowering does not support are skipped (they would
     fail at codegen anyway).  Raises UnsupportedProgram when *no* variant is
-    supported."""
+    supported.
+
+    ``executor`` is the ExecutorBackend name the plan will compile on; for
+    ``'partitioned'`` the strategy space is K-way data distribution ×
+    chunk-schedule policy (spec_cost_partitioned) instead of the monolithic
+    forall strategies.  ``n_partitions`` / ``schedule`` pin those axes."""
     model = CostModel(stats, coeffs, backend=backend)
     orders: List[Tuple[str, Program]] = [("as-written", program)]
     for k, variant in enumerate(T.join_orders(program)):
         orders.append((f"interchanged[{k}]", variant))
 
+    partitioned = executor == "partitioned"
     out: List[Candidate] = []
     last_err: Optional[Exception] = None
     for order_name, prog in orders:
@@ -103,6 +138,32 @@ def enumerate_candidates(
             continue
         has_aggs = bool(spec.aggs) or any(j.aggs for j in spec.joins)
         methods: Sequence[str] = AGG_METHODS if has_aggs else ("dense",)
+        if partitioned:
+            ks = _k_choices(n_parts, n_partitions)
+            schedules = PARTITION_SCHEDULES if schedule is None else (schedule,)
+            # the runtime hash-partitions every operator on its *own* key
+            # column, so partition-field variants execute identically —
+            # enumerate only the primary one (what EXPLAIN reports)
+            pfields = _partition_candidates(spec, stats, include_join_keys=True)[:1]
+            for method in methods:
+                for jm in _join_methods(spec, stats):
+                    for pf in pfields:
+                        for K in ks:
+                            # K=1 has a single partition: every policy
+                            # degenerates to one block, so price static only
+                            # (unless a policy was pinned explicitly)
+                            for sched in schedules if (K > 1 or schedule) else ("static",):
+                                cost, breakdown = model.spec_cost_partitioned(
+                                    spec, method, K, sched, pf, join_method=jm or "auto"
+                                )
+                                out.append(
+                                    Candidate(
+                                        order_name, prog, method, "none", pf, cost,
+                                        tuple(breakdown), join_method=jm,
+                                        n_partitions=K, schedule=sched,
+                                    )
+                                )
+            continue
         parallels: List[str] = ["none"]
         if n_parts > 1:
             parallels.append("vmap")
@@ -135,18 +196,30 @@ def plan_query(
     coeffs: Optional[CostCoefficients] = None,
     allow_shard_map: bool = False,
     backend: Optional[str] = None,
+    executor: Optional[str] = None,
+    n_partitions: Optional[int] = None,
+    schedule: Optional[str] = None,
 ) -> Decision:
     """Pick the cheapest plan; on unsupported shapes fall back to the
     as-written program with the pipeline's fixed defaults."""
     est = CardinalityEstimator(stats)
     try:
         cands = enumerate_candidates(
-            program, stats, n_parts, coeffs, allow_shard_map=allow_shard_map, backend=backend
+            program, stats, n_parts, coeffs, allow_shard_map=allow_shard_map,
+            backend=backend, executor=executor, n_partitions=n_partitions, schedule=schedule,
         )
         chosen = cands[0]
         return Decision(chosen, cands, est.loop_estimates(chosen.program), stats.epoch)
     except UnsupportedProgram as e:
-        fallback = Candidate("as-written", program, "dense", "vmap" if n_parts > 1 else "none", None, float("inf"))
+        if executor == "partitioned":
+            fallback = Candidate(
+                "as-written", program, "dense", "none", None, float("inf"),
+                n_partitions=max(1, n_partitions or n_parts), schedule=schedule or "static",
+            )
+        else:
+            fallback = Candidate(
+                "as-written", program, "dense", "vmap" if n_parts > 1 else "none", None, float("inf")
+            )
         return Decision(
             fallback, [fallback], est.loop_estimates(program), stats.epoch, fallback_reason=str(e)
         )

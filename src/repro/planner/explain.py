@@ -8,6 +8,16 @@ from typing import Optional
 from .enumerate import Decision
 
 
+def _distribution(c) -> str:
+    """Chosen data distribution of a partitioned-executor candidate:
+    `` partition=<table>.<field> K=<k> schedule=<policy>`` (empty for
+    monolithic candidates)."""
+    if c.n_partitions is None:
+        return ""
+    pf = f"{c.partition_field[0]}.{c.partition_field[1]}" if c.partition_field else "rows"
+    return f" partition={pf} K={c.n_partitions} schedule={c.schedule}"
+
+
 def _fmt(x: float) -> str:
     if x >= 1e15:
         return "inf"
@@ -38,9 +48,10 @@ def render_explain(
     c = decision.chosen
     pf = f"{c.partition_field[0]}.{c.partition_field[1]}" if c.partition_field else "-"
     jm = f" join_method={c.join_method}" if c.join_method else ""
+    dist = _distribution(c)
     lines.append(
         f"  chosen: order={c.order} agg_method={c.agg_method} parallel={c.parallel} "
-        f"partition_field={pf}{jm} est_cost≈{_fmt(c.cost)}"
+        f"partition_field={pf}{jm}{dist} est_cost≈{_fmt(c.cost)}"
     )
     for op, cost in c.breakdown:
         lines.append(f"    {op:<56s} cost≈{_fmt(cost)}")
@@ -55,7 +66,7 @@ def render_explain(
             ajm = f" join_method={a.join_method}" if a.join_method else ""
             lines.append(
                 f"    order={a.order} agg_method={a.agg_method} parallel={a.parallel} "
-                f"partition_field={apf}{ajm} est_cost≈{_fmt(a.cost)}"
+                f"partition_field={apf}{ajm}{_distribution(a)} est_cost≈{_fmt(a.cost)}"
             )
         if len(alts) > max_alternatives:
             lines.append(f"    ... {len(alts) - max_alternatives} more")

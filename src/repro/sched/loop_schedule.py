@@ -144,7 +144,7 @@ def make_policy(name: str, total: int, n_workers: int, **kw) -> ChunkPolicy:
         return StaticBlock(total, n_workers)
     if name == "fixed":
         return FixedChunk(kw.get("size", max(1, total // (8 * n_workers))))
-    if name == "gss":
+    if name in ("gss", "guided"):  # 'guided' = the OpenMP-style spelling
         return GuidedSelfScheduling(kw.get("min_chunk", 1))
     if name == "tss":
         return TrapezoidSelfScheduling(total, n_workers, kw.get("first"), kw.get("last", 1))

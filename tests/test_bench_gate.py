@@ -1,0 +1,114 @@
+# Unit tests for the CI benchmark-regression gate
+# (benchmarks/check_regression.py): metric extraction, tolerance math, and
+# the exit status CI keys on.
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    os.path.join(os.path.dirname(__file__), "..", "benchmarks", "check_regression.py"),
+)
+gate = importlib.util.module_from_spec(_SPEC)
+sys.modules["check_regression"] = gate  # dataclass resolution needs the registry
+_SPEC.loader.exec_module(gate)
+
+
+def _write(dirpath, name, payload):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, name), "w") as f:
+        json.dump(payload, f)
+
+
+def _engine_report(speedups):
+    return {"queries": [{"warm_vs_cold_speedup": s} for s in speedups]}
+
+
+def _partition_report(ratios):
+    return {"key_ratios": ratios}
+
+
+def test_geomean_extraction(tmp_path):
+    _write(tmp_path, "BENCH_engine.json", _engine_report([4.0, 9.0]))
+    m = gate.load_metrics(str(tmp_path / "BENCH_engine.json"))
+    assert m["warm_vs_cold_speedup"] == pytest.approx(6.0)  # sqrt(4*9)
+
+
+def test_missing_file_returns_none(tmp_path):
+    assert gate.load_metrics(str(tmp_path / "BENCH_engine.json")) is None
+
+
+def test_within_tolerance_passes(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, "BENCH_engine.json", _engine_report([6.0]))
+    _write(fresh, "BENCH_engine.json", _engine_report([4.5]))  # 6/1.5 = 4.0 floor
+    comps = gate.compare(str(fresh), str(base), tolerance=1.5)
+    assert len(comps) == 1 and not comps[0].regressed
+    assert gate.main([f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 0
+
+
+def test_regression_fails(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, "BENCH_engine.json", _engine_report([6.0]))
+    _write(fresh, "BENCH_engine.json", _engine_report([3.0]))  # below 4.0 floor
+    comps = gate.compare(str(fresh), str(base), tolerance=1.5)
+    assert comps[0].regressed
+    assert gate.main([f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 1
+
+
+def test_missing_fresh_report_is_a_regression(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, "BENCH_engine.json", _engine_report([6.0]))
+    os.makedirs(fresh, exist_ok=True)
+    assert gate.main([f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 1
+
+
+def test_no_baseline_is_not_gated(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    os.makedirs(base, exist_ok=True)
+    _write(fresh, "BENCH_engine.json", _engine_report([6.0]))
+    assert gate.compare(str(fresh), str(base), tolerance=1.5) == []
+    assert gate.main([f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 0
+    # ... unless CI demands baselines: a missing/misconfigured baseline dir
+    # must fail loudly, not pass as a silent no-op
+    assert gate.main(["--require-baselines",
+                      f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 2
+
+
+def test_committed_baselines_exist_and_are_tracked():
+    # regression guard for the .gitignore trap: the unanchored BENCH_*.json
+    # patterns used to ignore benchmarks/baselines/*.json too, leaving the
+    # CI gate with nothing to compare against
+    import subprocess
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    bdir = os.path.join(root, "benchmarks", "baselines")
+    names = sorted(os.listdir(bdir))
+    assert names, "no committed baselines"
+    out = subprocess.run(
+        ["git", "check-ignore"] + [os.path.join("benchmarks", "baselines", n) for n in names],
+        cwd=root, capture_output=True, text=True,
+    )
+    assert out.returncode != 0, f"baselines are gitignored: {out.stdout}"
+
+
+def test_partition_key_ratios_gated_individually(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, "BENCH_partition.json",
+           _partition_report({"agg_uniform_mono_vs_partitioned": 1.0, "join_mono_vs_partitioned": 2.0}))
+    _write(fresh, "BENCH_partition.json",
+           _partition_report({"agg_uniform_mono_vs_partitioned": 0.9, "join_mono_vs_partitioned": 1.0}))
+    comps = {c.metric: c for c in gate.compare(str(fresh), str(base), tolerance=1.5)}
+    assert not comps["agg_uniform_mono_vs_partitioned"].regressed  # 0.9 >= 1.0/1.5
+    assert comps["join_mono_vs_partitioned"].regressed             # 1.0 <  2.0/1.5
+
+
+def test_tolerance_is_configurable(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write(base, "BENCH_engine.json", _engine_report([6.0]))
+    _write(fresh, "BENCH_engine.json", _engine_report([3.5]))
+    assert gate.main(["--tolerance=1.5", f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 1
+    assert gate.main(["--tolerance=2.0", f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 0
