@@ -2,17 +2,28 @@
 # (backends/partitioned.py) vs the monolithic jitted backend at 1M+ rows.
 #
 #   * GROUP-BY aggregation over uniform and skewed (zipf) keys, per chunk
-#     schedule policy (static / fixed / guided self-scheduling),
+#     schedule policy (static / fixed / guided self-scheduling), executed
+#     with bucketed-jit chunk kernels + async double-buffered dispatch
+#     (the production path) and — for reference — the eager serial chunk
+#     path the backend shipped with,
 #   * a co-partitioned equi-join (shuffle-on-key) vs the monolithic join,
-#   * the planner's (K, schedule) decision for each distribution.
+#   * the planner's (K, schedule) decision for each distribution,
+#   * jit chunk-kernel compile counts per case (``key_counts`` — gated
+#     lower-is-better by benchmarks/check_regression.py: a shape-bucket
+#     regression that explodes recompiles fails CI even when small-scale
+#     wall-clock hides it).
 #
-# Emits BENCH_partition.json; the ``key_ratios`` block is what
-# benchmarks/check_regression.py gates in CI.
+# Emits BENCH_partition.json; the ``key_ratios`` block is what the CI
+# regression gate compares as higher-is-better ratios.
+#
+# Row counts scale via BENCH_N_ROWS / BENCH_JOIN_ROWS (the nightly
+# workflow runs ~4x the CI smoke scale).
 #
 # Run:  PYTHONPATH=src python benchmarks/bench_partition.py
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import Dict, List, Tuple
 
@@ -23,9 +34,9 @@ from repro.data.multiset import Database, Multiset
 from repro.frontends.sql import sql_to_forelem
 from repro.planner import collect_stats, plan_query
 
-N_ROWS = 1_500_000
+N_ROWS = int(os.environ.get("BENCH_N_ROWS", 1_500_000))
 N_KEYS = 4_096
-N_JOIN_ROWS = 400_000
+N_JOIN_ROWS = int(os.environ.get("BENCH_JOIN_ROWS", 400_000))
 K = 8
 SCHEDULES = ("static", "fixed", "guided")
 
@@ -39,6 +50,19 @@ def _best(fn, repeats: int = 3) -> float:
     return best
 
 
+def _best_interleaved(variants: Dict[str, object], repeats: int = 3) -> Dict[str, float]:
+    """Best-of-N per variant, with the variants timed round-robin in each
+    round — machine-speed drift (shared runners) then biases every variant
+    equally instead of whichever happened to run during a slow phase."""
+    best = {name: float("inf") for name in variants}
+    for _ in range(repeats):
+        for name, fn in variants.items():
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
 def _agg_db(skewed: bool, seed: int = 0) -> Database:
     rng = np.random.default_rng(seed)
     if skewed:
@@ -49,11 +73,34 @@ def _agg_db(skewed: bool, seed: int = 0) -> Database:
     return Database().add(Multiset.from_columns("logs", k=keys, v=vals))
 
 
+def _jit_block(plan) -> Dict:
+    """Compile accounting of one partitioned plan after its timed runs,
+    with the invariant the gate enforces: compiles ≤ shape buckets ×
+    kernels.  A join kernel's jit signature includes the padded *build*
+    side too, so buckets are counted as distinct (probe, build) bucket
+    pairs — co-partitioned build partitions straddling a bucket boundary
+    are legitimate extra signatures, not a recompile regression."""
+    rep = plan.runtime_report()["jit"]
+    distinct_buckets = len({(d.bucket, d.build_bucket) for d in plan.dispatch_log if d.bucket})
+    assert rep["compiles"] <= max(1, distinct_buckets) * max(1, rep["kernels"]), (
+        f"jit compiles exploded: {rep['compiles']} > "
+        f"{distinct_buckets} buckets x {rep['kernels']} kernels"
+    )
+    return {
+        "compiles": rep["compiles"],
+        "hits": rep["hits"],
+        "overflows": rep["overflows"],
+        "hit_rate": rep["hit_rate"],
+        "kernels": rep["kernels"],
+        "distinct_buckets": distinct_buckets,
+    }
+
+
 def run() -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
     report: Dict = {
         "n_rows": N_ROWS, "n_keys": N_KEYS, "k": K,
-        "agg": {}, "join": {}, "key_ratios": {},
+        "agg": {}, "join": {}, "key_ratios": {}, "key_counts": {},
     }
     backend = get_backend("partitioned")
     sql = "SELECT k, SUM(v) FROM logs GROUP BY k"
@@ -63,24 +110,54 @@ def run() -> List[Tuple[str, float, str]]:
         db = _agg_db(skewed=dist == "skewed")
         mono = Plan(prog, db, CodegenChoices())
         expected = sorted(mono.run()["R"])  # warm the jit before timing
-        t_mono = _best(lambda: mono.run())
 
-        entry: Dict = {"sql": sql, "monolithic_us": t_mono * 1e6, "schedules": {}}
+        # the eager serial chunk path (jit_chunks=off, async=off): what the
+        # backend shipped with — kept timed so the jit+async win is visible
+        eager = backend.compile(
+            prog, db,
+            PartitionedChoices(n_partitions=K, schedule="static",
+                               partition_field=("logs", "k"),
+                               jit_chunks=False, async_dispatch=False),
+        )
+        assert sorted(eager.run()["R"]) == expected
+
+        plans: Dict[str, object] = {}
         for sched in SCHEDULES:
             plan = backend.compile(
                 prog, db,
-                PartitionedChoices(n_partitions=K, schedule=sched, partition_field=("logs", "k")),
+                PartitionedChoices(n_partitions=K, schedule=sched,
+                                   partition_field=("logs", "k"),
+                                   jit_chunks=True, async_dispatch=True),
             )
-            got = sorted(plan.run()["R"])
+            got = sorted(plan.run()["R"])  # warms the bucket jit cache
             assert got == expected, f"partitioned {sched} diverged from monolithic"
-            t = _best(lambda: plan.run(), repeats=2)
+            plan.run()  # second warm-up: compiles the presence-cached kernel variant
+            plans[sched] = plan
+        times = _best_interleaved(
+            {"monolithic": mono.run, "eager": eager.run,
+             **{s: plans[s].run for s in SCHEDULES}},
+        )
+        t_mono, t_eager = times["monolithic"], times["eager"]
+
+        entry: Dict = {
+            "sql": sql, "monolithic_us": t_mono * 1e6,
+            "eager_static_us": t_eager * 1e6, "schedules": {},
+        }
+        compiles = 0
+        for sched in SCHEDULES:
+            plan, t = plans[sched], times[sched]
+            jit = _jit_block(plan)
+            compiles += jit["compiles"]
             entry["schedules"][sched] = {
                 "us": t * 1e6,
                 "n_chunks": len(plan.dispatch_log),
                 "monolithic_vs_partitioned": t_mono / t,
+                "jit": jit,
             }
             rows.append((f"partition_agg_{dist}_{sched}", t * 1e6,
-                         f"{t_mono / t:.2f}x_vs_mono_chunks={len(plan.dispatch_log)}"))
+                         f"{t_mono / t:.2f}x_vs_mono_chunks={len(plan.dispatch_log)}"
+                         f"_compiles={jit['compiles']}"))
+        report["key_counts"][f"agg_{dist}_jit_compiles"] = compiles
         # the planner's decision for this distribution, from live stats
         decision = plan_query(prog, collect_stats(db), n_parts=K, executor="partitioned")
         entry["planner_choice"] = {
@@ -90,6 +167,8 @@ def run() -> List[Tuple[str, float, str]]:
         report["agg"][dist] = entry
         rows.append((f"partition_agg_{dist}_monolithic", t_mono * 1e6,
                      f"planner_K={decision.chosen.n_partitions}_{decision.chosen.schedule}"))
+        rows.append((f"partition_agg_{dist}_eager_static", t_eager * 1e6,
+                     f"{t_mono / t_eager:.2f}x_vs_mono"))
 
     # --- co-partitioned equi-join (shuffle-on-key) --------------------------
     rng = np.random.default_rng(7)
@@ -109,18 +188,27 @@ def run() -> List[Tuple[str, float, str]]:
     jprog = sql_to_forelem(jsql, {"fact": ["dim_id", "amount"], "dim": ["id", "region"]})
     jmono = Plan(jprog, jdb, CodegenChoices())
     jexpected = sorted(jmono.run()["R"])
-    t_jmono = _best(lambda: jmono.run())
-    jplan = backend.compile(jprog, jdb, PartitionedChoices(n_partitions=K, schedule="static"))
+    jplan = backend.compile(
+        jprog, jdb,
+        PartitionedChoices(n_partitions=K, schedule="static",
+                           jit_chunks=True, async_dispatch=True),
+    )
     assert sorted(jplan.run()["R"]) == jexpected, "co-partitioned join diverged"
-    t_jpart = _best(lambda: jplan.run(), repeats=2)
+    jplan.run()  # second warm-up: compiles the presence-cached kernel variant
+    jtimes = _best_interleaved({"monolithic": jmono.run, "partitioned": jplan.run})
+    t_jmono, t_jpart = jtimes["monolithic"], jtimes["partitioned"]
+    jjit = _jit_block(jplan)
     report["join"] = {
         "sql": jsql, "n_rows": N_JOIN_ROWS,
         "monolithic_us": t_jmono * 1e6, "partitioned_us": t_jpart * 1e6,
         "monolithic_vs_partitioned": t_jmono / t_jpart,
         "n_chunks": len(jplan.dispatch_log),
+        "jit": jjit,
     }
+    report["key_counts"]["join_jit_compiles"] = jjit["compiles"]
     rows.append(("partition_join_monolithic", t_jmono * 1e6, "1.0x"))
-    rows.append(("partition_join_partitioned", t_jpart * 1e6, f"{t_jmono / t_jpart:.2f}x_vs_mono"))
+    rows.append(("partition_join_partitioned", t_jpart * 1e6,
+                 f"{t_jmono / t_jpart:.2f}x_vs_mono_compiles={jjit['compiles']}"))
 
     # ratios the CI regression gate watches (higher is better)
     ag = report["agg"]
@@ -129,6 +217,9 @@ def run() -> List[Tuple[str, float, str]]:
         "agg_skewed_mono_vs_partitioned": ag["skewed"]["schedules"]["static"]["monolithic_vs_partitioned"],
         "agg_skewed_static_vs_guided": (
             ag["skewed"]["schedules"]["static"]["us"] / ag["skewed"]["schedules"]["guided"]["us"]
+        ),
+        "agg_uniform_jit_async_vs_eager": (
+            ag["uniform"]["eager_static_us"] / ag["uniform"]["schedules"]["static"]["us"]
         ),
         "join_mono_vs_partitioned": report["join"]["monolithic_vs_partitioned"],
     }

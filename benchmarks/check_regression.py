@@ -8,6 +8,13 @@
 # geometric mean before comparison.  A fresh value below
 # ``baseline / tolerance`` is a regression.
 #
+# Reports may also publish ``key_counts`` — *lower-is-better* integers
+# (today: jit chunk-kernel compile counts from bench_partition.py).  These
+# are machine-independent (the schedule policy fully determines the chunk
+# sizes, hence the shape buckets), so a fresh count above ``baseline ×
+# tolerance`` fails even when small-scale wall-clock hides the recompile
+# explosion.
+#
 # Run:  PYTHONPATH=src python benchmarks/check_regression.py \
 #           [--tolerance 1.5] [--baseline-dir benchmarks/baselines] [--fresh-dir .]
 #
@@ -51,12 +58,21 @@ def _partition_metrics(d: Dict) -> Dict[str, float]:
     return {k: float(v) for k, v in d.get("key_ratios", {}).items() if v and v > 0}
 
 
+def _partition_counts(d: Dict) -> Dict[str, float]:
+    return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
+
+
 # report file -> metric extractor (name -> higher-is-better ratio)
 EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_engine.json": _engine_metrics,
     "BENCH_join.json": _join_metrics,
     "BENCH_planner.json": _planner_metrics,
     "BENCH_partition.json": _partition_metrics,
+}
+
+# report file -> lower-is-better count extractor (compile counts etc.)
+COUNT_EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
+    "BENCH_partition.json": _partition_counts,
 }
 
 
@@ -67,24 +83,35 @@ class Comparison:
     fresh: Optional[float]
     baseline: float
     tolerance: float
+    lower_is_better: bool = False
 
     @property
     def floor(self) -> float:
+        """The bound the fresh value must stay on the good side of: a
+        minimum for ratios, a maximum for lower-is-better counts."""
+        if self.lower_is_better:
+            return self.baseline * self.tolerance
         return self.baseline / self.tolerance
 
     @property
     def regressed(self) -> bool:
-        return self.fresh is None or self.fresh < self.floor
+        if self.fresh is None:
+            return True
+        if self.lower_is_better:
+            return self.fresh > self.floor
+        return self.fresh < self.floor
 
 
-def load_metrics(path: str) -> Optional[Dict[str, float]]:
-    """Extract the gated ratios from one report file; None if the file does
-    not exist (callers decide whether that is fatal)."""
+def load_metrics(
+    path: str, extractors: Optional[Dict[str, Callable[[Dict], Dict[str, float]]]] = None
+) -> Optional[Dict[str, float]]:
+    """Extract the gated ratios (or counts) from one report file; None if
+    the file does not exist (callers decide whether that is fatal)."""
     if not os.path.exists(path):
         return None
     with open(path) as f:
         data = json.load(f)
-    extractor = EXTRACTORS.get(os.path.basename(path))
+    extractor = (EXTRACTORS if extractors is None else extractors).get(os.path.basename(path))
     if extractor is None:
         return {}
     return extractor(data)
@@ -98,15 +125,18 @@ def compare(
     run of a new benchmark); a missing *fresh* report for an existing
     baseline is a regression (the benchmark rotted or stopped emitting)."""
     out: List[Comparison] = []
-    names = files if files else sorted(EXTRACTORS)
+    names = files if files else sorted(set(EXTRACTORS) | set(COUNT_EXTRACTORS))
     for name in names:
-        base = load_metrics(os.path.join(baseline_dir, name))
-        if base is None or not base:
-            continue  # no baseline committed yet — nothing to gate
-        fresh = load_metrics(os.path.join(fresh_dir, name))
-        for metric, bval in sorted(base.items()):
-            fval = None if fresh is None else fresh.get(metric)
-            out.append(Comparison(name, metric, fval, bval, tolerance))
+        for extractors, lower in ((EXTRACTORS, False), (COUNT_EXTRACTORS, True)):
+            if name not in extractors:
+                continue
+            base = load_metrics(os.path.join(baseline_dir, name), extractors)
+            if base is None or not base:
+                continue  # no baseline committed yet — nothing to gate
+            fresh = load_metrics(os.path.join(fresh_dir, name), extractors)
+            for metric, bval in sorted(base.items()):
+                fval = None if fresh is None else fresh.get(metric)
+                out.append(Comparison(name, metric, fval, bval, tolerance, lower_is_better=lower))
     return out
 
 
@@ -137,8 +167,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     for c in comps:
         fresh = "MISSING" if c.fresh is None else f"{c.fresh:8.3f}"
         status = "REGRESSED" if c.regressed else "ok"
+        bound = "cap" if c.lower_is_better else "floor"
         print(f"  {f'{c.report}:{c.metric}':<{width}}  baseline={c.baseline:8.3f}  "
-              f"fresh={fresh}  floor={c.floor:8.3f}  {status}")
+              f"fresh={fresh}  {bound}={c.floor:8.3f}  {status}")
     if regressions:
         print(f"\n{len(regressions)} metric(s) regressed past {args.tolerance}x tolerance", file=sys.stderr)
         return 1

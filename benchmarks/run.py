@@ -1,5 +1,7 @@
 # Benchmark harness: one module per paper table/figure + substrate benches.
 # Prints ``name,us_per_call,derived`` CSV (and tees a copy under runs/).
+# Exits non-zero when any suite fails — CI must not mistake a partial
+# report set for a complete run.
 from __future__ import annotations
 
 import os
@@ -7,8 +9,9 @@ import sys
 import traceback
 
 
-def main() -> None:
+def main() -> int:
     rows = []
+    failed = []
     from . import (
         bench_engine,
         bench_fig2,
@@ -37,6 +40,7 @@ def main() -> None:
                 rows.append(row)
                 print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
         except Exception as e:
+            failed.append(name)
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     os.makedirs("runs", exist_ok=True)
@@ -44,7 +48,11 @@ def main() -> None:
         f.write("name,us_per_call,derived\n")
         for r in rows:
             f.write(f"{r[0]},{r[1]:.1f},{r[2]}\n")
+    if failed:
+        print(f"benchmark suite(s) failed: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+# Rerun the gated benchmark suite and rewrite benchmarks/baselines/*.json
+# in one command — the workflow the gate's docstring prescribes ("refresh
+# the baselines ... in the same PR that makes them faster") without the
+# error-prone manual copy step.
+#
+#   python scripts/refresh_baselines.py                # all four reports
+#   python scripts/refresh_baselines.py BENCH_partition.json
+#
+# Each bench script runs as a subprocess with PYTHONPATH=src from the repo
+# root; after a successful run the fresh report replaces the committed
+# baseline and the gated metric deltas are printed.  Exits non-zero when
+# any bench fails (the old baseline is left untouched).
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import subprocess
+import sys
+from typing import List
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
+
+BENCHES = {
+    "BENCH_planner.json": "benchmarks/bench_planner.py",
+    "BENCH_join.json": "benchmarks/bench_join.py",
+    "BENCH_engine.json": "benchmarks/bench_engine.py",
+    "BENCH_partition.json": "benchmarks/bench_partition.py",
+}
+
+
+def main(argv: List[str] | None = None) -> int:
+    sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+    from check_regression import COUNT_EXTRACTORS, EXTRACTORS, load_metrics
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("reports", nargs="*",
+                    help=f"report names to refresh (default: all of {sorted(BENCHES)})")
+    args = ap.parse_args(argv)
+    unknown = [r for r in args.reports if r not in BENCHES]
+    if unknown:
+        ap.error(f"unknown report(s) {unknown}; choose from {sorted(BENCHES)}")
+    names = args.reports or sorted(BENCHES)
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    failed = []
+    for name in names:
+        script = BENCHES[name]
+        print(f"== {script} ==", flush=True)
+        proc = subprocess.run([sys.executable, script], cwd=ROOT, env=env)
+        fresh_path = os.path.join(ROOT, name)
+        if proc.returncode != 0 or not os.path.exists(fresh_path):
+            print(f"{script} failed (exit {proc.returncode}); baseline kept", file=sys.stderr)
+            failed.append(name)
+            continue
+        base_path = os.path.join(BASELINE_DIR, name)
+        for extractors, kind in ((EXTRACTORS, "ratio"), (COUNT_EXTRACTORS, "count")):
+            old = load_metrics(base_path, extractors) or {}
+            new = load_metrics(fresh_path, extractors) or {}
+            for metric in sorted(set(old) | set(new)):
+                o, n = old.get(metric), new.get(metric)
+                print(f"  {metric} ({kind}): "
+                      f"{'-' if o is None else f'{o:.3f}'} -> "
+                      f"{'-' if n is None else f'{n:.3f}'}")
+        shutil.copyfile(fresh_path, base_path)
+        print(f"  wrote {os.path.relpath(base_path, ROOT)}")
+    if failed:
+        print(f"not refreshed: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -237,6 +237,124 @@ class JaxLowering:
         ones = jnp.where(jr.present, 1, 0).astype(jnp.int32)
         return keys, values, ones
 
+    # -- per-chunk kernel entry points (bucketed jit) ---------------------------
+    #
+    # The partitioned backend (backends/partitioned.py) pads each chunk's
+    # row count up to a small geometric set of shape buckets and wraps
+    # these functions in ``jax.jit``: shapes are static per bucket, so one
+    # XLA compilation serves every chunk that lands in the same bucket.
+    # Rows at index >= ``n_valid`` are padding; they contribute the
+    # accumulate op's *identity* (the PR-2 masking discipline) so they can
+    # never perturb a segment, and padded join/projection slots carry
+    # present=False.
+
+    def chunk_agg_fn(self, agg, with_presence: bool = True) -> Callable:
+        """(padded chunk cols, n_valid, env, arrays) -> (partial acc,
+        presence partial or None).
+
+        ``with_presence=False`` skips the presence histogram scatter — the
+        partitioned runner passes it when the presence of an *unfiltered*
+        aggregation is already memoized from a previous run (it is a pure
+        function of the key column, roughly half the kernel's scatter
+        work)."""
+        nk = self.num_keys[(agg.table, agg.key_field)]
+
+        def fn(chunk_cols, n_valid, env, arrays):
+            cols = dict(env)
+            cols[agg.table] = chunk_cols
+            keys, values, ones, _ = self.agg_inputs(agg, cols, arrays)
+            valid = jnp.arange(keys.shape[0], dtype=jnp.int32) < n_valid
+            keys = jnp.where(valid, keys, 0)
+            values = jnp.where(valid, values, _op_identity(agg.op, values.dtype))
+            acc = self._aggregate(keys, values, nk, agg.op)
+            if not with_presence:
+                return acc, None
+            ones = jnp.where(valid, ones, 0)
+            return acc, self._aggregate(keys, ones, nk, "+")
+
+        return fn
+
+    def chunk_reduce_fn(self, sr) -> Callable:
+        """(padded chunk cols, n_valid, env, arrays) -> partial scalar sum."""
+
+        def fn(chunk_cols, n_valid, env, arrays):
+            cols = dict(env)
+            cols[sr.table] = chunk_cols
+            m = cols_len_shape(cols, sr.table)[0]
+            expr = self._vec(sr.expr, cols, sr.table, arrays)
+            mask = jnp.arange(m, dtype=jnp.int32) < n_valid
+            if sr.match_field is not None:
+                mv = sr.match_value
+                if isinstance(mv, Const):
+                    mval = jnp.asarray(mv.value)
+                else:
+                    mval = cols["__params__"][mv.name]
+                mask = mask & (cols[sr.table][sr.match_field] == mval)
+            pmask = self._pred_mask(sr.filter_pred, cols, sr.table)
+            if pmask is not None:
+                mask = mask & pmask
+            vals = jnp.broadcast_to(expr, (m,))
+            return jnp.sum(jnp.where(mask, vals, 0))
+
+        return fn
+
+    def chunk_project_fn(self, fp) -> Callable:
+        """(padded chunk cols, n_valid, env) -> (item columns, present mask)."""
+
+        def fn(chunk_cols, n_valid, env):
+            cols = dict(env)
+            cols[fp.table] = chunk_cols
+            m = cols_len_shape(cols, fp.table)[0]
+            mask = self._pred_mask(fp.filter_pred, cols, fp.table)
+            valid = jnp.arange(m, dtype=jnp.int32) < n_valid
+            mask = valid if mask is None else (mask & valid)
+            items = tuple(
+                jnp.broadcast_to(self._vec(el, cols, fp.table, {}), (m,)) for el in fp.items
+            )
+            return items, mask
+
+        return fn
+
+    def chunk_join_fn(self, j: JoinSpec, mult: int, with_presence: bool = True) -> Callable:
+        """(padded probe cols, n_valid_probe, sorted+padded build cols,
+        sorted build keys, n_valid_build, env) -> join-agg partials (one
+        (acc, presence-or-None) pair per JoinAgg), or (item columns,
+        present, probe_idx) for a materialized join.
+
+        The build side arrives already gathered into sorted-key order (the
+        host sorts once per partition), so the in-kernel ``order`` mapping
+        is the identity.  ``with_presence=False`` skips the group-presence
+        scatters (memoized across runs for filter-free joins, exactly like
+        the single-table aggregation presence)."""
+
+        def fn(probe_cols, n_valid_probe, build_cols, sorted_keys, n_valid_build, env):
+            cols = dict(env)
+            cols[j.probe_table] = probe_cols
+            cols[j.build_table] = build_cols
+            ident = jnp.arange(sorted_keys.shape[0], dtype=jnp.int32)
+            jr = self._join_rows(
+                j, mult, cols, build_sorted=(ident, sorted_keys), n_valid_build=n_valid_build
+            )
+            n = cols_len_shape(cols, j.probe_table)[0]
+            valid = jnp.arange(n, dtype=jnp.int32) < n_valid_probe
+            jr.present = jr.present & (valid if jr.probe_idx is None else valid[jr.probe_idx])
+            if j.aggs:
+                outs = []
+                for ja in j.aggs:
+                    nk = self.num_keys[(ja.key.table, ja.key.field)]
+                    keys, values, ones = self.join_agg_inputs(ja, j, jr, cols)
+                    outs.append(
+                        (
+                            self._aggregate(keys, values, nk, ja.op),
+                            self._aggregate(keys, ones, nk, "+") if with_presence else None,
+                        )
+                    )
+                return tuple(outs)
+            items = tuple(self._join_gather(el, j, jr, cols) for el in j.items)
+            return items, jr.present, jr.probe_idx
+
+        return fn
+
     # -- build the callable -------------------------------------------------------
     def build(self) -> Callable[[Dict[str, Dict[str, jnp.ndarray]]], Dict[str, Any]]:
         spec = self.spec
@@ -404,10 +522,18 @@ class JaxLowering:
     # static shape (probe_rows × M) where M is the max key multiplicity
     # measured at compile time ('expand'); absent slots are masked out.
 
-    def _join_rows(self, j: JoinSpec, mult: int, cols, build_sorted=None) -> "_JoinRows":
+    def _join_rows(
+        self, j: JoinSpec, mult: int, cols, build_sorted=None, n_valid_build=None
+    ) -> "_JoinRows":
         """``build_sorted`` is an optional precomputed ``(order, sorted_keys)``
         of the build side in ``cols`` — chunked executors that probe the same
-        build partition many times pass it to sort once per partition."""
+        build partition many times pass it to sort once per partition.
+
+        ``n_valid_build`` marks the build side as *padded*: only the first
+        ``n_valid_build`` sorted rows are real (the rest carry a maximal key
+        sentinel), so match runs are clipped to it.  Padding sorts to the
+        end, which keeps every real match run inside the valid prefix even
+        when real keys equal the sentinel value."""
         bk = cols[j.build_table][j.build_key]
         pk = cols[j.probe_table][j.probe_fk]
         n_probe = pk.shape[0]
@@ -427,11 +553,16 @@ class JaxLowering:
         if not expand:
             pos = jnp.clip(jnp.searchsorted(sk, pk), 0, sk.shape[0] - 1)
             present = sk[pos] == pk
+            if n_valid_build is not None:
+                present = present & (pos < n_valid_build)
             if pmask is not None:
                 present = present & pmask
             return _JoinRows(None, order[pos], present, False)
         lo = jnp.searchsorted(sk, pk, side="left")
         hi = jnp.searchsorted(sk, pk, side="right")
+        if n_valid_build is not None:
+            lo = jnp.minimum(lo, n_valid_build)
+            hi = jnp.minimum(hi, n_valid_build)
         counts = hi - lo
         slots = jnp.arange(mult)
         pos = jnp.clip(lo[:, None] + slots[None, :], 0, sk.shape[0] - 1)  # (n_probe, M)

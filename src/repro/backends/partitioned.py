@@ -14,29 +14,43 @@
 # iteration space come from ``repro.sched.loop_schedule`` ``ChunkPolicy``
 # objects (static / fixed / guided self-scheduling, §III-A2) — a chunk
 # never crosses a partition boundary, so skewed partitions are simply
-# broken into more chunks and load-balance across (virtual) workers.
+# broken into more chunks and load-balance across workers.
+#
+# Chunk kernels are *bucketed and jitted* (``jit_chunks``): each chunk's
+# row count is padded up to a small geometric set of shape buckets (with
+# the accumulate op's identity in the padding, reusing JaxLowering's
+# masking discipline), so one XLA compilation per (kernel, bucket) serves
+# every chunk that lands in that bucket; compile/hit counters are recorded
+# per dispatch.  With ``async_dispatch`` a small thread worker pool pulls
+# chunks from a shared queue — chunk k+1's host-side slice/pad/upload
+# overlaps chunk k's device execution (JAX releases the GIL while a
+# compiled computation runs), and the self-scheduling policies become real
+# wall-clock load balancing instead of a modeled dispatch order.
 #
 # Each chunk runs through the *existing* jax_vec kernels (``JaxLowering``'s
 # aggregation and join engines); partial aggregates are merged with the
-# accumulate op's own reduction (+/max/min re-aggregation), streaming
-# results (projections, materialized joins) concatenate, and group read-out
-# happens once over the merged accumulators.  This is the first backend
-# that can execute a query whose working set exceeds a single kernel
-# invocation: tables stay host-resident (numpy; the storage layer), and
-# only one chunk's column slices plus the dense accumulators are uploaded
-# to the device at a time.
+# accumulate op's own reduction (+/max/min re-aggregation) in chunk order
+# (deterministic — results are bit-identical with async on or off),
+# streaming results concatenate, and group read-out happens once over the
+# merged accumulators.  Tables stay host-resident (numpy; the storage
+# layer), and only one chunk's padded column slices plus the dense
+# accumulators are uploaded to the device at a time.
 from __future__ import annotations
 
+import os
+import threading
+import time
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.ir import Const, Program, apply_order_limit
 from repro.data.multiset import Database
-from repro.sched.loop_schedule import make_policy
+from repro.sched.loop_schedule import make_policy, simulate_schedule, worker_imbalance
 
 from .codegen import _densify, required_columns
 from .interface import register_backend
@@ -71,26 +85,145 @@ def hash_partition(values: np.ndarray, k: int) -> np.ndarray:
     return np.mod(v * _HASH_MIX, np.int64(max(1, k)))
 
 
+# ---------------------------------------------------------------------------
+# Shape buckets
+# ---------------------------------------------------------------------------
+
+BUCKET_MIN = 1024
+# sub-octave bucket fractions: {0.625, 0.75, 0.875, 1.0} × 2^k — four
+# buckets per power of two keep the whole set geometric (≲ 4·log2(rows)
+# buckets can ever exist) with padding waste ≤ 25% worst-case (a row
+# count just past a power of two pads to 0.625·2^(k+1)), ~11% on average
+_BUCKET_FRACS = (10, 12, 14)  # sixteenths of the next power of two
+
+
+def bucket_rows(n: int, min_bucket: int = BUCKET_MIN) -> int:
+    """Smallest shape bucket ≥ ``n``.  Chunk kernels compile once per
+    bucket, so every chunk whose row count falls in the same bucket reuses
+    one XLA executable; the geometric spacing bounds both the number of
+    possible compilations and the padding overhead."""
+    if n <= min_bucket:
+        return min_bucket
+    p = 1 << int(n - 1).bit_length()  # next power of two ≥ n
+    for frac in _BUCKET_FRACS:
+        b = (p >> 4) * frac
+        if b >= n and b >= min_bucket:
+            return b
+    return p
+
+
+def _key_sentinel(dtype) -> Any:
+    """Padding value for a *sorted build key* column: the dtype's maximum,
+    so padded rows sort after every real row and searchsorted match runs
+    stay inside the valid prefix (clipped by n_valid_build)."""
+    if np.issubdtype(dtype, np.integer):
+        return np.iinfo(dtype).max
+    return np.inf
+
+
+def _padded_slice(a: np.ndarray, idx: np.ndarray, m: int, fill=0) -> np.ndarray:
+    """``a[idx]`` padded with ``fill`` up to ``m`` rows (host-side)."""
+    n = idx.shape[0]
+    if m == n:
+        return a[idx]
+    out = np.full((m,), fill, a.dtype)
+    out[:n] = a[idx]
+    return out
+
+
+@dataclass
+class JitCacheStats:
+    """Chunk-kernel jit cache counters for one plan (all kernels pooled)."""
+
+    compiles: int = 0    # dispatches that hit a fresh (kernel, bucket) shape
+    hits: int = 0        # dispatches served by an already-compiled bucket
+    overflows: int = 0   # dispatches run eagerly because the cache was full
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.compiles + self.hits + self.overflows
+        return self.hits / total if total else 0.0
+
+
+class _JitKernel:
+    """One jitted chunk kernel with shape-bucket accounting and a *bounded*
+    compilation cache: the first call at a new padded-shape signature
+    compiles (counted); past ``cap`` distinct signatures new shapes fall
+    back to eager execution instead of growing the jit cache without
+    bound."""
+
+    def __init__(self, name: str, fn: Callable, stats: JitCacheStats, cap: int = 64):
+        self.name = name
+        self._eager = fn
+        self._jit = jax.jit(fn)
+        self._sigs: set = set()
+        self.stats = stats
+        self.cap = cap
+        # pooled workers call concurrently: the signature set and the
+        # shared counters must not race (jax.jit itself is thread-safe)
+        self._lock = threading.Lock()
+
+    def __call__(self, *args) -> Tuple[Any, bool]:
+        """Returns (result, compiled_now)."""
+        sig = tuple(
+            (tuple(np.shape(x)), str(np.asarray(x).dtype) if np.isscalar(x) else str(x.dtype))
+            for x in jax.tree_util.tree_leaves(args)
+        )
+        with self._lock:
+            if sig in self._sigs:
+                self.stats.hits += 1
+                compiled, fn = False, self._jit
+            elif len(self._sigs) >= self.cap:
+                self.stats.overflows += 1
+                compiled, fn = False, self._eager
+            else:
+                self._sigs.add(sig)
+                self.stats.compiles += 1
+                compiled, fn = True, self._jit
+        return fn(*args), compiled
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self._sigs)
+
+
 @dataclass
 class PartitionedChoices:
     """Strategy knobs of the partitioned backend: the wrapped jax_vec
-    choices (which kernels run per chunk) plus the data-distribution and
-    loop-scheduling decision."""
+    choices (which kernels run per chunk) plus the data-distribution,
+    loop-scheduling and dispatch decisions."""
 
     base: CodegenChoices = field(default_factory=CodegenChoices)
     n_partitions: int = 4
     schedule: str = "static"          # 'static' | 'fixed' | 'guided'
     partition_field: Optional[Tuple[str, str]] = None  # (table, field)
+    # bucketed jit chunk kernels (pad to shape buckets, compile once per
+    # bucket).  Off = the eager per-chunk path (the differential anchor).
+    jit_chunks: bool = True
+    # overlap host-side slice/upload of chunk k+1 with chunk k's device
+    # execution via a thread worker pool (off here — the low-level API is
+    # the serial oracle; the engine's OptimizeOptions defaults it on)
+    async_dispatch: bool = False
+    n_workers: int = 0                # 0 = auto: min(max(2, K), cpu_count, 8)
+    jit_cache_cap: int = 64           # bounded jit cache (overflow → eager)
 
 
-@dataclass(frozen=True)
+@dataclass
 class ChunkDispatch:
-    """One dispatched chunk (the backend's observable schedule)."""
+    """One dispatched chunk (the backend's observable schedule).  The
+    timing fields are filled in as the chunk executes: ``t_ms`` is the
+    measured wall-clock (dispatch-to-complete under async_dispatch, where
+    each worker blocks on its own chunk; dispatch-side time on the serial
+    path, which only blocks at merge barriers)."""
 
     op: str
     partition: int
     rows: int
     worker: int
+    bucket: int = 0          # padded row count the kernel ran at (0 = eager)
+    build_bucket: int = 0    # padded build-side rows (join kernels only)
+    t_ms: float = 0.0
+    compiled: bool = False   # this dispatch triggered a fresh XLA compile
 
 
 @dataclass
@@ -146,6 +279,23 @@ class PartitionedPlan:
             }
         self._layouts: Dict[Tuple[str, Optional[str]], _Layout] = {}
         self.dispatch_log: List[ChunkDispatch] = []
+        # bucketed jit chunk kernels: one _JitKernel per extracted op,
+        # built lazily, shared counters in jit_stats (per plan)
+        self.jit_stats = JitCacheStats()
+        self._kernels: Dict[Tuple, _JitKernel] = {}
+        self._dev_cols: Dict[Tuple[str, str], jnp.ndarray] = {}
+        # run-invariant presence of *unfiltered* aggregations: a pure
+        # histogram of the key column, memoized across run() calls — a
+        # chunked runner owns its intermediates between runs, which a
+        # monolithic jitted program (a pure function) cannot.  Keyed like
+        # ``presence``; invalidated with the plan (Session recompiles on
+        # any table swap / epoch bump).
+        self._presence_cache: Dict[Tuple[str, str], Any] = {}
+        # per-partition build sides (sliced + sorted (+ padded, jit path))
+        # are run-invariant too: dimension-sized, kept device-resident
+        # across runs (the *probe* side stays chunked — it is the big one)
+        self._build_cache: Dict[Tuple, Any] = {}
+        self.last_run_ms: float = 0.0
 
     # -- data distribution ---------------------------------------------------
     def _table_len(self, table: str) -> int:
@@ -181,7 +331,19 @@ class PartitionedPlan:
         return layout
 
     # -- loop scheduling -----------------------------------------------------
-    def _chunks(self, layout: _Layout, op: str) -> List[Tuple[int, np.ndarray]]:
+    def _policy(self, total: int):
+        """The ChunkPolicy actually executed — shared with the ANALYZE
+        replay (``runtime_report``), which must simulate the *same* policy.
+        Guided GSS is floored at 1/(16K) of the iteration space: finer
+        chunks cannot improve balance beyond ~1/16 of a worker's share, but
+        every extra size decade costs more dispatches and more shape
+        buckets (= jit compiles)."""
+        kw = {}
+        if self.choices.schedule == "guided":
+            kw["min_chunk"] = max(1, total // (16 * self.k))
+        return make_policy(self.choices.schedule, total, self.k, **kw)
+
+    def _chunks(self, layout: _Layout, op: str) -> List[Tuple[int, np.ndarray, ChunkDispatch]]:
         """Chunk the partitioned iteration space under the configured
         ``ChunkPolicy``.  Chunks are clipped at partition boundaries (a
         chunk must see exactly one partition's rows — joins depend on it),
@@ -189,17 +351,18 @@ class PartitionedPlan:
         total = int(layout.bounds[-1])
         if total == 0:
             return []
-        policy = make_policy(self.choices.schedule, total, self.k)
+        policy = self._policy(total)
         policy.reset()
-        out: List[Tuple[int, np.ndarray]] = []
+        out: List[Tuple[int, np.ndarray, ChunkDispatch]] = []
         pos, w, p = 0, 0, 0
         while pos < total:
             while layout.bounds[p + 1] <= pos:
                 p += 1
             size = policy.next_chunk(total - pos, self.k, w % self.k, [])
             size = max(1, min(size, int(layout.bounds[p + 1]) - pos))
-            out.append((p, layout.order[pos: pos + size]))
-            self.dispatch_log.append(ChunkDispatch(op, p, size, w % self.k))
+            d = ChunkDispatch(op, p, size, w % self.k)
+            out.append((p, layout.order[pos: pos + size], d))
+            self.dispatch_log.append(d)
             pos += size
             w += 1
         return out
@@ -220,6 +383,112 @@ class PartitionedPlan:
     def _slice(self, table: str, idx: np.ndarray) -> Dict[str, jnp.ndarray]:
         return {f: jnp.asarray(a[idx]) for f, a in self._cols_np.get(table, {}).items()}
 
+    def _padded_chunk(
+        self, table: str, idx: np.ndarray, d: ChunkDispatch
+    ) -> Tuple[Dict[str, jnp.ndarray], np.int32]:
+        """One chunk's column slices padded up to the row-count bucket,
+        plus the n_valid scalar the kernel masks with."""
+        n = int(idx.shape[0])
+        m = bucket_rows(n)
+        d.bucket = m
+        chunk = {
+            f: jnp.asarray(_padded_slice(a, idx, m))
+            for f, a in self._cols_np.get(table, {}).items()
+        }
+        return chunk, np.int32(n)
+
+    # -- kernel env ------------------------------------------------------------
+    def _dev_col(self, t: str, f: str) -> jnp.ndarray:
+        key = (t, f)
+        arr = self._dev_cols.get(key)
+        if arr is None:
+            arr = self._dev_cols[key] = jnp.asarray(self._cols_np[t][f])
+        return arr
+
+    def _kernel_env(
+        self, exprs, table: str, pcols: Dict[str, Any], extra: Tuple[Tuple[str, str], ...] = ()
+    ) -> Dict[str, Dict[str, Any]]:
+        """Device-resident environment a chunk kernel needs besides the
+        chunk itself: query params plus any side-table columns the
+        expressions read outside the chunked ``table`` (member-filter
+        ranges, dimension columns).  Uploaded once per plan — side tables
+        have fixed shapes, so they never cause a recompile."""
+        env: Dict[str, Dict[str, Any]] = {"__params__": dict(pcols)}
+        pairs = list(extra)
+        for e in exprs:
+            if e is not None:
+                pairs.extend(e.fields_used())
+        for t, f in pairs:
+            if t != table and t in self._cols_np and f in self._cols_np[t]:
+                env.setdefault(t, {})[f] = self._dev_col(t, f)
+        return env
+
+    def _kernel(self, key: Tuple[str, int], build: Callable[[], Callable]) -> _JitKernel:
+        kern = self._kernels.get(key)
+        if kern is None:
+            kern = self._kernels[key] = _JitKernel(
+                f"{key[0]}[{key[1]}]", build(), self.jit_stats, self.choices.jit_cache_cap
+            )
+        return kern
+
+    # -- dispatch --------------------------------------------------------------
+    def _n_workers(self) -> int:
+        if self.choices.n_workers > 0:
+            return self.choices.n_workers
+        return min(max(2, self.k), os.cpu_count() or 1, 8)
+
+    def _dispatch(self, chunks: List[Tuple[int, np.ndarray, ChunkDispatch]], work) -> List[Any]:
+        """Run ``work`` over every chunk and return results in chunk order
+        (partials are always merged in that order, so async execution is
+        bit-identical to serial).  Serial mode leaves jax's own async
+        dispatch to pipeline and only blocks at merge barriers; async mode
+        runs a worker pool where each worker pulls its next chunk only
+        after its previous one finished on device — the ChunkPolicy's
+        dispatch order becomes real load balancing, and one worker's
+        host-side slice/pad/upload overlaps another's device execution."""
+        results: List[Any] = [None] * len(chunks)
+        nw = self._n_workers()
+        if not self.choices.async_dispatch or nw <= 1 or len(chunks) <= 1:
+            for i, ch in enumerate(chunks):
+                t0 = time.perf_counter()
+                results[i] = work(ch)
+                ch[2].t_ms = (time.perf_counter() - t0) * 1e3
+            return results
+        it = iter(enumerate(chunks))
+        lock = threading.Lock()
+        errors: List[BaseException] = []
+
+        def runner(w: int) -> None:
+            while not errors:
+                with lock:
+                    nxt = next(it, None)
+                if nxt is None:
+                    return
+                i, ch = nxt
+                d = ch[2]
+                d.worker = w
+                t0 = time.perf_counter()
+                try:
+                    r = work(ch)
+                    jax.block_until_ready(r)
+                except BaseException as e:  # re-raised in the caller
+                    errors.append(e)
+                    return
+                d.t_ms = (time.perf_counter() - t0) * 1e3
+                results[i] = r
+
+        threads = [
+            threading.Thread(target=runner, args=(w,), daemon=True)
+            for w in range(min(nw, len(chunks)))
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        return results
+
     # -- partial merging -----------------------------------------------------
     @staticmethod
     def _merge(acc, part, op: str):
@@ -235,127 +504,260 @@ class PartitionedPlan:
 
     # -- execution -------------------------------------------------------------
     def run(self, params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        t_run0 = time.perf_counter()
         low = self.lowering
         spec = self.spec
+        use_jit = self.choices.jit_chunks
         self.dispatch_log = []
         cols = self._global_cols(params)
+        pcols = cols.get("__params__", {})
         arrays: Dict[str, Any] = {}
         presence: Dict[Tuple[str, str], Any] = {}
         out: Dict[str, Any] = {}
 
         # --- aggregations: per-chunk partials, merged with the op ----------
-        for agg in spec.aggs:
+        for ai, agg in enumerate(spec.aggs):
             nk = low.num_keys[(agg.table, agg.key_field)]
             layout = self._layout(agg.table, self._partition_key_for(agg.table, agg.key_field))
+            chunks = self._chunks(layout, f"agg:{agg.array}")
+            pkey = ("agg", agg.table, agg.key_field)
+            cacheable = agg.filter_pred is None and agg.member_filter is None
+            cached_pres = self._presence_cache.get(pkey) if cacheable else None
+            need_pres = cached_pres is None
+            if use_jit:
+                kern = self._kernel(
+                    ("agg", ai, need_pres),
+                    lambda a=agg, wp=need_pres: low.chunk_agg_fn(a, with_presence=wp),
+                )
+                extra = ()
+                if agg.member_filter is not None:
+                    mf, mt, mfld = agg.member_filter
+                    extra = ((mt, mfld),)
+                env = self._kernel_env((agg.value, agg.filter_pred), agg.table, pcols, extra)
+                snap = dict(arrays)  # aggs may read arrays of *earlier* aggs
+
+                def work(ch, _k=kern, _e=env, _a=snap, _t=agg.table):
+                    _, idx, d = ch
+                    chunk, nv = self._padded_chunk(_t, idx, d)
+                    res, d.compiled = _k(chunk, nv, _e, _a)
+                    return res
+            else:
+
+                def work(ch, _agg=agg, _nk=nk, _np=need_pres):
+                    _, idx, d = ch
+                    c2 = dict(cols)
+                    c2[_agg.table] = self._slice(_agg.table, idx)
+                    keys, values, ones, _ = low.agg_inputs(_agg, c2, arrays)
+                    return (
+                        low._aggregate(keys, values, _nk, _agg.op),
+                        low._aggregate(keys, ones, _nk, "+") if _np else None,
+                    )
+
             acc = pres = None
-            for _, idx in self._chunks(layout, f"agg:{agg.array}"):
-                c2 = dict(cols)
-                c2[agg.table] = self._slice(agg.table, idx)
-                keys, values, ones, _ = low.agg_inputs(agg, c2, arrays)
-                acc = self._merge(acc, low._aggregate(keys, values, nk, agg.op), agg.op)
-                pres = self._merge(pres, low._aggregate(keys, ones, nk, "+"), "+")
+            for part in self._dispatch(chunks, work):
+                acc = self._merge(acc, part[0], agg.op)
+                if need_pres:
+                    pres = self._merge(pres, part[1], "+")
+            if not need_pres:
+                pres = cached_pres
             if acc is None:  # empty table: identity accumulators
                 acc = jnp.zeros((nk,), jnp.int32)
                 pres = jnp.zeros((nk,), jnp.int32)
+            if cacheable and need_pres:
+                self._presence_cache[pkey] = pres
             arrays[agg.array] = acc
             presence[(agg.table, agg.key_field)] = pres
 
         # --- joins: shuffle-on-key, each partition joins locally ------------
-        for j, mult in zip(spec.joins, low.join_multiplicity):
+        for ji, (j, mult) in enumerate(zip(spec.joins, low.join_multiplicity)):
             probe_layout = self._layout(j.probe_table, self._partition_key_for(j.probe_table, j.probe_fk))
             build_layout = self._layout(j.build_table, self._partition_key_for(j.build_table, j.build_key))
             co_partitioned = probe_layout.mode.startswith("hash") and build_layout.mode.startswith("hash")
-            jaccs: Dict[str, Any] = {}
-            jpres: Dict[Tuple[str, str], Any] = {}
-            # (original probe row, emitted tuple): chunks arrive in hash-
-            # partition order, but the visible row order must not depend on
-            # the (K, schedule) choice — restore probe-row-major order (the
-            # jax backend's emission order) before returning
-            rows_out: List[Tuple[int, Tuple]] = []
+            chunks = self._chunks(probe_layout, f"join:{j.probe_table}⋈{j.build_table}")
             # a partition's build side is probed by every chunk of that
-            # partition: slice + sort it once, not per chunk
-            build_cache: Dict[int, Tuple[Dict[str, Any], Optional[Tuple[Any, Any]]]] = {}
+            # partition (and by every run): slice + sort (+ pad, jit path)
+            # it once per plan, not per chunk
+            build_cache = self._build_cache
+            build_lock = threading.Lock()
+            # group presence of a *filter-free* join is run-invariant (the
+            # match structure depends only on the data); memoized like the
+            # single-table aggregation presence, namespaced per join
+            jpkeys = [("join", ji, ja.key.table, ja.key.field) for ja in j.aggs]
+            j_cacheable = bool(j.aggs) and j.probe_filter is None
+            need_pres = not (
+                j_cacheable and all(pk in self._presence_cache for pk in jpkeys)
+            )
 
-            def build_side(p: int):
-                key = p if co_partitioned else -1
-                hit = build_cache.get(key)
-                if hit is None:
+            if use_jit:
+                kern = self._kernel(
+                    ("join", ji, need_pres),
+                    lambda jj=j, m=mult, wp=need_pres: low.chunk_join_fn(jj, m, with_presence=wp),
+                )
+                jexprs = list(j.items) + [j.probe_filter]
+                for ja in j.aggs:
+                    jexprs.extend((ja.value, ja.key))
+                env = self._kernel_env(jexprs, j.probe_table, pcols)
+                env.pop(j.build_table, None)  # the padded build side is an arg
+
+                def build_side_padded(p: int, _j=j, _ji=ji):
+                    key = (_ji, True, p if co_partitioned else -1)
+                    with build_lock:
+                        hit = build_cache.get(key)
+                    if hit is not None:
+                        return hit
                     # co-partitioned: only partition p of the build side can
                     # match; otherwise (range-partitioned probe) every build
                     # row is a candidate and the build side is broadcast
                     bidx = build_layout.rows(p) if co_partitioned else build_layout.order
-                    bcols = self._slice(j.build_table, bidx)
-                    bk = bcols.get(j.build_key)
-                    if bk is not None and bk.shape[0]:
-                        order = jnp.argsort(bk)
-                        hit = (bcols, (order, bk[order]))
-                    else:
-                        hit = (bcols, None)
-                    build_cache[key] = hit
-                return hit
-
-            for p, idx in self._chunks(probe_layout, f"join:{j.probe_table}⋈{j.build_table}"):
-                bcols, bsorted = build_side(p)
-                c2 = dict(cols)
-                c2[j.probe_table] = self._slice(j.probe_table, idx)
-                c2[j.build_table] = bcols
-                jr = low._join_rows(j, mult, c2, build_sorted=bsorted)
-                if j.aggs:
-                    for ja in j.aggs:
-                        nk = low.num_keys[(ja.key.table, ja.key.field)]
-                        keys, values, ones = low.join_agg_inputs(ja, j, jr, c2)
-                        jaccs[ja.array] = self._merge(
-                            jaccs.get(ja.array), low._aggregate(keys, values, nk, ja.op), ja.op
-                        )
-                        jpres[(ja.key.table, ja.key.field)] = self._merge(
-                            jpres.get((ja.key.table, ja.key.field)),
-                            low._aggregate(keys, ones, nk, "+"),
-                            "+",
-                        )
-                else:
-                    items = tuple(low._join_gather(el, j, jr, c2) for el in j.items)
-                    chunk_rows = _densify({"columns": items, "present": jr.present})
-                    sel = np.nonzero(np.asarray(jr.present))[0]
-                    local_probe = (
-                        np.asarray(jr.probe_idx)[sel] if jr.probe_idx is not None else sel
+                    n = int(bidx.shape[0])
+                    mb = bucket_rows(n)
+                    bnp = {f: a[bidx] for f, a in self._cols_np.get(_j.build_table, {}).items()}
+                    bk = bnp.get(_j.build_key)
+                    order = (
+                        np.argsort(bk, kind="stable") if bk is not None and n else np.arange(n)
                     )
-                    rows_out.extend(zip(idx[local_probe].tolist(), chunk_rows))
+                    bcols = {}
+                    for f, a in bnp.items():
+                        buf = np.zeros((mb,), a.dtype)
+                        buf[:n] = a[order]
+                        bcols[f] = jnp.asarray(buf)
+                    skbuf = np.full(
+                        (mb,),
+                        _key_sentinel(bk.dtype) if bk is not None else 0,
+                        bk.dtype if bk is not None else np.int32,
+                    )
+                    if bk is not None:
+                        skbuf[:n] = bk[order]
+                    hit = (bcols, jnp.asarray(skbuf), np.int32(n))
+                    with build_lock:
+                        build_cache[key] = hit
+                    return hit
+
+                def work(ch, _k=kern, _e=env, _j=j):
+                    p, idx, d = ch
+                    bcols, sk, nvb = build_side_padded(p)
+                    chunk, nv = self._padded_chunk(_j.probe_table, idx, d)
+                    d.build_bucket = int(sk.shape[0])
+                    res, d.compiled = _k(chunk, nv, bcols, sk, nvb, _e)
+                    return res
+            else:
+
+                def build_side(p: int, _j=j, _ji=ji):
+                    key = (_ji, False, p if co_partitioned else -1)
+                    with build_lock:
+                        hit = build_cache.get(key)
+                    if hit is None:
+                        bidx = build_layout.rows(p) if co_partitioned else build_layout.order
+                        bcols = self._slice(_j.build_table, bidx)
+                        bk = bcols.get(_j.build_key)
+                        if bk is not None and bk.shape[0]:
+                            order = jnp.argsort(bk)
+                            hit = (bcols, (order, bk[order]))
+                        else:
+                            hit = (bcols, None)
+                        with build_lock:
+                            build_cache[key] = hit
+                    return hit
+
+                def work(ch, _j=j, _m=mult, _np=need_pres):
+                    p, idx, d = ch
+                    bcols, bsorted = build_side(p)
+                    c2 = dict(cols)
+                    c2[_j.probe_table] = self._slice(_j.probe_table, idx)
+                    c2[_j.build_table] = bcols
+                    jr = low._join_rows(_j, _m, c2, build_sorted=bsorted)
+                    if _j.aggs:
+                        outs = []
+                        for ja in _j.aggs:
+                            nk = low.num_keys[(ja.key.table, ja.key.field)]
+                            keys, values, ones = low.join_agg_inputs(ja, _j, jr, c2)
+                            outs.append(
+                                (
+                                    low._aggregate(keys, values, nk, ja.op),
+                                    low._aggregate(keys, ones, nk, "+") if _np else None,
+                                )
+                            )
+                        return tuple(outs)
+                    items = tuple(low._join_gather(el, _j, jr, c2) for el in _j.items)
+                    return items, jr.present, jr.probe_idx
+
+            parts = self._dispatch(chunks, work)
             if j.aggs:
-                for ja in j.aggs:
+                jaccs: Dict[str, Any] = {}
+                jpres: Dict[Tuple, Any] = {}
+                for part in parts:
+                    for ja, pk, (a_, p_) in zip(j.aggs, jpkeys, part):
+                        jaccs[ja.array] = self._merge(jaccs.get(ja.array), a_, ja.op)
+                        if need_pres:
+                            jpres[pk] = self._merge(jpres.get(pk), p_, "+")
+                if not need_pres:
+                    jpres = {pk: self._presence_cache[pk] for pk in jpkeys}
+                elif j_cacheable and parts:
+                    self._presence_cache.update(jpres)
+                for ja, pk in zip(j.aggs, jpkeys):
                     nk = low.num_keys[(ja.key.table, ja.key.field)]
                     arrays[ja.array] = (
                         jaccs[ja.array] if ja.array in jaccs else jnp.zeros((nk,), jnp.int32)
                     )
-                    pk = (ja.key.table, ja.key.field)
-                    presence[pk] = jpres.get(pk, jnp.zeros((nk,), jnp.int32))
+                    presence[(ja.key.table, ja.key.field)] = jpres.get(
+                        pk, jnp.zeros((nk,), jnp.int32)
+                    )
             else:
+                # (original probe row, emitted tuple): chunks arrive in hash-
+                # partition order, but the visible row order must not depend
+                # on the (K, schedule) choice — restore probe-row-major order
+                # (the jax backend's emission order) before returning.
                 # stable: within one probe row, match slots keep their
                 # sorted-build emission order — identical to the jax backend
+                rows_out: List[Tuple[int, Tuple]] = []
+                for (_, idx, _d), part in zip(chunks, parts):
+                    items, present, probe_idx = part
+                    chunk_rows = _densify({"columns": items, "present": present})
+                    sel = np.nonzero(np.asarray(present))[0]
+                    local_probe = np.asarray(probe_idx)[sel] if probe_idx is not None else sel
+                    rows_out.extend(zip(idx[local_probe].tolist(), chunk_rows))
                 out[j.result] = [r for _, r in sorted(rows_out, key=lambda t: t[0])]
 
         # --- scalar reductions: chunked partial sums -------------------------
-        for sr in spec.scalar_reduces:
+        for si, sr in enumerate(spec.scalar_reduces):
             layout = self._layout(sr.table, self._partition_key_for(sr.table, None))
+            chunks = self._chunks(layout, f"reduce:{sr.var}")
+            if use_jit:
+                kern = self._kernel(("reduce", si), lambda s=sr: low.chunk_reduce_fn(s))
+                env = self._kernel_env((sr.expr, sr.filter_pred), sr.table, pcols)
+                snap = dict(arrays)
+
+                def work(ch, _k=kern, _e=env, _a=snap, _t=sr.table):
+                    _, idx, d = ch
+                    chunk, nv = self._padded_chunk(_t, idx, d)
+                    res, d.compiled = _k(chunk, nv, _e, _a)
+                    return res
+            else:
+
+                def work(ch, _sr=sr):
+                    _, idx, d = ch
+                    c2 = dict(cols)
+                    c2[_sr.table] = self._slice(_sr.table, idx)
+                    expr = low._vec(_sr.expr, c2, _sr.table, arrays)
+                    mask = None
+                    if _sr.match_field is not None:
+                        mv = _sr.match_value
+                        if isinstance(mv, Const):
+                            mval = jnp.asarray(mv.value)
+                        else:
+                            mval = c2["__params__"][mv.name]
+                        mask = c2[_sr.table][_sr.match_field] == mval
+                    pmask = low._pred_mask(_sr.filter_pred, c2, _sr.table)
+                    if pmask is not None:
+                        mask = pmask if mask is None else (mask & pmask)
+                    vals = jnp.broadcast_to(expr, (int(idx.shape[0]),))
+                    if mask is not None:
+                        vals = jnp.where(mask, vals, 0)
+                    return jnp.sum(vals)
+
             total = None
-            for _, idx in self._chunks(layout, f"reduce:{sr.var}"):
-                c2 = dict(cols)
-                c2[sr.table] = self._slice(sr.table, idx)
-                expr = low._vec(sr.expr, c2, sr.table, arrays)
-                mask = None
-                if sr.match_field is not None:
-                    mv = sr.match_value
-                    if isinstance(mv, Const):
-                        mval = jnp.asarray(mv.value)
-                    else:
-                        mval = c2["__params__"][mv.name]
-                    mask = c2[sr.table][sr.match_field] == mval
-                pmask = low._pred_mask(sr.filter_pred, c2, sr.table)
-                if pmask is not None:
-                    mask = pmask if mask is None else (mask & pmask)
-                vals = jnp.broadcast_to(expr, (int(idx.shape[0]),))
-                if mask is not None:
-                    vals = jnp.where(mask, vals, 0)
-                total = self._merge(total, jnp.sum(vals), "+")
+            for part in self._dispatch(chunks, work):
+                total = self._merge(total, part, "+")
             out[sr.var] = total if total is not None else jnp.asarray(0)
 
         # --- distinct reads: one read-out over the MERGED accumulators ------
@@ -374,16 +776,33 @@ class PartitionedPlan:
             out[dr.result] = _densify({"columns": items, "present": present})
 
         # --- filter/project: streaming chunks, concatenated ------------------
-        for fp in spec.filter_projects:
+        for fi, fp in enumerate(spec.filter_projects):
             layout = self._layout(fp.table, self._partition_key_for(fp.table, None))
+            chunks = self._chunks(layout, f"project:{fp.result}")
+            if use_jit:
+                kern = self._kernel(("project", fi), lambda f=fp: low.chunk_project_fn(f))
+                env = self._kernel_env(list(fp.items) + [fp.filter_pred], fp.table, pcols)
+
+                def work(ch, _k=kern, _e=env, _t=fp.table):
+                    _, idx, d = ch
+                    chunk, nv = self._padded_chunk(_t, idx, d)
+                    res, d.compiled = _k(chunk, nv, _e)
+                    return res
+            else:
+
+                def work(ch, _fp=fp):
+                    _, idx, d = ch
+                    c2 = dict(cols)
+                    c2[_fp.table] = self._slice(_fp.table, idx)
+                    mask = low._pred_mask(_fp.filter_pred, c2, _fp.table)
+                    items = tuple(low._vec(el, c2, _fp.table, arrays) for el in _fp.items)
+                    if mask is None:
+                        mask = jnp.ones((int(idx.shape[0]),), bool)
+                    return items, mask
+
             rows_out = []
-            for _, idx in self._chunks(layout, f"project:{fp.result}"):
-                c2 = dict(cols)
-                c2[fp.table] = self._slice(fp.table, idx)
-                mask = low._pred_mask(fp.filter_pred, c2, fp.table)
-                items = tuple(low._vec(el, c2, fp.table, arrays) for el in fp.items)
-                if mask is None:
-                    mask = jnp.ones((int(idx.shape[0]),), bool)
+            for (_, idx, _d), part in zip(chunks, self._dispatch(chunks, work)):
+                items, mask = part
                 chunk_rows = _densify({"columns": items, "present": mask})
                 sel = np.nonzero(np.asarray(mask))[0]
                 rows_out.extend(zip(idx[sel].tolist(), chunk_rows))
@@ -391,15 +810,67 @@ class PartitionedPlan:
             out[fp.result] = [r for _, r in sorted(rows_out, key=lambda t: t[0])]
 
         final = {k: _densify(v) for k, v in out.items() if k in self.program.results}
-        return apply_order_limit(self.program, final)
+        result = apply_order_limit(self.program, final)
+        self.last_run_ms = (time.perf_counter() - t_run0) * 1e3
+        return result
 
     # -- introspection -------------------------------------------------------
+    def runtime_report(self) -> Dict[str, Any]:
+        """Measured execution profile of the last ``run()``: per-op chunk
+        timings with the achieved worker imbalance, the same measured
+        per-chunk costs replayed through ``sched.simulate_schedule`` under
+        the configured policy (modeled imbalance — what EXPLAIN ANALYZE
+        puts next to the planner's skew estimate), and the chunk-kernel
+        jit-cache counters."""
+        per_op: Dict[str, List[ChunkDispatch]] = {}
+        for d in self.dispatch_log:
+            per_op.setdefault(d.op, []).append(d)
+        ops = []
+        for op, ds in per_op.items():
+            busy: Dict[int, float] = {}
+            for d in ds:
+                busy[d.worker] = busy.get(d.worker, 0.0) + d.t_ms
+            entry: Dict[str, Any] = {
+                "op": op,
+                "n_chunks": len(ds),
+                "rows": int(sum(d.rows for d in ds)),
+                "t_ms": float(sum(d.t_ms for d in ds)),
+                "achieved_imbalance": worker_imbalance(busy),
+            }
+            total = sum(d.rows for d in ds)
+            if total and all(d.t_ms >= 0.0 for d in ds) and any(d.t_ms > 0 for d in ds):
+                iter_costs = np.concatenate(
+                    [np.full(d.rows, d.t_ms / max(1, d.rows)) for d in ds]
+                )
+                sim = simulate_schedule(self._policy(total), iter_costs, self.k)
+                entry["modeled_imbalance"] = sim.imbalance()
+                entry["modeled_makespan_ms"] = float(sim.makespan)
+            ops.append(entry)
+        return {
+            "k": self.k,
+            "schedule": self.choices.schedule,
+            "async_dispatch": bool(self.choices.async_dispatch),
+            "n_workers": self._n_workers() if self.choices.async_dispatch else 1,
+            "jit_chunks": bool(self.choices.jit_chunks),
+            "wall_ms": self.last_run_ms,
+            "ops": ops,
+            "jit": {
+                "compiles": self.jit_stats.compiles,
+                "hits": self.jit_stats.hits,
+                "overflows": self.jit_stats.overflows,
+                "hit_rate": self.jit_stats.hit_rate,
+                "kernels": len(self._kernels),
+                "buckets": int(sum(k.n_buckets for k in self._kernels.values())),
+            },
+        }
+
     def describe(self) -> str:
         pf = self.choices.partition_field
         pfs = f"{pf[0]}.{pf[1]}" if pf else "-"
         return (
             f"partition={pfs} K={self.k} schedule={self.choices.schedule} "
-            f"chunks={len(self.dispatch_log)}"
+            f"chunks={len(self.dispatch_log)} jit={'on' if self.choices.jit_chunks else 'off'} "
+            f"async={'on' if self.choices.async_dispatch else 'off'}"
         )
 
 

@@ -55,6 +55,13 @@ class OptimizeOptions:
     # (sched/loop_schedule.py): 'auto' → planner-chosen ('static' with the
     # fixed pipeline); or pin 'static' | 'fixed' | 'guided'.
     schedule: str = "auto"
+    # bucketed jit chunk kernels: pad each chunk up to a geometric shape
+    # bucket so per-chunk kernels compile once per (kernel, bucket)
+    jit_chunks: bool = True
+    # overlap host-side chunk slice/upload with device execution via a
+    # thread worker pool (double-buffered dispatch; self-scheduling
+    # policies become real load balancing)
+    async_dispatch: bool = True
 
 
 @dataclass
@@ -133,6 +140,8 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
             backend=opts.backend,
             n_partitions=opts.n_partitions,
             schedule=None if opts.schedule == "auto" else schedule,
+            jit_chunks=opts.jit_chunks,
+            async_dispatch=opts.async_dispatch,
         )
         decision, explain = outcome.decision, outcome.explain
         if outcome.cached_entry is not None:
@@ -194,6 +203,8 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
             n_partitions=n_partitions,
             schedule=schedule,
             partition_field=partition_field,
+            jit_chunks=opts.jit_chunks,
+            async_dispatch=opts.async_dispatch,
         )
     plan = get_backend(opts.backend).compile(p, db, choices)
     if outcome is not None:

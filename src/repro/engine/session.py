@@ -98,6 +98,8 @@ class Session:
         backend: str = "jax",
         n_partitions: Optional[int] = None,
         schedule: str = "auto",
+        jit_chunks: bool = True,
+        async_dispatch: bool = True,
         plan_cache: Optional[PlanCache] = None,
         reformat: bool = True,
         expected_runs: int = 20,
@@ -124,6 +126,10 @@ class Session:
         # 'auto' leave the choice to the cost planner
         self.n_partitions = n_partitions
         self.schedule = schedule
+        # bucketed jit chunk kernels + double-buffered worker-pool dispatch
+        # (backends/partitioned.py); part of the plan-cache fingerprint
+        self.jit_chunks = jit_chunks
+        self.async_dispatch = async_dispatch
         self.reformat = reformat
         self.expected_runs = expected_runs
         self.mesh = mesh
@@ -267,9 +273,18 @@ class Session:
         key, prog = self._mr_program(spec)
         return self._submit(key, prog, params, source="mapreduce", text=repr(spec))
 
-    def explain(self, query: Any) -> str:
-        """Plan (and compile+cache, but do not execute) a SQL string or
-        ``MapReduceSpec`` and return the planner's EXPLAIN text."""
+    def explain(
+        self, query: Any, analyze: bool = False, params: Optional[Dict[str, Any]] = None
+    ) -> str:
+        """Plan (and compile+cache) a SQL string or ``MapReduceSpec`` and
+        return the planner's EXPLAIN text.
+
+        ``analyze=True`` additionally *executes* the plan and appends the
+        measured profile — on the partitioned backend: per-op chunk
+        timings, achieved worker imbalance vs the schedule model's
+        prediction over the same measured chunk costs (next to the
+        planner's skew estimate above it), and the chunk-kernel jit cache
+        hit-rate."""
         if self.planner != "cost":
             raise EngineError("explain requires a cost-planned session (planner='cost')")
         self._revalidate()
@@ -278,7 +293,22 @@ class Session:
         else:
             key, prog = self._sql_program(str(query))
         res, _ = self._prepare(key, prog)
-        return res.explain or "(no explain available)"
+        text = res.explain or "(no explain available)"
+        if analyze:
+            t0 = time.perf_counter()
+            res.plan.run(params)
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            report = getattr(res.plan, "runtime_report", None)
+            if report is not None:
+                from repro.planner import render_analyze
+
+                text += "\n" + render_analyze(report())
+            else:
+                text += (
+                    f"\n  analyze (measured): wall={wall_ms:.1f}ms "
+                    f"(backend {self.backend!r} has no chunk dispatch)"
+                )
+        return text
 
     # -- the one pipeline ----------------------------------------------------
     def _prepare(self, key: str, prog: Program) -> Tuple[OptimizeResult, bool]:
@@ -300,6 +330,8 @@ class Session:
                 backend=self.backend,
                 n_partitions=self.n_partitions,
                 schedule=self.schedule,
+                jit_chunks=self.jit_chunks,
+                async_dispatch=self.async_dispatch,
                 reformat=self.reformat,
                 expected_runs=self.expected_runs,
                 mesh=self.mesh,

@@ -27,7 +27,7 @@ from .cardinality import CardinalityEstimator, LoopEstimate
 from .cost import CostCoefficients, CostModel, calibrate
 from .enumerate import Candidate, Decision, enumerate_candidates, plan_query
 from .cache import DEFAULT_CACHE, CacheEntry, PlanCache, program_fingerprint
-from .explain import render_explain
+from .explain import render_analyze, render_explain
 from .driver import PlannerOutcome, run_planner
 
 __all__ = [
@@ -48,6 +48,7 @@ __all__ = [
     "CacheEntry",
     "PlanCache",
     "program_fingerprint",
+    "render_analyze",
     "render_explain",
     "PlannerOutcome",
     "run_planner",

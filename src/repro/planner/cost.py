@@ -43,7 +43,12 @@ class CostCoefficients:
     c_join_probe: float = 3.0    # searchsorted probe per row
     c_output: float = 1.0        # materializing one output cell
     # -- partitioned execution (backends/partitioned.py) --------------------
-    c_part_launch: float = 6e3   # per-chunk dispatch / kernel-launch overhead
+    # Re-calibrated for the bucketed-jit + async runtime: a dispatch is one
+    # jitted kernel call pulled by a pooled worker (was 6e3 when every
+    # chunk ran ~30 eager jnp ops serially); the XLA compile is paid once
+    # per (kernel, shape bucket) and amortizes across a plan's lifetime.
+    c_part_launch: float = 1.2e3   # per-chunk dispatch of a jitted chunk kernel
+    c_part_compile: float = 2.5e4  # one-time compile per (kernel, shape bucket)
     c_mem_rows: float = 1e6      # rows whose working set fits device memory
     c_mem_penalty: float = 4.0   # per element beyond c_mem_rows (spill/paging)
 
@@ -132,6 +137,18 @@ class CostModel:
             return float(K)
         raise ValueError(f"unknown schedule {schedule!r}")
 
+    def est_buckets(self, schedule: str, n_partitions: int, rows: float) -> float:
+        """Distinct shape buckets a schedule's chunk sizes touch — each one
+        costs one XLA compile (backends/partitioned.py pads chunks to a
+        geometric bucket set).  Static and fixed produce (nearly) equal
+        chunk sizes → one bucket; guided's geometrically decaying sizes
+        cross ~log2(rows/K) buckets."""
+        if rows <= 0:
+            return 0.0
+        if schedule in ("guided", "gss"):
+            return 1.0 + math.log2(max(2.0, rows / max(1, n_partitions)))
+        return 1.0
+
     def partition_skew(
         self, table: str, partition_field: Optional[Tuple[str, str]], n_partitions: int, schedule: str
     ) -> float:
@@ -176,7 +193,8 @@ class CostModel:
             total = (
                 base * self.partition_skew(agg.table, pf, K, schedule)
                 + rows * c.c_scan                     # hash + shuffle pass
-                + nch * c.c_part_launch               # chunk dispatches
+                + nch * c.c_part_launch               # jitted chunk dispatches
+                + self.est_buckets(schedule, K, rows) * c.c_part_compile
                 + nch * nk * c.c_combine              # partial-accumulator merges
                 + self.memory_penalty(rows / K)       # per-chunk working set
             )
@@ -188,7 +206,12 @@ class CostModel:
             rows = float(self.stats.n_rows(sr.table))
             nch = self.est_chunks(schedule, K, rows)
             breakdown.append(
-                (f"reduce {sr.var} over {sr.table} (K={K})", rows * c.c_scan + nch * c.c_part_launch)
+                (
+                    f"reduce {sr.var} over {sr.table} (K={K})",
+                    rows * c.c_scan
+                    + nch * c.c_part_launch
+                    + self.est_buckets(schedule, K, rows) * c.c_part_compile,
+                )
             )
 
         for dr in spec.distinct_reads:
@@ -206,7 +229,8 @@ class CostModel:
                     f"filter/project {fp.table} (K={K})",
                     rows * c.c_scan
                     + sel * rows * c.c_output * max(1, len(fp.items))
-                    + nch * c.c_part_launch,
+                    + nch * c.c_part_launch
+                    + self.est_buckets(schedule, K, rows) * c.c_part_compile,
                 )
             )
 
@@ -220,6 +244,7 @@ class CostModel:
                 * self.partition_skew(j.probe_table, (j.probe_table, j.probe_fk), K, schedule)
                 + (probe + build) * c.c_scan          # shuffle both sides on the key
                 + nch * c.c_part_launch
+                + self.est_buckets(schedule, K, probe) * c.c_part_compile
                 + self.memory_penalty((probe + build) / K)
             )
             if j.aggs:

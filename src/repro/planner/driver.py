@@ -52,6 +52,8 @@ def run_planner(
     backend: str = "jax",
     n_partitions: Optional[int] = None,
     schedule: Optional[str] = None,
+    jit_chunks: bool = True,
+    async_dispatch: bool = True,
 ) -> PlannerOutcome:
     cache = plan_cache if plan_cache is not None else DEFAULT_CACHE
     # the cached plan was compiled under these planning inputs — different
@@ -59,10 +61,12 @@ def run_planner(
     # is shared across callers with different options).  The executor
     # backend is part of the key: a plan compiled by one backend must never
     # be served to a caller asking for another; likewise a pinned K /
-    # schedule produces a different compiled plan than the planner's pick.
+    # schedule / chunk-dispatch knob (jit_chunks, async_dispatch) produces
+    # a different compiled plan than the planner's pick.
     fp = (
         f"{program_fingerprint(program)}|n{n_parts}|s{int(allow_shard_map)}"
         f"|c{hash(coeffs)}|b{backend}|K{n_partitions}|sch{schedule}"
+        f"|j{int(jit_chunks)}|a{int(async_dispatch)}"
     )
     epoch = db.stats_epoch()
 

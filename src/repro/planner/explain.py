@@ -1,9 +1,14 @@
 # EXPLAIN rendering: estimated cardinalities alongside the chosen plan and
 # the priced alternatives, so a user can see *why* the planner picked what
-# it picked (and whether the plan came from the cache).
+# it picked (and whether the plan came from the cache).  EXPLAIN ANALYZE
+# appends the *measured* execution profile (``render_analyze``): achieved
+# worker imbalance from the dispatch log next to the schedule model's
+# prediction over the same measured chunk costs, plus the chunk-kernel jit
+# cache hit-rate — so the planner's skew estimate can be checked against
+# what actually happened.
 from __future__ import annotations
 
-from typing import Optional
+from typing import Any, Dict, Optional
 
 from .enumerate import Decision
 
@@ -70,4 +75,39 @@ def render_explain(
             )
         if len(alts) > max_alternatives:
             lines.append(f"    ... {len(alts) - max_alternatives} more")
+    return "\n".join(lines)
+
+
+def render_analyze(report: Dict[str, Any]) -> str:
+    """Render a ``PartitionedPlan.runtime_report()`` as the ANALYZE block
+    appended to EXPLAIN output: measured wall-clock, per-op achieved vs
+    modeled imbalance (the measured per-chunk times replayed through
+    ``sched.simulate_schedule`` under the configured policy), and the
+    bucketed-jit chunk-kernel cache counters."""
+    lines = [
+        "  analyze (measured):"
+        f" wall={report['wall_ms']:.1f}ms K={report['k']}"
+        f" schedule={report['schedule']}"
+        f" jit={'on' if report['jit_chunks'] else 'off'}"
+        f" async={'on' if report['async_dispatch'] else 'off'}"
+        f" workers={report['n_workers']}"
+    ]
+    for op in report.get("ops", []):
+        modeled = (
+            f" modeled_imbalance={op['modeled_imbalance'] * 100:.1f}%"
+            if "modeled_imbalance" in op
+            else ""
+        )
+        lines.append(
+            f"    {op['op']:<40s} chunks={op['n_chunks']:<4d} rows={op['rows']:<9d}"
+            f" busy={op['t_ms']:.1f}ms"
+            f" achieved_imbalance={op['achieved_imbalance'] * 100:.1f}%{modeled}"
+        )
+    jit = report.get("jit", {})
+    if jit:
+        lines.append(
+            f"    jit cache: kernels={jit['kernels']} buckets={jit['buckets']}"
+            f" compiles={jit['compiles']} hits={jit['hits']}"
+            f" overflows={jit['overflows']} hit_rate={jit['hit_rate'] * 100:.1f}%"
+        )
     return "\n".join(lines)

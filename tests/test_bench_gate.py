@@ -106,6 +106,29 @@ def test_partition_key_ratios_gated_individually(tmp_path):
     assert comps["join_mono_vs_partitioned"].regressed             # 1.0 <  2.0/1.5
 
 
+def test_compile_counts_gated_lower_is_better(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    payload = {"key_ratios": {"agg_uniform_mono_vs_partitioned": 1.5},
+               "key_counts": {"agg_uniform_jit_compiles": 8}}
+    _write(base, "BENCH_partition.json", payload)
+    # compile count exploded 10x while the ratio stayed fine: must fail
+    _write(fresh, "BENCH_partition.json",
+           {"key_ratios": {"agg_uniform_mono_vs_partitioned": 1.5},
+            "key_counts": {"agg_uniform_jit_compiles": 80}})
+    comps = {c.metric: c for c in gate.compare(str(fresh), str(base), tolerance=2.0)}
+    assert comps["agg_uniform_jit_compiles"].lower_is_better
+    assert comps["agg_uniform_jit_compiles"].regressed       # 80 > 8 * 2.0
+    assert not comps["agg_uniform_mono_vs_partitioned"].regressed
+    assert gate.main(["--tolerance=2.0",
+                      f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 1
+    # fewer compiles than baseline is an improvement, not a regression
+    _write(fresh, "BENCH_partition.json",
+           {"key_ratios": {"agg_uniform_mono_vs_partitioned": 1.5},
+            "key_counts": {"agg_uniform_jit_compiles": 2}})
+    assert gate.main(["--tolerance=2.0",
+                      f"--baseline-dir={base}", f"--fresh-dir={fresh}"]) == 0
+
+
 def test_tolerance_is_configurable(tmp_path):
     base, fresh = tmp_path / "base", tmp_path / "fresh"
     _write(base, "BENCH_engine.json", _engine_report([6.0]))

@@ -1,0 +1,326 @@
+# Bucketed-jit chunk kernels + async double-buffered dispatch
+# (backends/partitioned.py): shape-bucket math, op-identity padding per
+# dtype, the bounded jit cache with compile/hit accounting, bit-identical
+# results across the jit_chunks × async_dispatch matrix, worker-pool
+# dispatch, and EXPLAIN ANALYZE.
+import numpy as np
+import pytest
+
+from repro.backends import (
+    PartitionedChoices,
+    PartitionedPlan,
+    Plan,
+    ReferenceInterpreter,
+    get_backend,
+)
+from repro.backends.partitioned import BUCKET_MIN, bucket_rows
+from repro.data.multiset import Database, Multiset
+from repro.engine import Session
+from repro.frontends.sql import sql_to_forelem
+from repro.planner import PlanCache
+
+SCHEMAS = {"t": ["k", "v"]}
+
+
+def _db(n=5000, key_range=16, seed=0, dtype=np.int32):
+    rng = np.random.default_rng(seed)
+    return Database().add(
+        Multiset.from_columns(
+            "t",
+            k=rng.integers(0, key_range, n).astype(np.int32),
+            v=rng.integers(-1000, 1000, n).astype(dtype),
+        )
+    )
+
+
+def _run(p, db, **choice_kw):
+    plan = get_backend("partitioned").compile(p, db, PartitionedChoices(**choice_kw))
+    return plan, plan.run()
+
+
+# ---------------------------------------------------------------------------
+# shape buckets
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_rows_basics():
+    assert bucket_rows(0) == BUCKET_MIN
+    assert bucket_rows(1) == BUCKET_MIN
+    assert bucket_rows(BUCKET_MIN) == BUCKET_MIN
+    # exact bucket boundaries need no padding
+    for exact in (2048, 4096, 1280, 1536, 1792, 196608):
+        assert bucket_rows(exact) == exact
+    # monotonic, always >= n, bounded padding waste
+    prev = 0
+    for n in range(1, 300_000, 1373):
+        b = bucket_rows(n)
+        assert b >= n and b >= prev
+        prev = b
+        if n > BUCKET_MIN:
+            assert b / n <= 1.61, f"padding waste too high at {n} -> {b}"
+
+
+def test_bucket_set_is_small_and_geometric():
+    buckets = sorted({bucket_rows(n) for n in range(1, 2_000_000, 997)})
+    # ~4 buckets per power of two across the whole range
+    assert len(buckets) <= 4 * 22
+    ratios = [b / a for a, b in zip(buckets, buckets[1:])]
+    assert max(ratios) <= 2.0 + 1e-9
+
+
+def test_chunk_on_exact_bucket_boundary_not_padded(rng):
+    # K=2 static over 2048 rows -> two chunks of exactly 1024 = BUCKET_MIN
+    # (constant key: all rows hash to one partition, so the static policy's
+    # 1024-row blocks land exactly on the bucket boundary)
+    db = Database().add(
+        Multiset.from_columns(
+            "t",
+            k=np.zeros(2048, np.int32),
+            v=rng.integers(-9, 9, 2048).astype(np.int32),
+        )
+    )
+    p = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan, out = _run(p, db, n_partitions=2, schedule="static", jit_chunks=True)
+    aggs = [d for d in plan.dispatch_log if d.op.startswith("agg:")]
+    assert all(d.bucket == d.rows == 1024 for d in aggs)
+
+
+# ---------------------------------------------------------------------------
+# op-identity padding per dtype / op
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int64, np.float32])
+@pytest.mark.parametrize("agg", ["MIN", "MAX", "SUM"])
+def test_identity_padding_per_dtype(rng, agg, dtype):
+    # all-negative values: zero-padding would corrupt MAX; all-positive
+    # would hide MIN corruption — use both signs and a filter so masked
+    # rows and padded rows both must contribute the identity
+    db = _db(n=3000, key_range=8, dtype=dtype)
+    p = sql_to_forelem(f"SELECT k, {agg}(v) FROM t WHERE v < 900 GROUP BY k", SCHEMAS)
+    ref = sorted(ReferenceInterpreter(db).run(p)["R"])
+    for sched in ("static", "fixed", "guided"):
+        _, out = _run(p, db, n_partitions=3, schedule=sched, jit_chunks=True)
+        assert sorted(out["R"]) == ref, (agg, dtype, sched)
+
+
+def test_empty_table_with_jit(rng):
+    db = Database().add(
+        Multiset.from_columns("t", k=np.array([], np.int32), v=np.array([], np.int32))
+    )
+    p = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan, out = _run(p, db, n_partitions=4, jit_chunks=True, async_dispatch=True)
+    assert out["R"] == []
+    assert plan.dispatch_log == []  # no chunks — nothing dispatched
+
+
+# ---------------------------------------------------------------------------
+# differential matrix: jit x async must be bit-identical
+# ---------------------------------------------------------------------------
+
+MATRIX_QUERIES = [
+    "SELECT k, SUM(v) FROM t GROUP BY k",
+    "SELECT k, MIN(v), MAX(v) FROM t WHERE v > -500 GROUP BY k",
+    "SELECT SUM(v) FROM t WHERE v > 0",
+    "SELECT k, v FROM t WHERE v > 250",
+]
+
+
+@pytest.mark.parametrize("sql", MATRIX_QUERIES)
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_differential_jit_async_matrix(rng, sql, dtype):
+    db = _db(n=4000, dtype=dtype)
+    p = sql_to_forelem(sql, SCHEMAS)
+    results = {}
+    for jit in (True, False):
+        for asyn in (True, False):
+            _, out = _run(p, db, n_partitions=4, schedule="guided",
+                          jit_chunks=jit, async_dispatch=asyn)
+            results[(jit, asyn)] = out.get("R", out.get("scalar"))
+    base = results[(False, False)]
+    for key, got in results.items():
+        assert got == base, f"{key} diverged from serial eager"  # bit-identical
+    if dtype is np.int32:  # float chunk sums legitimately differ from mono's order
+        mono = Plan(p, db).run()
+        mono = mono.get("R", mono.get("scalar"))
+        if isinstance(base, list):
+            assert sorted(base) == sorted(mono)
+        else:
+            assert base == mono
+
+
+def test_differential_join_matrix(rng):
+    A = Multiset.from_columns("A", b_id=rng.integers(0, 9, 700).astype(np.int32),
+                              w=rng.integers(-40, 40, 700).astype(np.int32))
+    B = Multiset.from_columns("B", id=rng.integers(0, 9, 50).astype(np.int32),
+                              g=rng.integers(0, 5, 50).astype(np.int32))
+    db = Database().add(A).add(B)
+    schemas = {"A": ["b_id", "w"], "B": ["id", "g"]}
+    for sql in ("SELECT a.w, b.g FROM A a, B b WHERE a.b_id = b.id",
+                "SELECT b.g, COUNT(b.g), SUM(a.w) FROM A a, B b WHERE a.b_id = b.id GROUP BY b.g"):
+        p = sql_to_forelem(sql, schemas)
+        base = None
+        for jit in (True, False):
+            for asyn in (True, False):
+                plan, out = _run(p, db, n_partitions=5, schedule="fixed",
+                                 jit_chunks=jit, async_dispatch=asyn)
+                plan2 = plan.run()["R"]  # second run: presence/build caches hot
+                if base is None:
+                    base = out["R"]
+                assert out["R"] == base == plan2, (sql, jit, asyn)
+
+
+# ---------------------------------------------------------------------------
+# jit cache accounting
+# ---------------------------------------------------------------------------
+
+
+def test_compile_counters_stable_across_runs(rng):
+    db = _db(n=6000)
+    p = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan = get_backend("partitioned").compile(
+        p, db, PartitionedChoices(n_partitions=4, schedule="guided", jit_chunks=True)
+    )
+    plan.run()
+    plan.run()  # compiles the presence-cached kernel variant
+    after_warm = plan.jit_stats.compiles
+    plan.run()
+    plan.run()
+    assert plan.jit_stats.compiles == after_warm  # no recompiles once warm
+    assert plan.jit_stats.hits > 0
+    # one compile per (kernel, bucket): never more than buckets x kernels
+    buckets = {d.bucket for d in plan.dispatch_log if d.bucket}
+    assert plan.jit_stats.compiles <= max(1, len(buckets)) * len(plan._kernels)
+    assert all(d.bucket >= d.rows for d in plan.dispatch_log)
+
+
+def test_bounded_jit_cache_overflows_to_eager(rng):
+    db = _db(n=9000)
+    p = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan = get_backend("partitioned").compile(
+        p, db,
+        PartitionedChoices(n_partitions=4, schedule="guided",
+                           jit_chunks=True, jit_cache_cap=1),
+    )
+    out = sorted(plan.run()["R"])
+    assert plan.jit_stats.overflows > 0          # cache full -> eager fallback
+    assert plan.jit_stats.compiles <= plan.choices.jit_cache_cap * len(plan._kernels)
+    assert out == sorted(ReferenceInterpreter(db).run(p)["R"])  # still correct
+
+
+def test_eager_mode_never_compiles(rng):
+    db = _db()
+    p = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan, _ = _run(p, db, n_partitions=4, jit_chunks=False)
+    assert plan.jit_stats.compiles == 0 and plan.jit_stats.hits == 0
+    assert all(d.bucket == 0 for d in plan.dispatch_log)  # unpadded
+
+
+# ---------------------------------------------------------------------------
+# async worker pool
+# ---------------------------------------------------------------------------
+
+
+def test_worker_pool_assignment_and_timing(rng):
+    db = _db(n=8000)
+    p = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan = get_backend("partitioned").compile(
+        p, db,
+        PartitionedChoices(n_partitions=4, schedule="fixed",
+                           jit_chunks=True, async_dispatch=True, n_workers=3),
+    )
+    plan.run()
+    aggs = [d for d in plan.dispatch_log if d.op.startswith("agg:")]
+    assert len(aggs) > 1
+    assert {d.worker for d in aggs} <= {0, 1, 2}   # pool workers, not virtual ids
+    assert all(d.t_ms >= 0.0 for d in aggs)
+    assert sum(d.t_ms for d in aggs) > 0.0         # measured, not defaulted
+
+
+def test_async_worker_errors_propagate(rng):
+    db = _db(n=4000)
+    p = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan = get_backend("partitioned").compile(
+        p, db, PartitionedChoices(n_partitions=4, schedule="fixed", async_dispatch=True)
+    )
+    boom = RuntimeError("chunk failed")
+
+    def bad_work(ch):
+        raise boom
+
+    chunks = plan._chunks(plan._layout("t", None), "agg:x")
+    with pytest.raises(RuntimeError, match="chunk failed"):
+        plan._dispatch(chunks, bad_work)
+
+
+# ---------------------------------------------------------------------------
+# runtime report + EXPLAIN ANALYZE
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_report_shape(rng):
+    db = _db(n=8000)
+    p = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan = get_backend("partitioned").compile(
+        p, db,
+        PartitionedChoices(n_partitions=4, schedule="guided",
+                           jit_chunks=True, async_dispatch=True),
+    )
+    plan.run()
+    rep = plan.runtime_report()
+    assert rep["k"] == 4 and rep["schedule"] == "guided"
+    (op,) = [o for o in rep["ops"] if o["op"].startswith("agg:")]
+    assert op["rows"] == 8000
+    assert 0.0 <= op["achieved_imbalance"] <= 1.0
+    assert "modeled_imbalance" in op and 0.0 <= op["modeled_imbalance"] <= 1.0
+    assert rep["jit"]["compiles"] >= 1 and 0.0 <= rep["jit"]["hit_rate"] <= 1.0
+
+
+def test_session_explain_analyze(rng):
+    s = Session(n_parts=4, backend="partitioned", plan_cache=PlanCache())
+    s.register("logs", url=rng.integers(0, 64, 20_000).astype(np.int32),
+               lat=rng.integers(0, 300, 20_000).astype(np.int32))
+    q = "SELECT url, SUM(lat) FROM logs GROUP BY url"
+    text = s.explain(q, analyze=True)
+    assert "analyze (measured):" in text
+    assert "achieved_imbalance=" in text and "jit cache:" in text
+    # plain EXPLAIN stays execution-free
+    assert "analyze" not in s.explain(q).splitlines()[-1]
+
+
+def test_session_explain_analyze_monolithic_backend(rng):
+    s = Session(plan_cache=PlanCache())
+    s.register("logs", url=rng.integers(0, 8, 500).astype(np.int32))
+    text = s.explain("SELECT url, COUNT(url) FROM logs GROUP BY url", analyze=True)
+    assert "analyze (measured): wall=" in text and "no chunk dispatch" in text
+
+
+def test_knobs_in_plan_cache_fingerprint(rng):
+    # flipping jit_chunks/async_dispatch must not serve the other's plan
+    cols = dict(url=rng.integers(0, 8, 300).astype(np.int32))
+    q = "SELECT url, COUNT(url) FROM logs GROUP BY url"
+    cache = PlanCache()
+    s1 = Session(backend="partitioned", plan_cache=cache,
+                 jit_chunks=True, async_dispatch=True).register("logs", **cols)
+    r1 = s1.sql(q)
+    s2 = Session(backend="partitioned", plan_cache=cache,
+                 jit_chunks=False, async_dispatch=False).register("logs", **cols)
+    r2 = s2.sql(q)
+    assert r1.rows == r2.rows
+    assert r2.plan.choices.jit_chunks is False       # not s1's cached plan
+    assert r1.plan.choices.jit_chunks is True
+
+
+def test_presence_cache_respects_filters(rng):
+    # a filtered aggregation must never reuse the unfiltered presence (and
+    # vice versa): groups emptied by the filter must stay absent
+    kk = np.array([0, 0, 1, 2, 2, 3], np.int32)
+    v = np.array([5, 7, -9, 2, 4, -100], np.int32)
+    db = Database().add(Multiset.from_columns("t", k=kk, v=v))
+    pf = sql_to_forelem("SELECT k, SUM(v) FROM t WHERE v > 0 GROUP BY k", SCHEMAS)
+    pu = sql_to_forelem("SELECT k, SUM(v) FROM t GROUP BY k", SCHEMAS)
+    plan = PartitionedPlan(pu, db, PartitionedChoices(n_partitions=2, jit_chunks=True))
+    assert sorted(plan.run()["R"]) == sorted(ReferenceInterpreter(db).run(pu)["R"])
+    planf = PartitionedPlan(pf, db, PartitionedChoices(n_partitions=2, jit_chunks=True))
+    for _ in range(2):  # second run exercises any cached-presence path
+        assert sorted(planf.run()["R"]) == [(0, 12), (2, 6)]
