@@ -12,6 +12,15 @@
 # overhead; BENCH_engine.json reports it per query alongside the speedup
 # of the warm path over cold optimization.
 #
+# Two guards ride along:
+#   tracing overhead — warm dispatch with a live Tracer vs the NULL_TRACER
+#     fast path must stay within TRACE_OVERHEAD_CAP (5%); a breach prints a
+#     WARN row (timing on shared runners is too noisy for a hard exit),
+#   key_counts — the plan-cache miss count of the standard query mix is
+#     machine-independent and gated lower-is-better by check_regression.py,
+#     so a caching regression (fingerprint churn, memo eviction) fails CI
+#     even when wall-clock noise hides it.
+#
 # Run:  PYTHONPATH=src python benchmarks/bench_engine.py
 from __future__ import annotations
 
@@ -21,11 +30,13 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro import MapReduceSpec, OptimizeOptions, Session, optimize, sql_to_forelem
+from repro import MapReduceSpec, OptimizeOptions, Session, Tracer, optimize, sql_to_forelem
+from repro.obs import NULL_TRACER
 from repro.planner import PlanCache
 
 N_ROWS = 200_000
 WARM_REPEATS = 20
+TRACE_OVERHEAD_CAP = 0.05  # warm dispatch: traced vs NULL_TRACER fast path
 
 
 def _make_columns(n: int = N_ROWS, seed: int = 0) -> Dict[str, np.ndarray]:
@@ -107,10 +118,43 @@ def run() -> List[Tuple[str, float, str]]:
     rows.append(("engine_mr_warm_session", t_mr_warm * 1e6,
                  f"first_submit_cache_hit={mr.cache_hit}"))
 
+    # tracing-overhead guard: the same warm query with a live Tracer; spans
+    # are drained between timings so the buffer never grows unbounded.  The
+    # untraced path must stay a true no-op (NULL_TRACER fast path).
+    q0 = QUERIES[0]
+    t_off = _best(lambda: session.sql(q0), WARM_REPEATS)
+    tracer = Tracer()
+    session.tracer = tracer
+
+    def traced():
+        session.sql(q0)
+        tracer.drain()
+
+    t_on = _best(traced, WARM_REPEATS)
+    session.tracer = NULL_TRACER
+    overhead = t_on / max(t_off, 1e-9) - 1.0
+    status = "ok" if overhead <= TRACE_OVERHEAD_CAP else "WARN>5%"
+    rows.append(("engine_warm_untraced", t_off * 1e6, "1.0x"))
+    rows.append(("engine_warm_traced", t_on * 1e6, f"overhead={overhead * 100:+.1f}% {status}"))
+    if overhead > TRACE_OVERHEAD_CAP:
+        print(f"WARNING: tracing overhead {overhead * 100:.1f}% exceeds "
+              f"{TRACE_OVERHEAD_CAP * 100:.0f}% cap", flush=True)
+    report["tracing"] = {
+        "warm_untraced_us": t_off * 1e6,
+        "warm_traced_us": t_on * 1e6,
+        "overhead_frac": overhead,
+        "cap_frac": TRACE_OVERHEAD_CAP,
+        "within_cap": bool(overhead <= TRACE_OVERHEAD_CAP),
+    }
+
     report["cache"] = session.cache_stats()
+    # gated lower-is-better: misses for this fixed mix are deterministic
+    # (one per distinct query shape; MR + warm repeats must all hit)
+    report["key_counts"] = {"plan_cache_misses": int(report["cache"]["misses"])}
     with open("BENCH_engine.json", "w") as f:
         json.dump(report, f, indent=2)
     rows.append(("engine_plan_cache_entries", float(len(session.plan_cache)), "BENCH_engine.json"))
+    rows.append(("engine_plan_cache_misses", float(report["cache"]["misses"]), "gated (lower is better)"))
     return rows
 
 

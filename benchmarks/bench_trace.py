@@ -1,0 +1,43 @@
+# Trace artifact producer: run one representative partitioned query (cold
+# compile, then a warm repeat) under ``Session.profile()`` and write the
+# Chrome trace-event file ``BENCH_trace.json.gz`` — uploaded by ci.yml and
+# nightly.yml so any CI run's span tree can be dropped straight into
+# Perfetto (ui.perfetto.dev → Open trace file) or summarized with
+# ``scripts/trace_summary.py``.
+#
+# Run:  PYTHONPATH=src python benchmarks/bench_trace.py
+from __future__ import annotations
+
+import os
+from typing import List, Tuple
+
+import numpy as np
+
+from repro import Session
+
+N_ROWS = int(os.environ.get("BENCH_TRACE_ROWS", "200000"))
+OUT = "BENCH_trace.json.gz"
+QUERY = "SELECT url, COUNT(url) FROM logs GROUP BY url"
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(7)
+    s = Session(backend="partitioned", n_partitions=8, schedule="guided",
+                jit_chunks=True, async_dispatch=True)
+    s.register("logs", url=(rng.zipf(1.3, N_ROWS) % 3000).astype(np.int32))
+    with s.profile() as qt:
+        s.sql(QUERY)   # cold: parse → plan → lower → compile → dispatch
+        s.sql(QUERY)   # warm: dispatch-memo hit + jitted chunk kernels
+    qt.save(OUT)
+    n_dispatch = len(qt.dispatch_records())
+    wall_ms = sum(sp.dur_ms for sp in qt.roots())
+    return [
+        ("trace_spans", float(len(qt)), OUT),
+        ("trace_dispatch_spans", float(n_dispatch), f"rows={N_ROWS}"),
+        ("trace_wall", wall_ms * 1e3, f"{len(qt.roots())} queries"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

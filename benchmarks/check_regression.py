@@ -9,11 +9,12 @@
 # ``baseline / tolerance`` is a regression.
 #
 # Reports may also publish ``key_counts`` — *lower-is-better* integers
-# (today: jit chunk-kernel compile counts from bench_partition.py).  These
-# are machine-independent (the schedule policy fully determines the chunk
-# sizes, hence the shape buckets), so a fresh count above ``baseline ×
-# tolerance`` fails even when small-scale wall-clock hides the recompile
-# explosion.
+# (jit chunk-kernel compile counts from bench_partition.py; plan-cache miss
+# counts from bench_engine.py).  These are machine-independent (the
+# schedule policy fully determines the chunk sizes, hence the shape
+# buckets; the fixed query mix fully determines how many distinct plans
+# must be compiled), so a fresh count above ``baseline × tolerance`` fails
+# even when small-scale wall-clock hides the recompile/recache explosion.
 #
 # Run:  PYTHONPATH=src python benchmarks/check_regression.py \
 #           [--tolerance 1.5] [--baseline-dir benchmarks/baselines] [--fresh-dir .]
@@ -62,6 +63,10 @@ def _partition_counts(d: Dict) -> Dict[str, float]:
     return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
 
 
+def _engine_counts(d: Dict) -> Dict[str, float]:
+    return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
+
+
 # report file -> metric extractor (name -> higher-is-better ratio)
 EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_engine.json": _engine_metrics,
@@ -73,6 +78,7 @@ EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
 # report file -> lower-is-better count extractor (compile counts etc.)
 COUNT_EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_partition.json": _partition_counts,
+    "BENCH_engine.json": _engine_counts,
 }
 
 

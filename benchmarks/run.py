@@ -21,6 +21,7 @@ def main() -> int:
         bench_pipeline,
         bench_planner,
         bench_sched,
+        bench_trace,
     )
 
     suites = [
@@ -32,6 +33,7 @@ def main() -> int:
         ("join", bench_join.run),
         ("engine", bench_engine.run),
         ("partition", bench_partition.run),
+        ("trace", bench_trace.run),   # writes BENCH_trace.json.gz (CI artifact)
     ]
     print("name,us_per_call,derived")
     for name, fn in suites:

@@ -15,6 +15,7 @@ from repro.core.passes import OptimizeOptions, OptimizeResult, optimize  # noqa:
 from repro.frontends.sql import sql_to_forelem  # noqa: F401
 from repro.frontends.mapreduce import MapReduceSpec  # noqa: F401
 from repro.data.multiset import Database, Multiset  # noqa: F401
+from repro.obs import MetricsRegistry, QueryTrace, Tracer  # noqa: F401
 
 __all__ = [
     "Session",
@@ -27,4 +28,7 @@ __all__ = [
     "MapReduceSpec",
     "Database",
     "Multiset",
+    "Tracer",
+    "QueryTrace",
+    "MetricsRegistry",
 ]

@@ -13,11 +13,20 @@ from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
 class ExecutablePlan(Protocol):
     """What a backend's ``compile`` returns: a program bound to data, ready
     to run.  ``run`` executes and returns the program's results (multiset
-    results densified to lists of tuples, scalars as Python values)."""
+    results densified to lists of tuples, scalars as Python values).
+
+    ``tracer`` (keyword-only, default None) is a ``repro.obs.Tracer``; a
+    backend emits its execution spans into it — per-chunk ``dispatch``
+    spans on the partitioned backend — and must treat None / the null
+    tracer as the zero-overhead fast path.  Plans are cached and shared
+    across queries, so the tracer is a *run-time* argument, never plan
+    state."""
 
     program: Any  # repro.core.ir.Program
 
-    def run(self, params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    def run(
+        self, params: Optional[Dict[str, Any]] = None, *, tracer: Any = None
+    ) -> Dict[str, Any]:
         ...
 
 

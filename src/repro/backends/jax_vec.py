@@ -644,13 +644,26 @@ class Plan:
                     cols[t][f] = jnp.asarray(ms.field(f))
         return cols
 
-    def run(self, params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        cols = self.input_columns()
-        if params:
-            cols["__params__"] = {k: jnp.asarray(v) for k, v in params.items()}
-        raw = self.fn(cols)
-        out = {k: _densify(v) for k, v in raw.items() if k in self.program.results}
-        return apply_order_limit(self.program, out)
+    def run(
+        self, params: Optional[Dict[str, Any]] = None, *, tracer: Any = None
+    ) -> Dict[str, Any]:
+        if tracer is None or not tracer.enabled:
+            cols = self.input_columns()
+            if params:
+                cols["__params__"] = {k: jnp.asarray(v) for k, v in params.items()}
+            raw = self.fn(cols)
+            out = {k: _densify(v) for k, v in raw.items() if k in self.program.results}
+            return apply_order_limit(self.program, out)
+        with tracer.span("jax.upload"):
+            cols = self.input_columns()
+            if params:
+                cols["__params__"] = {k: jnp.asarray(v) for k, v in params.items()}
+        with tracer.span("jax.compute"):
+            raw = self.fn(cols)
+            jax.block_until_ready(raw)  # traced runs attribute device time here
+        with tracer.span("densify"):
+            out = {k: _densify(v) for k, v in raw.items() if k in self.program.results}
+            return apply_order_limit(self.program, out)
 
 
 class JaxBackend:

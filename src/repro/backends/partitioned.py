@@ -50,7 +50,8 @@ import jax.numpy as jnp
 
 from repro.core.ir import Const, Program, apply_order_limit
 from repro.data.multiset import Database
-from repro.sched.loop_schedule import make_policy, simulate_schedule, worker_imbalance
+from repro.obs.trace import NULL_TRACER
+from repro.sched.loop_schedule import busy_times, make_policy, simulate_schedule, worker_imbalance
 
 from .codegen import _densify, required_columns
 from .interface import register_backend
@@ -224,6 +225,23 @@ class ChunkDispatch:
     build_bucket: int = 0    # padded build-side rows (join kernels only)
     t_ms: float = 0.0
     compiled: bool = False   # this dispatch triggered a fresh XLA compile
+    queue_ms: float = 0.0    # dispatch-start → execution-start wait
+
+    def trace_attrs(self) -> Dict[str, Any]:
+        """The fields a per-chunk ``dispatch`` span carries — the trace is
+        a superset view of the dispatch log, so the two can be checked
+        against each other."""
+        return {
+            "op": self.op,
+            "partition": self.partition,
+            "rows": self.rows,
+            "worker": self.worker,
+            "bucket": self.bucket,
+            "build_bucket": self.build_bucket,
+            "t_ms": self.t_ms,
+            "compiled": self.compiled,
+            "queue_ms": self.queue_ms,
+        }
 
 
 @dataclass
@@ -437,7 +455,12 @@ class PartitionedPlan:
             return self.choices.n_workers
         return min(max(2, self.k), os.cpu_count() or 1, 8)
 
-    def _dispatch(self, chunks: List[Tuple[int, np.ndarray, ChunkDispatch]], work) -> List[Any]:
+    def _dispatch(
+        self,
+        chunks: List[Tuple[int, np.ndarray, ChunkDispatch]],
+        work,
+        tr=NULL_TRACER,
+    ) -> List[Any]:
         """Run ``work`` over every chunk and return results in chunk order
         (partials are always merged in that order, so async execution is
         bit-identical to serial).  Serial mode leaves jax's own async
@@ -445,49 +468,78 @@ class PartitionedPlan:
         runs a worker pool where each worker pulls its next chunk only
         after its previous one finished on device — the ChunkPolicy's
         dispatch order becomes real load balancing, and one worker's
-        host-side slice/pad/upload overlaps another's device execution."""
+        host-side slice/pad/upload overlaps another's device execution.
+
+        With an enabled tracer, one ``dispatch:<op>`` span wraps the whole
+        op and each chunk emits a ``dispatch`` span carrying the
+        ``ChunkDispatch`` fields — attached to the op span by *explicit*
+        parent id, because worker threads have no span stack to inherit
+        from."""
         results: List[Any] = [None] * len(chunks)
-        nw = self._n_workers()
-        if not self.choices.async_dispatch or nw <= 1 or len(chunks) <= 1:
-            for i, ch in enumerate(chunks):
-                t0 = time.perf_counter()
-                results[i] = work(ch)
-                ch[2].t_ms = (time.perf_counter() - t0) * 1e3
+        if not chunks:
             return results
-        it = iter(enumerate(chunks))
-        lock = threading.Lock()
-        errors: List[BaseException] = []
+        traced = tr.enabled
+        op_span = tr.start(f"dispatch:{chunks[0][2].op}", n_chunks=len(chunks)) if traced else None
+        op_id = op_span.id if traced else None
+        t_disp0 = time.perf_counter()
+        nw = self._n_workers()
+        try:
+            if not self.choices.async_dispatch or nw <= 1 or len(chunks) <= 1:
+                for i, ch in enumerate(chunks):
+                    d = ch[2]
+                    t0 = time.perf_counter()
+                    d.queue_ms = (t0 - t_disp0) * 1e3
+                    if traced:
+                        s = tr.start("dispatch", parent=op_id, seq=i)
+                    results[i] = work(ch)
+                    d.t_ms = (time.perf_counter() - t0) * 1e3
+                    if traced:
+                        tr.end(s, **d.trace_attrs())
+                return results
+            it = iter(enumerate(chunks))
+            lock = threading.Lock()
+            errors: List[BaseException] = []
 
-        def runner(w: int) -> None:
-            while not errors:
-                with lock:
-                    nxt = next(it, None)
-                if nxt is None:
-                    return
-                i, ch = nxt
-                d = ch[2]
-                d.worker = w
-                t0 = time.perf_counter()
-                try:
-                    r = work(ch)
-                    jax.block_until_ready(r)
-                except BaseException as e:  # re-raised in the caller
-                    errors.append(e)
-                    return
-                d.t_ms = (time.perf_counter() - t0) * 1e3
-                results[i] = r
+            def runner(w: int) -> None:
+                while not errors:
+                    with lock:
+                        nxt = next(it, None)
+                    if nxt is None:
+                        return
+                    i, ch = nxt
+                    d = ch[2]
+                    d.worker = w
+                    t0 = time.perf_counter()
+                    d.queue_ms = (t0 - t_disp0) * 1e3
+                    if traced:
+                        s = tr.start("dispatch", parent=op_id, seq=i)
+                    try:
+                        r = work(ch)
+                        jax.block_until_ready(r)
+                    except BaseException as e:  # re-raised in the caller
+                        if traced:
+                            tr.end(s, error=type(e).__name__)
+                        errors.append(e)
+                        return
+                    d.t_ms = (time.perf_counter() - t0) * 1e3
+                    if traced:
+                        tr.end(s, **d.trace_attrs())
+                    results[i] = r
 
-        threads = [
-            threading.Thread(target=runner, args=(w,), daemon=True)
-            for w in range(min(nw, len(chunks)))
-        ]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        if errors:
-            raise errors[0]
-        return results
+            threads = [
+                threading.Thread(target=runner, args=(w,), daemon=True)
+                for w in range(min(nw, len(chunks)))
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+            return results
+        finally:
+            if traced:
+                tr.end(op_span)
 
     # -- partial merging -----------------------------------------------------
     @staticmethod
@@ -503,7 +555,10 @@ class PartitionedPlan:
         raise ValueError(f"bad merge op {op}")
 
     # -- execution -------------------------------------------------------------
-    def run(self, params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    def run(
+        self, params: Optional[Dict[str, Any]] = None, *, tracer: Any = None
+    ) -> Dict[str, Any]:
+        tr = tracer if tracer is not None else NULL_TRACER
         t_run0 = time.perf_counter()
         low = self.lowering
         spec = self.spec
@@ -554,7 +609,7 @@ class PartitionedPlan:
                     )
 
             acc = pres = None
-            for part in self._dispatch(chunks, work):
+            for part in self._dispatch(chunks, work, tr):
                 acc = self._merge(acc, part[0], agg.op)
                 if need_pres:
                     pres = self._merge(pres, part[1], "+")
@@ -681,7 +736,7 @@ class PartitionedPlan:
                     items = tuple(low._join_gather(el, _j, jr, c2) for el in _j.items)
                     return items, jr.present, jr.probe_idx
 
-            parts = self._dispatch(chunks, work)
+            parts = self._dispatch(chunks, work, tr)
             if j.aggs:
                 jaccs: Dict[str, Any] = {}
                 jpres: Dict[Tuple, Any] = {}
@@ -756,7 +811,7 @@ class PartitionedPlan:
                     return jnp.sum(vals)
 
             total = None
-            for part in self._dispatch(chunks, work):
+            for part in self._dispatch(chunks, work, tr):
                 total = self._merge(total, part, "+")
             out[sr.var] = total if total is not None else jnp.asarray(0)
 
@@ -801,7 +856,7 @@ class PartitionedPlan:
                     return items, mask
 
             rows_out = []
-            for (_, idx, _d), part in zip(chunks, self._dispatch(chunks, work)):
+            for (_, idx, _d), part in zip(chunks, self._dispatch(chunks, work, tr)):
                 items, mask = part
                 chunk_rows = _densify({"columns": items, "present": mask})
                 sel = np.nonzero(np.asarray(mask))[0]
@@ -821,15 +876,41 @@ class PartitionedPlan:
         per-chunk costs replayed through ``sched.simulate_schedule`` under
         the configured policy (modeled imbalance — what EXPLAIN ANALYZE
         puts next to the planner's skew estimate), and the chunk-kernel
-        jit-cache counters."""
+        jit-cache counters.
+
+        Always well-formed: a plan that was built but never run — or ran
+        over a 0-row table, so no chunk was ever dispatched — reports
+        ``ran=False`` with an empty ``ops`` list instead of degenerating."""
+        return self._build_report(self.dispatch_log)
+
+    def report_from_trace(self, trace: Any) -> Dict[str, Any]:
+        """The same runtime report, re-expressed over a ``QueryTrace``'s
+        per-chunk ``dispatch`` spans instead of the plan's own dispatch
+        log — EXPLAIN ANALYZE consumes the trace, so the log is a
+        cross-checkable view rather than the only source of truth."""
+        dispatches = [
+            ChunkDispatch(
+                op=r.get("op", "?"),
+                partition=int(r.get("partition", 0)),
+                rows=int(r.get("rows", 0)),
+                worker=int(r.get("worker", 0)),
+                bucket=int(r.get("bucket", 0)),
+                build_bucket=int(r.get("build_bucket", 0)),
+                t_ms=float(r.get("t_ms", 0.0)),
+                compiled=bool(r.get("compiled", False)),
+                queue_ms=float(r.get("queue_ms", 0.0)),
+            )
+            for r in trace.dispatch_records()
+        ]
+        return self._build_report(dispatches)
+
+    def _build_report(self, dispatches: List[ChunkDispatch]) -> Dict[str, Any]:
         per_op: Dict[str, List[ChunkDispatch]] = {}
-        for d in self.dispatch_log:
+        for d in dispatches:
             per_op.setdefault(d.op, []).append(d)
         ops = []
         for op, ds in per_op.items():
-            busy: Dict[int, float] = {}
-            for d in ds:
-                busy[d.worker] = busy.get(d.worker, 0.0) + d.t_ms
+            busy = busy_times((d.worker, d.t_ms) for d in ds)
             entry: Dict[str, Any] = {
                 "op": op,
                 "n_chunks": len(ds),
@@ -853,6 +934,10 @@ class PartitionedPlan:
             "n_workers": self._n_workers() if self.choices.async_dispatch else 1,
             "jit_chunks": bool(self.choices.jit_chunks),
             "wall_ms": self.last_run_ms,
+            "ran": bool(dispatches),
+            "n_dispatches": len(dispatches),
+            "queue_wait_ms": float(sum(d.queue_ms for d in dispatches)),
+            "worker_busy_ms": float(sum(d.t_ms for d in dispatches)),
             "ops": ops,
             "jit": {
                 "compiles": self.jit_stats.compiles,

@@ -189,8 +189,13 @@ class ReferencePlan:
         self.program = program
         self.db = db
 
-    def run(self, params: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        return ReferenceInterpreter(self.db, params).run(self.program)
+    def run(
+        self, params: Optional[Dict[str, Any]] = None, *, tracer: Any = None
+    ) -> Dict[str, Any]:
+        if tracer is None or not tracer.enabled:
+            return ReferenceInterpreter(self.db, params).run(self.program)
+        with tracer.span("reference.interpret"):
+            return ReferenceInterpreter(self.db, params).run(self.program)
 
 
 class ReferenceBackend:

@@ -22,6 +22,7 @@ from .distribution import optimize_distribution, DistributionReport
 from .reformat import auto_reformat, ReformatPlan
 from repro.backends import ExecutablePlan, get_backend
 from repro.backends.jax_vec import CodegenChoices
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -62,6 +63,10 @@ class OptimizeOptions:
     # thread worker pool (double-buffered dispatch; self-scheduling
     # policies become real load balancing)
     async_dispatch: bool = True
+    # repro.obs.Tracer receiving per-stage spans (passes, cache.lookup,
+    # plan.enumerate, lower); None → NULL_TRACER (zero-cost no-ops).  Not
+    # part of any plan fingerprint — tracing must never change the plan.
+    tracer: Any = None
 
 
 @dataclass
@@ -89,6 +94,7 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     """
     opts = opts or OptimizeOptions()
     trace: List[str] = []
+    tr = opts.tracer if opts.tracer is not None else NULL_TRACER
 
     def log(stage: str, p: Program) -> None:
         if opts.trace:
@@ -98,15 +104,18 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     log("input", p)
 
     # -- 1. query optimization ------------------------------------------------
-    p = T.loop_interchange(p)
-    p = T.dead_code_elimination(p)
-    p = T.loop_fusion(p)
+    with tr.span("passes"):
+        p = T.loop_interchange(p)
+        p = T.dead_code_elimination(p)
+        p = T.loop_fusion(p)
     log("query-optimized", p)
 
     # -- 2. data reformatting ---------------------------------------------------
     ref_plan = None
     if opts.reformat:
-        db, ref_plan = auto_reformat(p, db, opts.expected_runs)
+        with tr.span("reformat") as rs:
+            db, ref_plan = auto_reformat(p, db, opts.expected_runs)
+            rs.set(applied=ref_plan is not None and bool(getattr(ref_plan, "steps", None)))
 
     # -- 2b. cost-based planning (optional; repro.planner) ----------------------
     # Fills the codegen knobs + loop order from table statistics; a plan-cache
@@ -142,6 +151,7 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
             schedule=None if opts.schedule == "auto" else schedule,
             jit_chunks=opts.jit_chunks,
             async_dispatch=opts.async_dispatch,
+            tracer=tr,
         )
         decision, explain = outcome.decision, outcome.explain
         if outcome.cached_entry is not None:
@@ -172,20 +182,22 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     # + scheduled chunk dispatch) instead of restructuring the IR, so the
     # loop-level partitioning transform is skipped for it.
     if n_parts > 1 and opts.partition != "none" and opts.backend != "partitioned":
-        if opts.partition == "direct":
-            p = partition_direct(p, n_parts, mesh_axis=opts.mesh_axis)
-        else:
-            tf = partition_field
-            if tf is None:
-                tf = _default_partition_field(p)
-            if tf is not None:
-                p = partition_indirect(p, tf[0], tf[1], n_parts, mesh_axis=opts.mesh_axis)
-        p = T.iteration_space_expansion(p)
+        with tr.span("parallelize", n_parts=n_parts, partition=opts.partition):
+            if opts.partition == "direct":
+                p = partition_direct(p, n_parts, mesh_axis=opts.mesh_axis)
+            else:
+                tf = partition_field
+                if tf is None:
+                    tf = _default_partition_field(p)
+                if tf is not None:
+                    p = partition_indirect(p, tf[0], tf[1], n_parts, mesh_axis=opts.mesh_axis)
+            p = T.iteration_space_expansion(p)
         log("parallelized", p)
 
     # -- 5. distribution ---------------------------------------------------------
     dist_report = None
-    p, dist_report = optimize_distribution(p, db=db)
+    with tr.span("distribute"):
+        p, dist_report = optimize_distribution(p, db=db)
     log("distributed", p)
 
     # -- 6. codegen ----------------------------------------------------------------
@@ -206,7 +218,8 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
             jit_chunks=opts.jit_chunks,
             async_dispatch=opts.async_dispatch,
         )
-    plan = get_backend(opts.backend).compile(p, db, choices)
+    with tr.span("lower", backend=opts.backend):
+        plan = get_backend(opts.backend).compile(p, db, choices)
     if outcome is not None:
         outcome.store(plan, p)
     return OptimizeResult(

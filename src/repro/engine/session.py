@@ -18,8 +18,9 @@ from __future__ import annotations
 
 import time
 from collections import deque
+from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 from repro.core.ir import Program
 from repro.core.passes import OptimizeOptions, OptimizeResult, optimize
@@ -27,6 +28,7 @@ from repro.core.transforms import canonicalize_array_names
 from repro.data.multiset import Database, Multiset
 from repro.frontends.mapreduce import MapReduceSpec, mapreduce_to_forelem
 from repro.frontends.sql import sql_to_forelem
+from repro.obs import NULL_TRACER, MetricsRegistry, QueryTrace, Tracer
 from repro.planner import PlanCache
 
 
@@ -105,7 +107,10 @@ class Session:
         expected_runs: int = 20,
         mesh: Any = None,
         history_limit: int = 256,
+        max_query_log: Optional[int] = None,
         revalidate: str = "content",
+        trace: Union[bool, Tracer] = False,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if revalidate not in ("content", "signature"):
             raise EngineError(f"revalidate must be 'content' or 'signature', got {revalidate!r}")
@@ -135,8 +140,25 @@ class Session:
         self.mesh = mesh
         self.revalidate = revalidate
         # lightweight query log: metadata only — QueryResults pin their full
-        # densified rows and compiled plans, which a log must not retain
-        self.history: Deque[QueryLogEntry] = deque(maxlen=history_limit)
+        # densified rows and compiled plans, which a log must not retain.
+        # A *ring buffer*: the cap (``max_query_log``, or the legacy
+        # ``history_limit`` spelling) evicts the oldest entry, so long-lived
+        # serving sessions never grow without bound.
+        cap = max_query_log if max_query_log is not None else history_limit
+        if cap is not None and cap < 1:
+            raise EngineError(f"max_query_log must be >= 1, got {cap}")
+        self.max_query_log = cap
+        self.history: Deque[QueryLogEntry] = deque(maxlen=cap)
+        # observability (repro.obs): the session-scoped tracer — NULL_TRACER
+        # unless tracing was requested (zero-overhead no-ops on every hot
+        # path) — and the metrics registry every query feeds.  A fresh
+        # registry per session by default; pass ``repro.obs.METRICS`` to
+        # share the process-wide one across sessions.
+        if isinstance(trace, (Tracer,)):
+            self.tracer: Any = trace
+        else:
+            self.tracer = Tracer() if trace else NULL_TRACER
+        self.metrics_registry = metrics if metrics is not None else MetricsRegistry()
         # warm-dispatch memo: (query key, stats epoch) → OptimizeResult;
         # bounded like the plan cache — serving traffic with per-request
         # literals would otherwise pin one compiled plan per query text
@@ -172,7 +194,9 @@ class Session:
         self.db.add(ms)
         if replacing:
             self.db.bump_epoch()
-            self.plan_cache.invalidate_epoch(old_epoch)
+            self.metrics_registry.inc(
+                "plan_cache.invalidations", self.plan_cache.invalidate_epoch(old_epoch)
+            )
         self._refresh_epoch()
         return self
 
@@ -182,7 +206,9 @@ class Session:
         old_epoch = self._epoch
         del self.db.tables[name]
         self.db.bump_epoch()
-        self.plan_cache.invalidate_epoch(old_epoch)
+        self.metrics_registry.inc(
+            "plan_cache.invalidations", self.plan_cache.invalidate_epoch(old_epoch)
+        )
         self._refresh_epoch()
         return self
 
@@ -231,7 +257,10 @@ class Session:
         key = f"sql::{query}"
         prog = self._get_program(key)
         if prog is None:
-            prog = canonicalize_array_names(sql_to_forelem(query, self.schemas()))
+            with self.tracer.span("sql.parse"):
+                raw = sql_to_forelem(query, self.schemas())
+            with self.tracer.span("canonicalize"):
+                prog = canonicalize_array_names(raw)
             self._memo_program(key, prog)
         return key, prog
 
@@ -241,9 +270,10 @@ class Session:
         key = f"mr::{spec!r}"
         prog = self._get_program(key)
         if prog is None:
-            prog = canonicalize_array_names(
-                mapreduce_to_forelem(spec, self.db[spec.table].field_names())
-            )
+            with self.tracer.span("mr.translate"):
+                raw = mapreduce_to_forelem(spec, self.db[spec.table].field_names())
+            with self.tracer.span("canonicalize"):
+                prog = canonicalize_array_names(raw)
             self._memo_program(key, prog)
         return key, prog
 
@@ -262,16 +292,22 @@ class Session:
     def sql(self, query: str, params: Optional[Dict[str, Any]] = None) -> QueryResult:
         """Submit a SQL query through the engine pipeline."""
         self._revalidate()
-        key, prog = self._sql_program(query)
-        return self._submit(key, prog, params, source="sql", text=query)
+        with self.tracer.span("query", source="sql", query=query) as qs:
+            key, prog = self._sql_program(query)
+            qr = self._submit(key, prog, params, source="sql", text=query)
+            qs.set(cache_hit=qr.cache_hit, dispatch_hit=qr.dispatch_hit)
+        return qr
 
     def mapreduce(self, spec: MapReduceSpec, params: Optional[Dict[str, Any]] = None) -> QueryResult:
         """Submit a declarative MapReduce job through the *same* pipeline as
         SQL — the job is translated onto the forelem IR (paper §IV) and gets
         planner-chosen execution strategies and plan caching for free."""
         self._revalidate()
-        key, prog = self._mr_program(spec)
-        return self._submit(key, prog, params, source="mapreduce", text=repr(spec))
+        with self.tracer.span("query", source="mapreduce", query=repr(spec)) as qs:
+            key, prog = self._mr_program(spec)
+            qr = self._submit(key, prog, params, source="mapreduce", text=repr(spec))
+            qs.set(cache_hit=qr.cache_hit, dispatch_hit=qr.dispatch_hit)
+        return qr
 
     def explain(
         self, query: Any, analyze: bool = False, params: Optional[Dict[str, Any]] = None
@@ -295,14 +331,19 @@ class Session:
         res, _ = self._prepare(key, prog)
         text = res.explain or "(no explain available)"
         if analyze:
+            # ANALYZE is expressed on top of the obs trace: the plan runs
+            # under a profiling tracer and the report is rebuilt from the
+            # per-chunk dispatch spans (the dispatch log stays available as
+            # a cross-check — tests assert the two agree)
             t0 = time.perf_counter()
-            res.plan.run(params)
+            with self.profile() as qt:
+                res.plan.run(params, tracer=self.tracer)
             wall_ms = (time.perf_counter() - t0) * 1e3
-            report = getattr(res.plan, "runtime_report", None)
-            if report is not None:
+            from_trace = getattr(res.plan, "report_from_trace", None)
+            if from_trace is not None:
                 from repro.planner import render_analyze
 
-                text += "\n" + render_analyze(report())
+                text += "\n" + render_analyze(from_trace(qt))
             else:
                 text += (
                     f"\n  analyze (measured): wall={wall_ms:.1f}ms "
@@ -319,24 +360,29 @@ class Session:
         if hit is not None:
             # LRU: re-insert so cap eviction removes the coldest entry
             self._dispatch[dkey] = self._dispatch.pop(dkey)
+            if self.tracer.enabled:
+                with self.tracer.span("dispatch.lookup") as ds:
+                    ds.set(hit=True)
             return hit, True
-        res = optimize(
-            prog,
-            self.db,
-            OptimizeOptions(
-                n_parts=self.n_parts,
-                planner=self.planner,
-                plan_cache=self.plan_cache,
-                backend=self.backend,
-                n_partitions=self.n_partitions,
-                schedule=self.schedule,
-                jit_chunks=self.jit_chunks,
-                async_dispatch=self.async_dispatch,
-                reformat=self.reformat,
-                expected_runs=self.expected_runs,
-                mesh=self.mesh,
-            ),
-        )
+        with self.tracer.span("optimize", backend=self.backend):
+            res = optimize(
+                prog,
+                self.db,
+                OptimizeOptions(
+                    n_parts=self.n_parts,
+                    planner=self.planner,
+                    plan_cache=self.plan_cache,
+                    backend=self.backend,
+                    n_partitions=self.n_partitions,
+                    schedule=self.schedule,
+                    jit_chunks=self.jit_chunks,
+                    async_dispatch=self.async_dispatch,
+                    reformat=self.reformat,
+                    expected_runs=self.expected_runs,
+                    mesh=self.mesh,
+                    tracer=self.tracer,
+                ),
+            )
         # reformatting persists across the session (amortization, §III-C1);
         # adopting the reformatted database moves the epoch forward
         if res.db is not self.db:
@@ -352,7 +398,9 @@ class Session:
     ) -> QueryResult:
         t0 = time.perf_counter()
         res, dispatch_hit = self._prepare(key, prog)
-        out = res.plan.run(params)
+        jit_before = self._jit_counters(res.plan)
+        with self.tracer.span("execute", backend=self.backend):
+            out = res.plan.run(params, tracer=self.tracer)
         qr = QueryResult(
             results=out,
             source=source,
@@ -368,9 +416,101 @@ class Session:
         self.history.append(
             QueryLogEntry(source, text, qr.cache_hit, qr.dispatch_hit, qr.elapsed_s)
         )
+        self._record_metrics(qr, res, jit_before)
         return qr
 
+    # -- metrics recording ---------------------------------------------------
+    @staticmethod
+    def _jit_counters(plan: Any) -> Optional[Tuple[int, int, int]]:
+        js = getattr(plan, "jit_stats", None)
+        if js is None:
+            return None
+        return (js.compiles, js.hits, js.overflows)
+
+    def _record_metrics(
+        self, qr: QueryResult, res: OptimizeResult, jit_before: Optional[Tuple[int, int, int]]
+    ) -> None:
+        """Feed one query's observable outcome into the metrics registry —
+        the engine-wide absorption point for the counters that previously
+        lived only on individual objects (plan jit stats, plan cache,
+        dispatch log)."""
+        m = self.metrics_registry
+        m.inc("queries", source=qr.source)
+        m.inc("plan_cache.hit" if qr.cache_hit else "plan_cache.miss")
+        if qr.dispatch_hit:
+            m.inc("dispatch.hit")
+        m.observe("query.latency_ms", qr.elapsed_s * 1e3)
+        jit_after = self._jit_counters(res.plan)
+        if jit_before is not None and jit_after is not None:
+            m.inc("jit.compiles", jit_after[0] - jit_before[0])
+            m.inc("jit.hits", jit_after[1] - jit_before[1])
+            m.inc("jit.overflows", jit_after[2] - jit_before[2])
+        log = getattr(res.plan, "dispatch_log", None)
+        if log:
+            m.inc("chunks.dispatched", len(log))
+            m.inc("rows.scanned", sum(d.rows for d in log))
+            m.inc("worker.busy_ms", sum(d.t_ms for d in log))
+            m.inc("queue.wait_ms", sum(d.queue_ms for d in log))
+        rows = qr.rows
+        if rows is not None:
+            m.inc("rows.emitted", len(rows))
+
+    # -- observability (repro.obs) -------------------------------------------
+    @contextmanager
+    def profile(self) -> Iterator[QueryTrace]:
+        """Trace every query submitted inside the block:
+
+        >>> with s.profile() as qt:
+        ...     s.sql("SELECT url, COUNT(url) FROM access GROUP BY url")
+        >>> qt.save("query.json.gz")     # opens in ui.perfetto.dev
+        >>> qt.stage_times()             # per-stage breakdown
+
+        The yielded ``QueryTrace`` is populated when the block exits.  A
+        session-lifetime tracer (``Session(trace=True)``) is restored
+        afterwards; spans recorded inside the block belong to the profile,
+        not to the session trace."""
+        prev = self.tracer
+        tr = Tracer()
+        self.tracer = tr
+        qt = QueryTrace(meta={"backend": self.backend, "epoch": self._epoch})
+        try:
+            yield qt
+        finally:
+            self.tracer = prev
+            qt.spans = tr.drain()
+            qt.meta["n_spans"] = len(qt.spans)
+
+    def take_trace(self) -> QueryTrace:
+        """Spans accumulated by a session-lifetime tracer
+        (``Session(trace=True)``) since the last call; clears the buffer."""
+        return QueryTrace(
+            self.tracer.drain(), meta={"backend": self.backend, "epoch": self._epoch}
+        )
+
+    def metrics(self) -> Dict[str, Any]:
+        """Snapshot of the session's metrics registry as a plain dict, with
+        the live cache gauges synced in at read time (so the snapshot always
+        matches ``PlanCache``'s own counters)."""
+        m = self.metrics_registry
+        st = self.plan_cache.stats()
+        m.set_gauge("plan_cache.entries", st["entries"])
+        m.set_gauge("plan_cache.hits", st["hits"])
+        m.set_gauge("plan_cache.misses", st["misses"])
+        m.set_gauge("dispatch.entries", len(self._dispatch))
+        m.set_gauge("query_log.entries", len(self.history))
+        return m.snapshot()
+
     # -- introspection -------------------------------------------------------
+    @property
+    def query_log(self) -> Tuple[QueryLogEntry, ...]:
+        """The bounded query log (metadata-only ring buffer, capped at
+        ``max_query_log`` entries), oldest first."""
+        return tuple(self.history)
+
+    def last_query(self) -> Optional[QueryLogEntry]:
+        """The most recent ``QueryLogEntry``, or None before any query."""
+        return self.history[-1] if self.history else None
+
     def cache_stats(self) -> Dict[str, Any]:
         st = dict(self.plan_cache.stats())
         st["dispatch_entries"] = len(self._dispatch)

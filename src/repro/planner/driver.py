@@ -15,6 +15,7 @@ from typing import Any, Optional
 
 from repro.core.ir import Program
 from repro.data.multiset import Database
+from repro.obs.trace import NULL_TRACER
 
 from .cache import DEFAULT_CACHE, CacheEntry, PlanCache, program_fingerprint
 from .enumerate import Decision, plan_query
@@ -54,7 +55,9 @@ def run_planner(
     schedule: Optional[str] = None,
     jit_chunks: bool = True,
     async_dispatch: bool = True,
+    tracer: Any = None,
 ) -> PlannerOutcome:
+    tr = tracer if tracer is not None else NULL_TRACER
     cache = plan_cache if plan_cache is not None else DEFAULT_CACHE
     # the cached plan was compiled under these planning inputs — different
     # inputs must miss, even for the same program text (and DEFAULT_CACHE
@@ -70,7 +73,9 @@ def run_planner(
     )
     epoch = db.stats_epoch()
 
-    entry = cache.get(fp, epoch)
+    with tr.span("cache.lookup") as ls:
+        entry = cache.get(fp, epoch)
+        ls.set(hit=entry is not None, fingerprint=fp[:12], epoch=epoch[:10])
     if entry is not None:
         explain = render_explain(entry.decision, name=program.name, cache_hit=True)
         return PlannerOutcome(
@@ -84,10 +89,19 @@ def run_planner(
             cached_entry=entry,
         )
 
-    stats = collect_stats(db)
-    decision = plan_query(
-        program, stats, n_parts=n_parts, coeffs=coeffs, allow_shard_map=allow_shard_map,
-        executor=backend, n_partitions=n_partitions, schedule=schedule,
-    )
+    with tr.span("plan.stats"):
+        stats = collect_stats(db)
+    # enumeration and costing happen together per candidate (plan_query
+    # prices each variant as it is produced), so one span covers both
+    with tr.span("plan.enumerate") as es:
+        decision = plan_query(
+            program, stats, n_parts=n_parts, coeffs=coeffs, allow_shard_map=allow_shard_map,
+            executor=backend, n_partitions=n_partitions, schedule=schedule,
+        )
+        es.set(
+            n_enumerated=decision.n_enumerated,
+            chosen_order=decision.chosen.order,
+            chosen_cost=float(decision.chosen.cost),
+        )
     explain = render_explain(decision, name=program.name, cache_hit=False)
     return PlannerOutcome(decision.chosen.program, decision, explain, False, fp, epoch, cache)

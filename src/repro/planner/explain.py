@@ -92,6 +92,9 @@ def render_analyze(report: Dict[str, Any]) -> str:
         f" async={'on' if report['async_dispatch'] else 'off'}"
         f" workers={report['n_workers']}"
     ]
+    if not report.get("ran", True):
+        lines.append("    (no chunks dispatched — plan not yet run, or 0-row input)")
+        return "\n".join(lines)
     for op in report.get("ops", []):
         modeled = (
             f" modeled_imbalance={op['modeled_imbalance'] * 100:.1f}%"

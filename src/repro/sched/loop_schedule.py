@@ -170,6 +170,17 @@ class ChunkRecord:
     completed: bool
 
 
+def busy_times(worker_times: Sequence[Tuple[int, float]]) -> Dict[int, float]:
+    """Fold (worker, elapsed) samples into per-worker busy totals — the
+    shared reduction between the simulator's records and a *measured*
+    dispatch log (the partitioned backend's runtime report and the obs
+    trace summary both feed chunk timings through this)."""
+    busy: Dict[int, float] = {}
+    for w, t in worker_times:
+        busy[w] = busy.get(w, 0.0) + t
+    return busy
+
+
 def worker_imbalance(per_worker_busy: Dict[int, float]) -> float:
     """1 − mean/max of per-worker busy time: 0 = perfectly balanced,
     → 1 as one worker carries all the work.  Shared by the simulator and
