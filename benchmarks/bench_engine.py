@@ -16,6 +16,9 @@
 #   tracing overhead — warm dispatch with a live Tracer vs the NULL_TRACER
 #     fast path must stay within TRACE_OVERHEAD_CAP (5%); a breach prints a
 #     WARN row (timing on shared runners is too noisy for a hard exit),
+#   verifier overhead — cold optimize with the IR verifier checking every
+#     pass (OptimizeOptions(verify_ir=True)) vs the verifier off must stay
+#     within VERIFY_OVERHEAD_CAP (10%); same WARN-row policy as tracing,
 #   key_counts — the plan-cache miss count of the standard query mix is
 #     machine-independent and gated lower-is-better by check_regression.py,
 #     so a caching regression (fingerprint churn, memo eviction) fails CI
@@ -37,6 +40,7 @@ from repro.planner import PlanCache
 N_ROWS = 200_000
 WARM_REPEATS = 20
 TRACE_OVERHEAD_CAP = 0.05  # warm dispatch: traced vs NULL_TRACER fast path
+VERIFY_OVERHEAD_CAP = 0.10  # cold optimize: per-pass IR verifier on vs off
 
 
 def _make_columns(n: int = N_ROWS, seed: int = 0) -> Dict[str, np.ndarray]:
@@ -145,6 +149,34 @@ def run() -> List[Tuple[str, float, str]]:
         "overhead_frac": overhead,
         "cap_frac": TRACE_OVERHEAD_CAP,
         "within_cap": bool(overhead <= TRACE_OVERHEAD_CAP),
+    }
+
+    # verifier-overhead guard: the cold optimize pipeline with the IR
+    # verifier re-checking the program after every pass vs the verifier
+    # disabled.  Cold path only — warm dispatch never re-optimizes, so the
+    # verifier is free there by construction.
+    prog0 = sql_to_forelem(QUERIES[0], session.schemas(), name="qverify")
+
+    def _cold_optimize(verify: bool) -> None:
+        optimize(prog0, session.db, OptimizeOptions(
+            n_parts=8, planner="cost", plan_cache=PlanCache(), verify_ir=verify))
+
+    t_verify_off = _best(lambda: _cold_optimize(False), 5)
+    t_verify_on = _best(lambda: _cold_optimize(True), 5)
+    v_overhead = t_verify_on / max(t_verify_off, 1e-9) - 1.0
+    v_status = "ok" if v_overhead <= VERIFY_OVERHEAD_CAP else "WARN>10%"
+    rows.append(("engine_cold_unverified", t_verify_off * 1e6, "1.0x"))
+    rows.append(("engine_cold_verified", t_verify_on * 1e6,
+                 f"overhead={v_overhead * 100:+.1f}% {v_status}"))
+    if v_overhead > VERIFY_OVERHEAD_CAP:
+        print(f"WARNING: IR verifier overhead {v_overhead * 100:.1f}% exceeds "
+              f"{VERIFY_OVERHEAD_CAP * 100:.0f}% cap", flush=True)
+    report["verifier"] = {
+        "cold_optimize_unverified_us": t_verify_off * 1e6,
+        "cold_optimize_verified_us": t_verify_on * 1e6,
+        "overhead_frac": v_overhead,
+        "cap_frac": VERIFY_OVERHEAD_CAP,
+        "within_cap": bool(v_overhead <= VERIFY_OVERHEAD_CAP),
     }
 
     report["cache"] = session.cache_stats()

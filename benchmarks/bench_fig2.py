@@ -15,12 +15,11 @@
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import optimize, OptimizeOptions
 from repro.core.lower import Plan, CodegenChoices

@@ -12,7 +12,7 @@ import numpy as np
 from repro.configs.base import get_config, reduced_config
 from repro.models.transformer import Model, prefill_forward
 from repro.serve.kvcache import cache_bytes, dequantize_kv, quantize_kv
-from repro.serve.step import generate, make_decode_step
+from repro.serve.step import generate
 
 
 def main() -> None:

@@ -9,7 +9,6 @@
 # Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full]
 import argparse
 import dataclasses
-import os
 import time
 
 import jax
@@ -19,7 +18,6 @@ import numpy as np
 from repro.configs.base import get_config, reduced_config
 from repro.data.pipeline import PipelineConfig, ShardedLoader, build_dataset
 from repro.models.transformer import Model
-from repro.sched.fault_tolerant import Chunk
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import AdamWConfig, adamw_init
 from repro.train.step import TrainSpec, make_train_step

@@ -1,5 +1,7 @@
 # Hillclimb probe runner: decompose peak memory / terms across variants.
-import os, sys, json
+import json
+import os
+import sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS","")
 sys.path.insert(0, "src")
 from repro.launch.dryrun import run_cell

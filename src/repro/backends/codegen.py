@@ -10,7 +10,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence, Set, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -308,23 +308,12 @@ def extract_spec(program: Program) -> ProgramSpec:
 def required_columns(program: Program, spec: ProgramSpec) -> Dict[str, Set[str]]:
     """table -> columns an executor must materialize to run ``spec``: every
     field the program reads plus the key/probe columns the extracted op
-    shapes consume.  Shared by the jax and partitioned backends so their
-    input surfaces cannot drift apart."""
-    from repro.core.ir import tables_read
+    shapes consume.  Thin wrapper over ``repro.analysis.deps.required_fields``
+    (the one dataflow module) — shared by the jax and partitioned backends
+    so their input surfaces cannot drift apart."""
+    from repro.analysis.deps import required_fields
 
-    needed: Dict[str, Set[str]] = {}
-    for t, fs in tables_read(program.body).items():
-        needed.setdefault(t, set()).update(fs)
-    for agg in spec.aggs:
-        needed.setdefault(agg.table, set()).add(agg.key_field)
-    for j in spec.joins:
-        needed.setdefault(j.probe_table, set()).add(j.probe_fk)
-        needed.setdefault(j.build_table, set()).add(j.build_key)
-        for ja in j.aggs:
-            needed.setdefault(ja.key.table, set()).add(ja.key.field)
-            for t, f in ja.value.fields_used():
-                needed.setdefault(t, set()).add(f)
-    return needed
+    return required_fields(program, spec)
 
 
 def _collect_array_reads(e: Expr, out: Set[str]) -> None:
@@ -410,6 +399,8 @@ def _op_identity(op: str, dtype) -> Any:
     padded rows must contribute so they cannot perturb any segment."""
     if op == "+":
         return 0
+    if op not in ("max", "min"):
+        raise UnsupportedProgram(f"no identity element for accumulate op {op!r}")
     if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
         info = jnp.iinfo(dtype)
         return info.min if op == "max" else info.max

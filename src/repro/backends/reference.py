@@ -153,6 +153,10 @@ class ReferenceInterpreter:
                 d[key] = max(d.get(key, -np.inf), val)
             elif s.op == "min":
                 d[key] = min(d.get(key, np.inf), val)
+            elif s.op == "first":
+                # keep-first: associative but order-sensitive (not commutative),
+                # so only the sequential oracle may execute it
+                d.setdefault(key, val)
             else:
                 raise ValueError(f"bad accumulate op {s.op}")
         elif isinstance(s, CombinePartials):
@@ -165,6 +169,8 @@ class ReferenceInterpreter:
                         combined[key] = max(combined.get(key, -np.inf), val)
                     elif s.op == "min":
                         combined[key] = min(combined.get(key, np.inf), val)
+                    elif s.op == "first":
+                        combined.setdefault(key, val)
             self.arrays[s.array] = combined
         elif isinstance(s, ResultAppend):
             t = self._eval(s.tuple_expr, env)

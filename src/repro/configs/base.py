@@ -4,8 +4,8 @@
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Layer kinds (the heterogeneous-pattern vocabulary)

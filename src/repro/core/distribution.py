@@ -15,22 +15,12 @@
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .ir import (
-    ForValue,
-    Forall,
-    Program,
-    RangePart,
-    Stmt,
-    ValueRange,
-    children,
-    walk,
-    with_children,
-)
+from .ir import ForValue, Program, Stmt, ValueRange, children, with_children
 from . import transforms as T
 from .partition import Partitioning, forall_partitionings
 

@@ -9,9 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 # ---------------------------------------------------------------------------
 # Schemas / multisets

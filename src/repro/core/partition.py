@@ -5,20 +5,9 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-from .ir import (
-    Blocked,
-    ForValue,
-    Forall,
-    Forelem,
-    Program,
-    RangePart,
-    Stmt,
-    children,
-    walk,
-    with_children,
-)
+from .ir import Blocked, ForValue, Forall, Forelem, Program, Stmt, children, walk, with_children
 from . import transforms as T
 
 

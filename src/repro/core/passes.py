@@ -12,9 +12,11 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from typing import Any, List, Optional, Tuple
 
 from repro.data.multiset import Database
+from repro.analysis import deps
+from repro.analysis.verify import verify_enabled, verify_program
 from .ir import Program, program_str
 from . import transforms as T
 from .partition import partition_direct, partition_indirect
@@ -67,6 +69,11 @@ class OptimizeOptions:
     # plan.enumerate, lower); None → NULL_TRACER (zero-cost no-ops).  Not
     # part of any plan fingerprint — tracing must never change the plan.
     tracer: Any = None
+    # run the IR verifier (repro.analysis.verify) after every pass, raising
+    # IRVerificationError naming the offending pass on any broken invariant.
+    # None → controlled by the REPRO_VERIFY_IR environment variable (set to
+    # "1" in tests/CI, off by default in production use).
+    verify_ir: Optional[bool] = None
 
 
 @dataclass
@@ -95,19 +102,27 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     opts = opts or OptimizeOptions()
     trace: List[str] = []
     tr = opts.tracer if opts.tracer is not None else NULL_TRACER
+    verify = opts.verify_ir if opts.verify_ir is not None else verify_enabled()
 
     def log(stage: str, p: Program) -> None:
         if opts.trace:
             trace.append(f"=== {stage} ===\n{program_str(p)}")
 
-    p = program
+    def check(p: Program, pass_name: str) -> Program:
+        if verify:
+            verify_program(p, pass_name=pass_name)
+        return p
+
+    p = check(program, "frontend")
     log("input", p)
 
     # -- 1. query optimization ------------------------------------------------
+    # Resolved through the module (T.<name>) at call time so tests can
+    # monkeypatch an individual transform; each output is verifier-checked
+    # with the pass name attached so a broken invariant names its culprit.
     with tr.span("passes"):
-        p = T.loop_interchange(p)
-        p = T.dead_code_elimination(p)
-        p = T.loop_fusion(p)
+        for pass_name in ("loop_interchange", "dead_code_elimination", "loop_fusion"):
+            p = check(getattr(T, pass_name)(p), pass_name)
     log("query-optimized", p)
 
     # -- 2. data reformatting ---------------------------------------------------
@@ -173,6 +188,7 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
             schedule = chosen.schedule
         if chosen.parallel == "none":
             n_parts = 1  # partitioning buys nothing without parallel execution
+        check(p, "planner.join_order")
         log("planned", p)
     elif opts.planner != "none":
         raise ValueError(f"unknown planner {opts.planner!r} (use 'none' or 'cost')")
@@ -182,22 +198,35 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
     # + scheduled chunk dispatch) instead of restructuring the IR, so the
     # loop-level partitioning transform is skipped for it.
     if n_parts > 1 and opts.partition != "none" and opts.backend != "partitioned":
-        with tr.span("parallelize", n_parts=n_parts, partition=opts.partition):
-            if opts.partition == "direct":
-                p = partition_direct(p, n_parts, mesh_axis=opts.mesh_axis)
-            else:
-                tf = partition_field
-                if tf is None:
-                    tf = _default_partition_field(p)
-                if tf is not None:
-                    p = partition_indirect(p, tf[0], tf[1], n_parts, mesh_axis=opts.mesh_axis)
-            p = T.iteration_space_expansion(p)
-        log("parallelized", p)
+        # legality: per-partition partials are only mergeable when every
+        # accumulate op is commutative + associative (analysis.deps); with
+        # the fixed pipeline an illegal program silently stays sequential.
+        ok, reasons = deps.partitionable(p)
+        if not ok:
+            n_parts = 1  # fall back to sequential codegen
+            trace.append("=== parallelization skipped (illegal) ===\n" + "\n".join(reasons))
+        else:
+            with tr.span("parallelize", n_parts=n_parts, partition=opts.partition):
+                if opts.partition == "direct":
+                    p = check(partition_direct(p, n_parts, mesh_axis=opts.mesh_axis),
+                              "partition_direct")
+                else:
+                    tf = partition_field
+                    if tf is None:
+                        tf = _default_partition_field(p)
+                    if tf is not None:
+                        p = check(
+                            partition_indirect(p, tf[0], tf[1], n_parts, mesh_axis=opts.mesh_axis),
+                            "partition_indirect",
+                        )
+                p = check(T.iteration_space_expansion(p), "iteration_space_expansion")
+            log("parallelized", p)
 
     # -- 5. distribution ---------------------------------------------------------
     dist_report = None
     with tr.span("distribute"):
         p, dist_report = optimize_distribution(p, db=db)
+        check(p, "optimize_distribution")
     log("distributed", p)
 
     # -- 6. codegen ----------------------------------------------------------------

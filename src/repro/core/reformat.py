@@ -12,18 +12,11 @@
 # going to be processed multiple times in the future, it will pay off").
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
-import numpy as np
 
-from repro.data.multiset import (
-    CompressedRangeColumn,
-    Database,
-    DictColumn,
-    Multiset,
-    PlainColumn,
-)
+from repro.data.multiset import CompressedRangeColumn, Database, PlainColumn
 from .ir import Program, tables_read
 
 
@@ -72,7 +65,7 @@ def plan_reformat(program: Program, db: Database) -> ReformatPlan:
             for f in fields_used
             if f in ms.columns
             and isinstance(ms.columns[f], PlainColumn)
-            and ms.columns[f].values.dtype == object
+            and (ms.columns[f].values.dtype == object or ms.columns[f].values.dtype.kind in "US")
         ]
         if enc_fields:
             b0 = sum(ms.columns[f].nbytes for f in enc_fields)

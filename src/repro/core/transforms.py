@@ -12,7 +12,6 @@ from .ir import (
     BinOp,
     Blocked,
     CombinePartials,
-    Const,
     Distinct,
     Expr,
     FieldMatch,
@@ -31,113 +30,49 @@ from .ir import (
     TupleExpr,
     ValueRange,
     Var,
-    arrays_defined,
     arrays_used,
     children,
     walk,
     with_children,
 )
+from repro.analysis import deps as _deps
 
 # ---------------------------------------------------------------------------
-# Dependence analysis (Def-Use, paper §II: "Traditional analysis methods,
-# such as Def-Use analysis, will detect and eliminate data access of which
-# the results are unused, or will detect related data accesses that can be
-# combined.")
+# Dependence analysis (Def-Use, paper §II).  The authoritative dataflow
+# logic lives in repro.analysis.deps — one module shared with the backends'
+# required_columns and the planner's legality gate; the names below are
+# thin compatibility wrappers so existing call sites (and tests) keep
+# working.  ``independent`` fails CLOSED on unknown Stmt subtypes.
 # ---------------------------------------------------------------------------
 
 
 def _expr_array_reads(e: Expr, out: Set[str]) -> None:
-    if isinstance(e, ArrayRead):
-        out.add(e.array)
-        _expr_array_reads(e.key, out)
-    elif isinstance(e, BinOp):
-        _expr_array_reads(e.lhs, out)
-        _expr_array_reads(e.rhs, out)
-    elif isinstance(e, TupleExpr):
-        for el in e.elements:
-            _expr_array_reads(el, out)
+    out.update(_deps.expr_array_reads(e))
 
 
 def stmt_reads(s: Stmt) -> Set[str]:
     """Names (arrays, scalars) read anywhere under s."""
-    reads: Set[str] = set()
-    for st in [s, *walk(children(s))]:
-        if isinstance(st, Accumulate):
-            _expr_array_reads(st.key, reads)
-            _expr_array_reads(st.value, reads)
-        elif isinstance(st, ResultAppend):
-            _expr_array_reads(st.tuple_expr, reads)
-        elif isinstance(st, ScalarAssign):
-            _expr_array_reads(st.expr, reads)
-            if st.op != "=":
-                reads.add(st.var)
-        elif isinstance(st, CombinePartials):
-            reads.add(f"{st.array}_{st.partvar}")
-        elif isinstance(st, Forelem):
-            ix = st.indexset
-            if isinstance(ix, FieldMatch):
-                _expr_array_reads(ix.value, reads)
-            if isinstance(ix, Filtered):
-                _expr_array_reads(ix.predicate, reads)
-    return reads
+    return _deps.stmt_reads(s)
 
 
 def stmt_writes(s: Stmt) -> Set[str]:
-    writes: Set[str] = set()
-    for st in [s, *walk(children(s))]:
-        if isinstance(st, Accumulate):
-            writes.add(f"{st.array}_{st.partitioned}" if st.partitioned else st.array)
-        elif isinstance(st, ResultAppend):
-            writes.add(f"{st.result}_{st.partitioned}" if st.partitioned else st.result)
-        elif isinstance(st, ScalarAssign):
-            writes.add(st.var)
-        elif isinstance(st, CombinePartials):
-            writes.add(st.array)
-    return writes
+    return _deps.stmt_writes(s)
 
 
 def independent(a: Stmt, b: Stmt) -> bool:
     """True if a and b can be reordered (no RAW/WAR/WAW hazards).
 
-    Accumulations into the same array with the same associative op commute,
-    which is what legalizes the fusion in the paper's §III-A4 example.
-    """
-    ra, wa = stmt_reads(a), stmt_writes(a)
-    rb, wb = stmt_reads(b), stmt_writes(b)
-    if (wa & rb) or (wb & ra):
-        return False
-    shared_w = wa & wb
-    if shared_w:
-        # write-write is OK only if both sides only *accumulate* with the
-        # same op into each shared name (associative+commutative).
-        for name in shared_w:
-            ops_a = _accum_ops(a, name)
-            ops_b = _accum_ops(b, name)
-            if ops_a is None or ops_b is None or ops_a != ops_b or len(ops_a) != 1:
-                return False
-    return True
+    Accumulations into the same array with the same commutative+associative
+    op commute, which is what legalizes the fusion in the paper's §III-A4
+    example.  Statement kinds the dependence module does not model are
+    never independent (fail closed)."""
+    return _deps.independent(a, b)
 
 
 def _accum_ops(s: Stmt, name: str) -> Optional[Set[str]]:
     """The set of ops used to write `name` under s, or None if a
     non-accumulating write (ResultAppend / ScalarAssign '=') occurs."""
-    ops: Set[str] = set()
-    for st in [s, *walk(children(s))]:
-        if isinstance(st, Accumulate):
-            nm = f"{st.array}_{st.partitioned}" if st.partitioned else st.array
-            if nm == name:
-                ops.add(st.op)
-        elif isinstance(st, ResultAppend):
-            nm = f"{st.result}_{st.partitioned}" if st.partitioned else st.result
-            if nm == name:
-                ops.add("∪")  # multiset union is commutative → still fusible
-        elif isinstance(st, ScalarAssign) and st.var == name:
-            if st.op == "=":
-                return None
-            ops.add(st.op)
-        elif isinstance(st, CombinePartials) and st.array == name:
-            return None
-    return ops
+    return _deps.accum_ops(s, name)
 
 
 # ---------------------------------------------------------------------------

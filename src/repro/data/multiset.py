@@ -3,10 +3,9 @@
 # dictionary encoding).
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 from dataclasses import dataclass
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -190,7 +189,7 @@ class Multiset:
             if len(vals):
                 stride = max(1, len(vals) // 64)
                 sample = vals[::stride][:64]
-                if vals.dtype == object:
+                if vals.dtype == object or vals.dtype.kind in "US":
                     h.update("|".join(str(v) for v in sample).encode())
                 else:
                     h.update(np.ascontiguousarray(sample).tobytes())
@@ -210,7 +209,9 @@ class Multiset:
         out: Dict[str, Column] = {}
         for n, c in self.columns.items():
             sel = fields is None or n in fields
-            if sel and isinstance(c, PlainColumn) and c.values.dtype == object:
+            if sel and isinstance(c, PlainColumn) and (
+                c.values.dtype == object or c.values.dtype.kind in "US"
+            ):
                 out[n] = dict_encode(c.values)
             elif sel and fields is not None and n in fields and isinstance(c, PlainColumn):
                 out[n] = dict_encode(c.values)

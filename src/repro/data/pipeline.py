@@ -13,37 +13,24 @@
 #     → per-worker shards: direct partitioning      (loop blocking §III-A1)
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import (
-    Accumulate,
-    ArrayRead,
     BinOp,
     Const,
-    Distinct,
     FieldRef,
     Filtered,
     Forelem,
-    FullSet,
     Program,
     ResultAppend,
     TupleExpr,
     optimize,
     OptimizeOptions,
 )
-from repro.backends import Plan
-from repro.data.multiset import (
-    CompressedRangeColumn,
-    Database,
-    DictColumn,
-    Multiset,
-    PlainColumn,
-    dict_encode,
-)
+from repro.data.multiset import Database, Multiset
 
 # ---------------------------------------------------------------------------
 # Tokenizer (whitespace/word-level dictionary encoder — the reformatting

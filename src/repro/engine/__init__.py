@@ -1,6 +1,6 @@
 # Unified query engine: the Session front door routing every frontend
 # (SQL, MapReduce) through one pipeline — forelem IR → distribution passes
 # → cost planner → plan cache → pluggable backend lowering.
-from .session import EngineError, QueryLogEntry, QueryResult, Session  # noqa: F401
+from .session import CheckReport, EngineError, QueryLogEntry, QueryResult, Session  # noqa: F401
 
-__all__ = ["EngineError", "QueryLogEntry", "QueryResult", "Session"]
+__all__ = ["CheckReport", "EngineError", "QueryLogEntry", "QueryResult", "Session"]

@@ -22,6 +22,7 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any, Deque, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
+from repro.analysis import IRVerificationError, LintWarning, lint_program, render_lint, verify_program
 from repro.core.ir import Program
 from repro.core.passes import OptimizeOptions, OptimizeResult, optimize
 from repro.core.transforms import canonicalize_array_names
@@ -62,6 +63,28 @@ class QueryResult:
 
     def scalar(self, name: str = "scalar") -> Any:
         return self.results[name]
+
+
+@dataclass
+class CheckReport:
+    """Outcome of ``Session.check(query)``: static verification + lint of a
+    query without executing (or even compiling) it.
+
+    ``ok`` means the frontend-produced IR passed the verifier; ``warnings``
+    are advisory lint findings (legal but likely slow or wrong-in-intent)."""
+
+    query: str
+    source: str                      # 'sql' | 'mapreduce'
+    program: Program
+    ok: bool
+    error: Optional[IRVerificationError]
+    warnings: List[LintWarning]
+
+    def __str__(self) -> str:
+        head = f"CHECK {self.query}"
+        if not self.ok:
+            return f"{head}\n  verifier: FAILED\n    {self.error}"
+        return f"{head}\n  verifier: ok ({len(self.warnings)} lint warning(s))\n{render_lint(self.warnings)}"
 
 
 @dataclass(frozen=True)
@@ -309,11 +332,48 @@ class Session:
             qs.set(cache_hit=qr.cache_hit, dispatch_hit=qr.dispatch_hit)
         return qr
 
+    def check(self, query: Any) -> CheckReport:
+        """Statically analyze a SQL string or ``MapReduceSpec`` without
+        executing it: run the IR verifier over the frontend-produced program
+        (always — independent of REPRO_VERIFY_IR), then the plan linter
+        (unused columns, partition skew, pushable filters, SUM overflow)
+        against the session's live tables and statistics."""
+        self._revalidate()
+        if isinstance(query, MapReduceSpec):
+            source, text = "mapreduce", repr(query)
+            _, prog = self._mr_program(query)
+        else:
+            source, text = "sql", str(query)
+            _, prog = self._sql_program(text)
+        err: Optional[IRVerificationError] = None
+        try:
+            verify_program(prog, pass_name="frontend")
+        except IRVerificationError as e:
+            err = e
+        warnings: List[LintWarning] = []
+        if err is None:
+            from repro.planner import collect_stats
+
+            warnings = lint_program(
+                prog,
+                db=self.db,
+                stats=collect_stats(self.db),
+                n_partitions=self.n_partitions or self.n_parts,
+            )
+        return CheckReport(text, source, prog, err is None, err, warnings)
+
     def explain(
-        self, query: Any, analyze: bool = False, params: Optional[Dict[str, Any]] = None
+        self,
+        query: Any,
+        analyze: bool = False,
+        params: Optional[Dict[str, Any]] = None,
+        lint: bool = False,
     ) -> str:
         """Plan (and compile+cache) a SQL string or ``MapReduceSpec`` and
         return the planner's EXPLAIN text.
+
+        ``lint=True`` appends the plan linter's advisory findings (the same
+        rules as ``check()``) after the plan.
 
         ``analyze=True`` additionally *executes* the plan and appends the
         measured profile — on the partitioned backend: per-op chunk
@@ -330,6 +390,16 @@ class Session:
             key, prog = self._sql_program(str(query))
         res, _ = self._prepare(key, prog)
         text = res.explain or "(no explain available)"
+        if lint:
+            from repro.planner import collect_stats
+
+            warnings = lint_program(
+                prog,
+                db=self.db,
+                stats=collect_stats(self.db),
+                n_partitions=self.n_partitions or self.n_parts,
+            )
+            text += "\n" + render_lint(warnings)
         if analyze:
             # ANALYZE is expressed on top of the obs trace: the plan runs
             # under a profiling tracer and the report is rebuilt from the

@@ -8,22 +8,9 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Tuple
 
-from repro.core.ir import (
-    Accumulate,
-    ArrayRead,
-    Const,
-    Distinct,
-    Expr,
-    FieldRef,
-    Forelem,
-    FullSet,
-    Program,
-    ResultAppend,
-    TupleExpr,
-    walk,
-)
+from repro.core.ir import Const, FieldRef, Program
 from repro.backends import UnsupportedProgram, extract_spec
 
 
@@ -88,7 +75,7 @@ def forelem_to_mapreduce(program: Program) -> MRProgram:
 
     emit_val = "1" if is_count else f"a.{val_field}"
     pseudocode = (
-        f"map(key, value):\n"
+        "map(key, value):\n"
         f"  # value represents content of {agg.table} table\n"
         f"  {agg.table.lower()} = value\n"
         f"  for a in {agg.table.lower()}:\n"

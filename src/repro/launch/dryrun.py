@@ -15,7 +15,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +36,12 @@ from repro.launch.sharding import (
     train_rules,
     tree_shardings_from_axes,
 )
-from repro.launch.specs import decode_cache_specs, input_specs
+from repro.launch.specs import input_specs
 from repro.roofline import hlo_parse
 
 
 def _opt_shardings(param_sh, mesh, state_dtype: str = "f32", defs=None):
     from jax.sharding import NamedSharding, PartitionSpec
-    from repro.models.common import is_param_def
     from repro.train.optimizer import AdamWState
 
     if state_dtype == "int8":

@@ -8,7 +8,6 @@
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import List
 
@@ -74,7 +73,7 @@ def main() -> None:
                 if queue:
                     # continuous batching: swap a fresh request into slot i —
                     # reset its cache lane and restart its position window
-                    nxt = queue.pop(0)
+                    queue.pop(0)
                     remaining[i] = args.new
                     print(f"[serve] slot {i}: finished; admitting new request "
                           f"({len(queue)} queued, {done}/{args.requests} done)")

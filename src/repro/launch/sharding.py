@@ -8,7 +8,6 @@
 # shardings on jit arguments, so this resolution is mandatory, not cosmetic.
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -16,7 +15,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeCell
-from repro.models.common import ParamDef, is_param_def
+from repro.models.common import is_param_def
 from .mesh import dp_axes, dp_size
 
 Axis = Union[str, Tuple[str, ...]]

@@ -3,14 +3,13 @@
 # allocation happens anywhere in the dry-run.
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, SHAPES, ShapeCell, get_config
-from repro.models.transformer import Model, cache_abstract
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.transformer import cache_abstract
 
 
 def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:

@@ -95,7 +95,7 @@ def main() -> None:
             if s == args.fail_at and not failed_once:
                 failed_once = True
                 print(f"[train] !! simulated slice failure at step {s}; "
-                      f"re-meshing over survivors + restore")
+                      "re-meshing over survivors + restore")
                 elastic.on_loss(time.time() - t0, 0, ckpt.latest_step() or 0)
                 last, (params, opt_state) = ckpt.restore((params, opt_state))
                 step = last

@@ -5,16 +5,14 @@
 # dry-run; kernels/flash holds the Pallas TPU kernel with the same math.
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from .common import ParamDef, apply_rope, mrope_angles, rms_norm, rope_angles, softcap
+from .common import ParamDef, apply_rope, mrope_angles, rms_norm, rope_angles
 
 NEG_INF = -2.0e38
 

@@ -2,10 +2,9 @@
 # *logical axes* for the distribution solver), norms, RoPE / M-RoPE.
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -112,7 +112,6 @@ def _ssd_chunked(xdt, log_decay, Bh, Ch, S0, chunk: int):
     """Chunked SSD: y_i = C_i h_i ;  h_t = a_t h_{t-1} + B_t (dt x)_t.
     xdt (B,S,H,P), log_decay (B,S,H), Bh/Ch (B,S,H,N), S0 (B,H,P,N)."""
     B, S, H, P = xdt.shape
-    N = Bh.shape[-1]
     L = min(chunk, S)
     pad = (-S) % L
     n = (S + pad) // L

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from .common import ParamDef, rms_norm
+from .common import ParamDef
 
 LOG_CLAMP = -30.0  # log-decay anchor for the factorized form
 

@@ -10,10 +10,8 @@
 # must be a multiple of it (configs arrange this).
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

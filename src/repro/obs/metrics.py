@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import math
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 LabelKey = Tuple[str, Tuple[Tuple[str, str], ...]]
 

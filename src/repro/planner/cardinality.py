@@ -28,7 +28,6 @@ from repro.core.ir import (
     IndexSet,
     Program,
     Stmt,
-    Var,
     _ixset_str,
 )
 

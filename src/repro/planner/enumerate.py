@@ -4,9 +4,10 @@
 # model and pruned to the cheapest.
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
+from repro.analysis import deps
 from repro.core import transforms as T
 from repro.core.ir import Program
 from repro.backends import ProgramSpec, UnsupportedProgram, extract_spec
@@ -47,6 +48,9 @@ class Decision:
     loop_estimates: List[LoopEstimate]        # cardinalities of the chosen order
     stats_epoch: str
     fallback_reason: Optional[str] = None     # set when enumeration bailed out
+    # legality diagnostics (repro.analysis.deps): strategy-space regions the
+    # dependence analysis rejected before pricing (shown by EXPLAIN)
+    rejections: Tuple[str, ...] = ()
 
     @property
     def n_enumerated(self) -> int:
@@ -112,6 +116,7 @@ def enumerate_candidates(
     executor: Optional[str] = None,
     n_partitions: Optional[int] = None,
     schedule: Optional[str] = None,
+    rejections: Optional[List[str]] = None,
 ) -> List[Candidate]:
     """Enumerate and price every plan in the strategy space.  Programs whose
     shape the vectorized lowering does not support are skipped (they would
@@ -121,13 +126,30 @@ def enumerate_candidates(
     ``executor`` is the ExecutorBackend name the plan will compile on; for
     ``'partitioned'`` the strategy space is K-way data distribution ×
     chunk-schedule policy (spec_cost_partitioned) instead of the monolithic
-    forall strategies.  ``n_partitions`` / ``schedule`` pin those axes."""
+    forall strategies.  ``n_partitions`` / ``schedule`` pin those axes.
+
+    The dependence analysis (repro.analysis.deps) gates the parallel regions
+    of the space: when any accumulate op is not commutative+associative the
+    K>1 / parallel≠'none' candidates are never priced, and a diagnostic is
+    appended to ``rejections`` (surfaced by EXPLAIN)."""
     model = CostModel(stats, coeffs, backend=backend)
     orders: List[Tuple[str, Program]] = [("as-written", program)]
     for k, variant in enumerate(T.join_orders(program)):
         orders.append((f"interchanged[{k}]", variant))
 
     partitioned = executor == "partitioned"
+    # legality gate — op algebra is order-invariant, so decide once up front
+    illegal_ops = deps.merge_illegal_ops(deps.accumulate_ops(program.body))
+    had_parallel_axis = (
+        any(K > 1 for K in _k_choices(n_parts, n_partitions)) if partitioned else n_parts > 1
+    )
+    if illegal_ops and had_parallel_axis and rejections is not None:
+        ops_s = ", ".join(repr(o) for o in sorted(illegal_ops))
+        axis = "K>1 data-distribution" if partitioned else "parallel-execution"
+        rejections.append(
+            f"{axis} candidates rejected: accumulate op(s) {ops_s} are not "
+            "commutative+associative, so per-partition partials cannot be merged"
+        )
     out: List[Candidate] = []
     last_err: Optional[Exception] = None
     for order_name, prog in orders:
@@ -140,6 +162,8 @@ def enumerate_candidates(
         methods: Sequence[str] = AGG_METHODS if has_aggs else ("dense",)
         if partitioned:
             ks = _k_choices(n_parts, n_partitions)
+            if illegal_ops:
+                ks = (1,)  # only the degenerate single-partition distribution is legal
             schedules = PARTITION_SCHEDULES if schedule is None else (schedule,)
             # the runtime hash-partitions every operator on its *own* key
             # column, so partition-field variants execute identically —
@@ -165,7 +189,7 @@ def enumerate_candidates(
                                 )
             continue
         parallels: List[str] = ["none"]
-        if n_parts > 1:
+        if n_parts > 1 and not illegal_ops:
             parallels.append("vmap")
             if allow_shard_map:
                 parallels.append("shard_map")
@@ -203,23 +227,32 @@ def plan_query(
     """Pick the cheapest plan; on unsupported shapes fall back to the
     as-written program with the pipeline's fixed defaults."""
     est = CardinalityEstimator(stats)
+    rejections: List[str] = []
     try:
         cands = enumerate_candidates(
             program, stats, n_parts, coeffs, allow_shard_map=allow_shard_map,
             backend=backend, executor=executor, n_partitions=n_partitions, schedule=schedule,
+            rejections=rejections,
         )
         chosen = cands[0]
-        return Decision(chosen, cands, est.loop_estimates(chosen.program), stats.epoch)
+        return Decision(
+            chosen, cands, est.loop_estimates(chosen.program), stats.epoch,
+            rejections=tuple(rejections),
+        )
     except UnsupportedProgram as e:
+        illegal = bool(deps.merge_illegal_ops(deps.accumulate_ops(program.body)))
         if executor == "partitioned":
             fallback = Candidate(
                 "as-written", program, "dense", "none", None, float("inf"),
-                n_partitions=max(1, n_partitions or n_parts), schedule=schedule or "static",
+                n_partitions=1 if illegal else max(1, n_partitions or n_parts),
+                schedule=schedule or "static",
             )
         else:
             fallback = Candidate(
-                "as-written", program, "dense", "vmap" if n_parts > 1 else "none", None, float("inf")
+                "as-written", program, "dense",
+                "vmap" if n_parts > 1 and not illegal else "none", None, float("inf"),
             )
         return Decision(
-            fallback, [fallback], est.loop_estimates(program), stats.epoch, fallback_reason=str(e)
+            fallback, [fallback], est.loop_estimates(program), stats.epoch,
+            fallback_reason=str(e), rejections=tuple(rejections),
         )

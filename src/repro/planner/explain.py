@@ -8,7 +8,7 @@
 # what actually happened.
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 from .enumerate import Decision
 
@@ -62,6 +62,11 @@ def render_explain(
         lines.append(f"    {op:<56s} cost≈{_fmt(cost)}")
     if decision.fallback_reason:
         lines.append(f"  (fallback to fixed defaults: {decision.fallback_reason})")
+
+    if decision.rejections:
+        lines.append("  legality (dependence analysis):")
+        for r in decision.rejections:
+            lines.append(f"    {r}")
 
     alts = [a for a in decision.candidates[1:]]
     if alts:

@@ -149,7 +149,7 @@ def _field_stats(name: str, ms: Multiset, n_buckets: int, max_rows: int) -> Fiel
 
     full_scan = len(sample) == n
 
-    if sample.dtype == object:
+    if sample.dtype == object or sample.dtype.kind in "US":
         uniq, counts = np.unique(sample.astype(str), return_counts=True)
         unique = (len(uniq) == n) if full_scan else None
         return FieldStats(

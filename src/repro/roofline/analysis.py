@@ -20,7 +20,6 @@
 #                  to compile the dry-run.
 from __future__ import annotations
 
-import dataclasses
 import glob
 import json
 import os

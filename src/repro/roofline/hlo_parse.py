@@ -15,7 +15,6 @@
 # each weighted by the product of enclosing trip counts.
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

@@ -18,10 +18,9 @@ from __future__ import annotations
 
 import heapq
 import math
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-import numpy as np
 
 from .loop_schedule import ChunkPolicy, GuidedSelfScheduling
 
@@ -235,9 +234,6 @@ class HybridFaultTolerantScheduler:
             seq += 1
 
         makespan = max((e.time for e in events if e.kind == "complete"), default=0.0)
-        # verify completion
-        done = sum(1 for _ in completed)
-        covered = sorted(completed.keys())
         return FTResult(makespan, events, completed, dup_work, lost_work, ckpts)
 
     def _cost(self, c: Chunk, w: int) -> float:

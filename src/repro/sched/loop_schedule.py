@@ -10,8 +10,8 @@ from __future__ import annotations
 
 import heapq
 import math
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -288,7 +288,6 @@ def simulate_schedule(
         pending.append((next_iter, total - next_iter))
     if pending and not live:
         raise RuntimeError("all workers failed; computation must restart (static schedule pathology)")
-    times = {w: busy[w] for w in live}
     wall = [max([r.t_end for r in records if r.worker == w], default=0.0) for w in live]
     wall_t = {w: t for w, t in zip(live, wall)}
     for start, size in pending:

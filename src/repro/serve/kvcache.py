@@ -2,7 +2,7 @@
 # and doubles effective cache bandwidth vs bf16 (§Perf hillclimb option).
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -7,11 +7,10 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import tempfile
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np

@@ -8,7 +8,7 @@
 # 'pod' mesh axis; within-pod reductions stay full precision over ICI.
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

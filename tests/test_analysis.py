@@ -1,0 +1,530 @@
+# repro.analysis: the IR verifier's corruption matrix (every invariant
+# violated once, with wrong-pass attribution), the dependence/legality layer
+# gating the planner and the fixed pipeline, the plan linter, and a property
+# check that random pass pipelines stay verifier-clean while agreeing with
+# the reference interpreter.
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    IRVerificationError,
+    deps,
+    lint_program,
+    verify_enabled,
+    verify_program,
+)
+from repro.backends import extract_spec, get_backend
+from repro.backends.codegen import required_columns
+from repro.core import transforms as T
+from repro.core.ir import (
+    Accumulate,
+    ArrayRead,
+    BinOp,
+    Blocked,
+    CombinePartials,
+    Const,
+    Distinct,
+    FieldRef,
+    Filtered,
+    Forall,
+    Forelem,
+    FullSet,
+    MultisetDecl,
+    Program,
+    ResultAppend,
+    ScalarAssign,
+    TupleExpr,
+    TupleSchema,
+    Var,
+)
+from repro.core.partition import partition_indirect
+from repro.core.passes import OptimizeOptions, optimize
+from repro.data.multiset import Database, Multiset
+from repro.planner import collect_stats
+from repro.planner.enumerate import plan_query
+
+SCHEMA = TupleSchema((("k", "int32"), ("v", "int32"), ("s", "object")))
+DECL = MultisetDecl("T", SCHEMA)
+
+
+def groupby(op="+", tables=(DECL,), results=("R",)):
+    """A well-formed group-by program over T(k, v, s)."""
+    return Program(
+        tables=tables,
+        body=(
+            Forelem(
+                "i", FullSet("T"), (Accumulate("acc", FieldRef("T", "i", "k"), FieldRef("T", "i", "v"), op),)
+            ),
+            Forelem(
+                "i",
+                Distinct("T", "k"),
+                (
+                    ResultAppend(
+                        "R",
+                        TupleExpr((FieldRef("T", "i", "k"), ArrayRead("acc", FieldRef("T", "i", "k")))),
+                    ),
+                ),
+            ),
+        ),
+        results=results,
+        name="gb",
+    )
+
+
+def make_db(rng, n=200, nk=13):
+    return Database().add(
+        Multiset.from_columns(
+            "T",
+            k=rng.integers(0, nk, n).astype(np.int32),
+            v=rng.integers(0, 50, n).astype(np.int32),
+            s=np.array([f"s{i % 3}" for i in range(n)], dtype=object),
+        )
+    )
+
+
+def run_ref(p, db):
+    out = get_backend("reference").compile(p, db, None).run()
+    return {k: sorted(v) if isinstance(v, list) else v for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Verifier: the happy path
+# ---------------------------------------------------------------------------
+
+
+def test_valid_program_verifies():
+    assert verify_program(groupby()) is not None
+
+
+def test_valid_privatized_program_verifies():
+    p = partition_indirect(groupby(), "T", "k", 4)
+    p = T.iteration_space_expansion(p)
+    verify_program(p, pass_name="iteration_space_expansion")
+
+
+def test_verify_enabled_parses_env(monkeypatch):
+    for raw, want in [("1", True), ("0", False), ("false", False), ("on", True), ("", False)]:
+        monkeypatch.setenv("REPRO_VERIFY_IR", raw)
+        assert verify_enabled() is want
+    monkeypatch.delenv("REPRO_VERIFY_IR")
+    assert verify_enabled() is False
+    assert verify_enabled(default=True) is True
+
+
+# ---------------------------------------------------------------------------
+# Verifier: the corruption matrix — every invariant violated exactly once
+# ---------------------------------------------------------------------------
+
+
+def _private_sum():
+    """forall p: privatized accumulate over a blocked set (+ CombinePartials)."""
+    acc = Accumulate("acc", FieldRef("T", "i", "k"), FieldRef("T", "i", "v"), "+", partitioned="p")
+    loop = Forelem("i", Blocked(FullSet("T"), 4, "p"), (acc,))
+    return Forall("p", 4, (loop,)), acc
+
+
+CORRUPTIONS = {
+    "duplicate-table": lambda: groupby(tables=(DECL, DECL)),
+    "table-undeclared": lambda: Program(
+        (DECL,), (Forelem("i", FullSet("U"), (ScalarAssign("x", Const(1)),)),), ("x",), name="bad"
+    ),
+    "field-missing": lambda: Program(
+        (DECL,),
+        (Forelem("i", FullSet("T"), (ScalarAssign("x", FieldRef("T", "i", "zz"), "+"),)),),
+        ("x",),
+        name="bad",
+    ),
+    "fieldref-scope": lambda: Program(
+        (DECL,),
+        (Forelem("i", FullSet("T"), (ScalarAssign("x", FieldRef("T", "j", "v"), "+"),)),),
+        ("x",),
+        name="bad",
+    ),
+    "var-unbound": lambda: Program(
+        (DECL,), (ResultAppend("R", TupleExpr((Var("ghost"),))),), ("R",), name="bad"
+    ),
+    "array-undefined": lambda: Program(
+        (DECL,), (ResultAppend("R", TupleExpr((ArrayRead("ghost", Const(0)),))),), ("R",), name="bad"
+    ),
+    "read-before-combine": lambda: Program(
+        (DECL,),
+        (_private_sum()[0], ResultAppend("R", TupleExpr((ArrayRead("acc", Const(0)),)))),
+        ("R",),
+        name="bad",
+    ),
+    "partvar-unbound": lambda: Program(
+        (DECL,),
+        (
+            Forelem(
+                "i",
+                FullSet("T"),
+                (Accumulate("acc", FieldRef("T", "i", "k"), Const(1), "+", partitioned="p"),),
+            ),
+        ),
+        (),
+        name="bad",
+    ),
+    "partition-mismatch": lambda: Program(
+        (DECL,),
+        (
+            Forall(
+                "p",
+                4,
+                (
+                    Forelem(
+                        "i",
+                        Blocked(FullSet("T"), 2, "p"),
+                        (Accumulate("acc", FieldRef("T", "i", "k"), Const(1), "+"),),
+                    ),
+                ),
+            ),
+        ),
+        (),
+        name="bad",
+    ),
+    "combine-mismatch": lambda: Program(
+        (DECL,),
+        (_private_sum()[0], CombinePartials("acc", "p", 4, "max")),
+        (),
+        name="bad",
+    ),
+    "nparts-invalid": lambda: Program(
+        (DECL,), (Forall("p", 0, (ScalarAssign("x", Const(1)),)),), ("x",), name="bad"
+    ),
+    "op-invalid": lambda: groupby(op="weird"),
+    "accumulate-op-conflict": lambda: Program(
+        (DECL,),
+        (
+            Forelem(
+                "i",
+                FullSet("T"),
+                (
+                    Accumulate("acc", FieldRef("T", "i", "k"), Const(1), "+"),
+                    Accumulate("acc", FieldRef("T", "i", "k"), Const(1), "max"),
+                ),
+            ),
+        ),
+        (),
+        name="bad",
+    ),
+    "predicate-not-bool": lambda: Program(
+        (DECL,),
+        (
+            Forelem(
+                "i",
+                Filtered("T", FieldRef("T", "_", "v"), FullSet("T")),
+                (ScalarAssign("x", Const(1), "+"),),
+            ),
+        ),
+        ("x",),
+        name="bad",
+    ),
+    "type-mismatch": lambda: Program(
+        (DECL,),
+        (ScalarAssign("x", BinOp("+", Const("a"), Const(1))),),
+        ("x",),
+        name="bad",
+    ),
+    "result-unproduced": lambda: groupby(results=("R", "ghost")),
+}
+
+
+@pytest.mark.parametrize("invariant", sorted(CORRUPTIONS))
+def test_corruption_is_caught(invariant):
+    with pytest.raises(IRVerificationError) as ei:
+        verify_program(CORRUPTIONS[invariant](), pass_name="loop_fusion")
+    err = ei.value
+    assert err.invariant == invariant
+    assert err.pass_name == "loop_fusion"
+    assert "after pass 'loop_fusion'" in str(err)
+    assert invariant in str(err)
+
+
+def test_optimize_attributes_corruption_to_offending_pass(monkeypatch, rng):
+    """A transform that corrupts the IR is caught at *its* pass boundary."""
+    db = make_db(rng)
+    bad = CORRUPTIONS["field-missing"]()
+    monkeypatch.setattr("repro.core.transforms.loop_fusion", lambda p, **kw: bad)
+    with pytest.raises(IRVerificationError) as ei:
+        optimize(
+            groupby(),
+            db,
+            OptimizeOptions(planner="none", backend="reference", reformat=False, verify_ir=True),
+        )
+    assert ei.value.pass_name == "loop_fusion"
+    assert ei.value.invariant == "field-missing"
+    # the clean passes upstream of the corruption are NOT blamed
+    assert ei.value.pass_name not in ("frontend", "loop_interchange", "dead_code_elimination")
+
+
+def test_optimize_verify_off_does_not_check(monkeypatch, rng):
+    db = make_db(rng)
+    bad = groupby(results=("R", "ghost"))  # compiles fine; verifier would reject
+    monkeypatch.setattr("repro.core.transforms.loop_fusion", lambda p, **kw: bad)
+    optimize(
+        groupby(),
+        db,
+        OptimizeOptions(planner="none", backend="reference", reformat=False, verify_ir=False),
+    )
+
+
+def test_optimize_verifies_frontend_input(rng):
+    db = make_db(rng)
+    with pytest.raises(IRVerificationError) as ei:
+        optimize(
+            CORRUPTIONS["table-undeclared"](),
+            db,
+            OptimizeOptions(planner="none", backend="reference", reformat=False, verify_ir=True),
+        )
+    assert ei.value.pass_name == "frontend"
+
+
+# ---------------------------------------------------------------------------
+# Dependence / legality (analysis.deps)
+# ---------------------------------------------------------------------------
+
+
+def test_op_algebra_classification():
+    assert deps.is_mergeable("+") and deps.is_mergeable("max") and deps.is_mergeable("min")
+    assert not deps.is_mergeable("first")          # associative, NOT commutative
+    assert not deps.is_mergeable("no-such-op")     # unknown ops fail closed
+    assert deps.merge_illegal_ops({"+", "max"}) == []
+    assert deps.merge_illegal_ops({"+", "first"}) == ["first"]
+    assert deps.merge_illegal_ops({"weird"}) == ["weird"]
+
+
+def test_partitionable_proof():
+    ok, reasons = deps.partitionable(groupby("+"))
+    assert ok and reasons == []
+    ok, reasons = deps.partitionable(groupby("first"))
+    assert not ok
+    assert any("first" in r for r in reasons)
+
+
+def test_independent_fails_closed_on_unknown_stmt():
+    class Mystery(ScalarAssign):
+        pass
+
+    a = ScalarAssign("x", Const(1))
+    b = Mystery("y", Const(2))
+    assert deps.independent(a, ScalarAssign("y", Const(2)))
+    assert not deps.independent(a, b)
+    assert deps.unknown_stmts(b)
+
+
+def test_transforms_delegate_to_deps():
+    p = groupby()
+    s = p.body[0].body[0]
+    assert T.stmt_reads(s) == deps.stmt_reads(s)
+    assert T.stmt_writes(s) == deps.stmt_writes(s) == {"acc"}
+
+
+def test_required_columns_matches_required_fields():
+    p = groupby()
+    spec = extract_spec(p)
+    assert required_columns(p, spec) == deps.required_fields(p, spec)
+    assert required_columns(p, spec)["T"] == {"k", "v"}
+
+
+# ---------------------------------------------------------------------------
+# Planner legality gate
+# ---------------------------------------------------------------------------
+
+
+def test_planner_rejects_noncommutative_partitioned(rng):
+    db = make_db(rng)
+    stats = collect_stats(db)
+    d = plan_query(groupby("first"), stats, n_parts=8, executor="partitioned")
+    assert d.chosen.n_partitions == 1
+    assert all(c.n_partitions == 1 for c in d.candidates)
+    assert d.rejections and "commutative" in d.rejections[0]
+
+
+def test_planner_rejects_noncommutative_parallel(rng):
+    db = make_db(rng)
+    stats = collect_stats(db)
+    d = plan_query(groupby("first"), stats, n_parts=8)
+    assert d.chosen.parallel == "none"
+    assert all(c.parallel == "none" for c in d.candidates)
+    assert d.rejections
+
+
+def test_planner_admits_mergeable_ops(rng):
+    db = make_db(rng)
+    stats = collect_stats(db)
+    d = plan_query(groupby("+"), stats, n_parts=8, executor="partitioned")
+    assert any((c.n_partitions or 1) > 1 for c in d.candidates)
+    assert d.rejections == ()
+
+
+def test_rejections_surface_in_explain(rng):
+    from repro.planner import render_explain
+
+    db = make_db(rng)
+    d = plan_query(groupby("first"), collect_stats(db), n_parts=8, executor="partitioned")
+    text = render_explain(d, "firstq")
+    assert "legality (dependence analysis)" in text
+    assert "commutative" in text
+
+
+def test_fixed_pipeline_skips_illegal_parallelization(rng):
+    db = make_db(rng)
+    res = optimize(
+        groupby("first"),
+        db,
+        OptimizeOptions(planner="none", backend="reference", n_parts=4, reformat=False, trace=True),
+    )
+    assert not any(isinstance(s, Forall) for s in res.program.body)
+    assert any("skipped (illegal)" in t for t in res.trace)
+    # and the sequential result is still the keep-first semantics
+    out = res.plan.run()
+    first = {}
+    ks = db["T"].field("k")
+    vs = db["T"].field("v")
+    for k, v in zip(ks, vs):
+        first.setdefault(int(k), int(v))
+    assert sorted(out["R"]) == sorted(first.items())
+
+
+def test_reference_first_op_keeps_first_value(rng):
+    db = make_db(rng)
+    out = run_ref(groupby("first"), db)
+    first = {}
+    for k, v in zip(db["T"].field("k"), db["T"].field("v")):
+        first.setdefault(int(k), int(v))
+    assert out["R"] == sorted(first.items())
+
+
+# ---------------------------------------------------------------------------
+# Lint
+# ---------------------------------------------------------------------------
+
+
+def test_lint_unused_and_skew_and_overflow():
+    db = Database().add(
+        Multiset.from_columns(
+            "T",
+            k=np.array([0, 0, 0, 0, 1], dtype=np.int32),
+            v=np.array([100, 100, 100, 100, 5], dtype=np.int8),
+            s=np.array(["a"] * 5, dtype=object),
+        )
+    )
+    warnings = lint_program(groupby(), db=db, stats=collect_stats(db), n_partitions=8)
+    rules = {w.rule for w in warnings}
+    assert "unused-column" in rules     # 's' is never read
+    assert "partition-skew" in rules    # 2 distinct keys for 8 partitions
+    assert "sum-overflow" in rules      # 5 * 100 > int8 max
+    assert all(str(w).startswith("[") for w in warnings)
+
+
+def test_lint_clean_program():
+    rng = np.random.default_rng(0)
+    db = Database().add(
+        Multiset.from_columns(
+            "T",
+            k=rng.integers(0, 64, 500).astype(np.int64),
+            v=rng.integers(0, 50, 500).astype(np.int64),
+        )
+    )
+    p = Program(
+        tables=(db["T"].decl(),),
+        body=groupby().body,
+        results=("R",),
+        name="gb",
+    )
+    assert lint_program(p, db=db, stats=collect_stats(db), n_partitions=4) == []
+
+
+def test_lint_filter_pushdown():
+    decl2 = MultisetDecl("U", TupleSchema((("k", "int32"),)))
+    inner = Forelem(
+        "j",
+        Filtered("U", BinOp("<", FieldRef("U", "_", "k"), Const(3)), FullSet("U")),
+        (ScalarAssign("x", Const(1), "+"),),
+    )
+    p = Program(
+        tables=(DECL, decl2),
+        body=(Forelem("i", FullSet("T"), (inner,)),),
+        results=("x",),
+        name="nested",
+    )
+    verify_program(p)
+    warnings = lint_program(p)
+    assert any(w.rule == "filter-pushdown" for w in warnings)
+
+
+def test_session_check_and_explain_lint():
+    from repro.engine import Session
+
+    s = Session(n_parts=4, backend="partitioned", n_partitions=4)
+    s.register(
+        "access",
+        url=np.array(["a", "a", "a", "a", "b"], dtype=object),
+        size=np.array([100, 100, 100, 100, 5], dtype=np.int8),
+        extra=np.arange(5),
+    )
+    rep = s.check("SELECT url, SUM(size) FROM access GROUP BY url")
+    assert rep.ok and rep.error is None
+    rules = {w.rule for w in rep.warnings}
+    assert {"unused-column", "partition-skew", "sum-overflow"} <= rules
+    assert "[partition-skew]" in str(rep)
+    text = s.explain("SELECT url, SUM(size) FROM access GROUP BY url", lint=True)
+    assert "lint:" in text and "[sum-overflow]" in text
+
+
+# ---------------------------------------------------------------------------
+# Property: random pass pipelines stay verifier-clean and agree with the
+# reference interpreter
+# ---------------------------------------------------------------------------
+
+PIPELINE_PASSES = [
+    ("loop_interchange", T.loop_interchange),
+    ("dead_code_elimination", T.dead_code_elimination),
+    ("loop_fusion", T.loop_fusion),
+    (
+        "partition_indirect+ise",
+        lambda p: T.iteration_space_expansion(partition_indirect(p, "T", "k", 4)),
+    ),
+]
+
+
+def _run_property(seed, n, nk, pass_idxs, op="+"):
+    rng = np.random.default_rng(seed)
+    db = make_db(rng, n=n, nk=nk)
+    p = groupby(op)
+    expected = run_ref(p, db)
+    verify_program(p, pass_name="frontend")
+    for i in pass_idxs:
+        name, fn = PIPELINE_PASSES[i]
+        p = fn(p)
+        verify_program(p, pass_name=name)
+    assert run_ref(p, db) == expected
+
+
+@pytest.mark.parametrize(
+    "seed,pass_idxs",
+    [(0, [0, 1, 2]), (1, [3, 2]), (2, [2, 3]), (3, [0, 3, 2, 1]), (4, [1, 1, 2, 2])],
+)
+def test_pipelines_verifier_clean_deterministic(seed, pass_idxs):
+    _run_property(seed, n=150, nk=11, pass_idxs=pass_idxs)
+
+
+def test_property_random_pipelines():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        n=st.integers(5, 300),
+        nk=st.integers(1, 30),
+        pass_idxs=st.lists(st.integers(0, len(PIPELINE_PASSES) - 1), max_size=5),
+        op=st.sampled_from(["+", "max", "min"]),
+    )
+    def prop(seed, n, nk, pass_idxs, op):
+        # partitioning twice would nest foralls — dedup the composite pass
+        if pass_idxs.count(3) > 1:
+            pass_idxs = [i for i in pass_idxs if i != 3] + [3]
+        _run_property(seed, n, nk, pass_idxs, op=op)
+
+    prop()

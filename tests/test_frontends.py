@@ -108,7 +108,6 @@ def test_forelem_to_mapreduce_sum_variant(rng):
 
 
 def test_non_mr_shape_rejected(rng):
-    db = Database().add(Multiset.from_columns("t", k=rng.integers(0, 5, 20).astype(np.int32)))
     p = sql_to_forelem("SELECT k FROM t", {"t": ["k"]})
     with pytest.raises(NotMapReduceShape):
         forelem_to_mapreduce(p)

@@ -28,7 +28,7 @@ from repro.core import (
 )
 from repro.core import transforms as T
 from repro.core.lower import ReferenceInterpreter
-from repro.core.partition import partition_direct, partition_indirect
+from repro.core.partition import partition_direct
 from repro.data.multiset import Database, Multiset
 
 
@@ -111,7 +111,6 @@ def test_dce_removes_dead_aggregate():
     dead = Forelem("i", FullSet("T"), (Accumulate("dead", FieldRef("T", "i", "k"), Const(1)),))
     p2 = p.with_body((dead,) + p.body)
     p3 = T.dead_code_elimination(p2)
-    arrays = [s.array for s in p3.body[0].body if isinstance(s, Accumulate)] if isinstance(p3.body[0], Forelem) else []
     from repro.core.ir import walk
     accs = [s.array for s in walk(p3.body) if isinstance(s, Accumulate)]
     assert "dead" not in accs

@@ -262,7 +262,6 @@ def test_groupby_over_join_unmatched_group_absent(rng):
 
 
 def test_groupby_over_join_spec_shape(rng):
-    db = make_db(rng)
     p = sql_to_forelem(
         "SELECT a.f, COUNT(a.f) FROM A a, B b WHERE a.b_id = b.id GROUP BY a.f", SCHEMAS
     )

@@ -5,7 +5,6 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.segreduce.kernel import segreduce_pallas

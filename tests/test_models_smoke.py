@@ -9,7 +9,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SHAPES, get_config, list_archs, reduced_config, valid_cells
+from repro.configs.base import get_config, list_archs, reduced_config, valid_cells
 from repro.models.transformer import Model, prefill_forward
 
 ARCHS = list_archs()

@@ -5,7 +5,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import OptimizeOptions, optimize
-from repro.core.reformat import apply_reformat, auto_reformat, plan_reformat
+from repro.core.reformat import apply_reformat, plan_reformat
 from repro.data.multiset import (
     CompressedRangeColumn,
     Database,

@@ -11,7 +11,6 @@ import pytest
 import jax
 
 from repro.core import OptimizeOptions, optimize
-from repro.core.ir import Program
 from repro.core.lower import CodegenChoices, Plan, ReferenceInterpreter
 from repro.core.transforms import join_orders
 from repro.data.multiset import Database, Multiset

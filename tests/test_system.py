@@ -5,7 +5,6 @@ import dataclasses
 from types import SimpleNamespace
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

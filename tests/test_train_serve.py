@@ -2,10 +2,8 @@
 # feedback, checkpoint save/restore (sync + async + resharding), KV-cache
 # quantization and generation.
 import dataclasses
-import os
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
@@ -13,13 +11,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_config, reduced_config
 from repro.models.transformer import Model
 from repro.train.checkpoint import CheckpointManager
-from repro.train.grad_compress import (
-    compress_leaf,
-    compression_ratio,
-    dequantize_int8,
-    init_residuals,
-    quantize_int8,
-)
+from repro.train.grad_compress import compress_leaf, compression_ratio, dequantize_int8, quantize_int8
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
 
 
