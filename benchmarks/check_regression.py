@@ -67,18 +67,30 @@ def _engine_counts(d: Dict) -> Dict[str, float]:
     return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
 
 
+def _kernel_metrics(d: Dict) -> Dict[str, float]:
+    # fused-vs-unfused multi-aggregate speedups from bench_kernels.py
+    return {k: float(v) for k, v in d.get("key_ratios", {}).items() if v and v > 0}
+
+
+def _kernel_counts(d: Dict) -> Dict[str, float]:
+    # chunk-kernel jit compile counts: fused (1 kernel) vs per-aggregate
+    return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
+
+
 # report file -> metric extractor (name -> higher-is-better ratio)
 EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_engine.json": _engine_metrics,
     "BENCH_join.json": _join_metrics,
     "BENCH_planner.json": _planner_metrics,
     "BENCH_partition.json": _partition_metrics,
+    "BENCH_kernels.json": _kernel_metrics,
 }
 
 # report file -> lower-is-better count extractor (compile counts etc.)
 COUNT_EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_partition.json": _partition_counts,
     "BENCH_engine.json": _engine_counts,
+    "BENCH_kernels.json": _kernel_counts,
 }
 
 

@@ -28,6 +28,7 @@ BENCHES = {
     "BENCH_join.json": "benchmarks/bench_join.py",
     "BENCH_engine.json": "benchmarks/bench_engine.py",
     "BENCH_partition.json": "benchmarks/bench_partition.py",
+    "BENCH_kernels.json": "benchmarks/bench_kernels.py",
 }
 
 

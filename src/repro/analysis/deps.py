@@ -119,6 +119,18 @@ def merge_illegal_ops(ops: Iterable[str]) -> List[str]:
     return sorted({op for op in ops if not is_mergeable(op)})
 
 
+def fusion_illegal_ops(ops: Iterable[str]) -> List[str]:
+    """The subset of ``ops`` the fused multi-aggregate segreduce kernel may
+    NOT evaluate: the kernel's per-tile/per-chunk partial accumulators are
+    re-merged under the op itself, so fusion requires the same
+    commutative+associative algebra as cross-partition merging.  (The
+    lowering additionally restricts fusion to the accumulator updates the
+    kernel implements — backends.codegen.FUSABLE_AGG_OPS; this is the
+    algebraic gate the planner checks before emitting fused-kernel
+    candidates.)  Unknown ops are included (fail closed)."""
+    return merge_illegal_ops(ops)
+
+
 def accumulate_ops(stmts: Sequence[Stmt]) -> Set[str]:
     """Every Accumulate op appearing anywhere under ``stmts``."""
     return {s.op for s in walk(stmts) if isinstance(s, Accumulate)}

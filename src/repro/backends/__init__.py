@@ -18,6 +18,7 @@ from .interface import (  # noqa: F401
     register_backend,
 )
 from .codegen import (  # noqa: F401
+    FUSABLE_AGG_OPS,
     AggSpec,
     DistinctReadSpec,
     FilterProjectSpec,
@@ -27,6 +28,7 @@ from .codegen import (  # noqa: F401
     ScalarReduceSpec,
     UnsupportedProgram,
     extract_spec,
+    fused_agg_groups,
 )
 from .reference import ReferenceBackend, ReferenceInterpreter, ReferencePlan  # noqa: F401
 from .jax_vec import CodegenChoices, JaxBackend, JaxLowering, Plan  # noqa: F401

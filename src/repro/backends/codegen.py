@@ -65,6 +65,37 @@ class AggSpec:
     member_filter: Optional[Tuple[str, str, str]] = None
 
 
+# Accumulate ops the fused segreduce kernel evaluates in one pass.  Anything
+# else (e.g. 'first') stays on the per-aggregate paths.
+FUSABLE_AGG_OPS = ("+", "max", "min")
+
+
+def _reads_arrays(e: Expr) -> bool:
+    if isinstance(e, ArrayRead):
+        return True
+    if isinstance(e, BinOp):
+        return _reads_arrays(e.lhs) or _reads_arrays(e.rhs)
+    return False
+
+
+def fused_agg_groups(aggs: Sequence[AggSpec]) -> List[List[int]]:
+    """Partition the fusable aggregates into groups that one fused-kernel
+    launch can evaluate together: same source table, same GROUP-BY key and
+    same row predicate (filter + member filter), so the group shares one
+    hit/mask matrix and one presence histogram.  Returns index lists into
+    ``aggs`` in insertion order.  Left out (evaluated per-aggregate, in
+    statement order): non-fusable ops, and aggregates whose value expression
+    reads another accumulator array — hoisting those into a group would
+    reorder them across their producers."""
+    groups: Dict[Tuple, List[int]] = {}
+    for i, a in enumerate(aggs):
+        if a.op not in FUSABLE_AGG_OPS or _reads_arrays(a.value):
+            continue
+        sig = (a.table, a.key_field, repr(a.filter_pred), a.member_filter)
+        groups.setdefault(sig, []).append(i)
+    return list(groups.values())
+
+
 @dataclass
 class DistinctReadSpec:
     """forelem (i ∈ pT.distinct(f)) R ∪= tuple(field / ArrayRead items).

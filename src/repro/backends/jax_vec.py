@@ -26,7 +26,10 @@ from repro.core.ir import (
 )
 from repro.data.multiset import Database, DictColumn
 
+from repro.kernels.segreduce import ops as segops
+
 from .codegen import (
+    FUSABLE_AGG_OPS,
     DistinctReadSpec,
     JoinSpec,
     UnsupportedProgram,
@@ -35,9 +38,13 @@ from .codegen import (
     _op_identity,
     cols_len_shape,
     extract_spec,
+    fused_agg_groups,
     required_columns,
 )
 from .interface import register_backend
+
+# engine accumulate-op spelling -> segreduce kernel spelling
+_KERNEL_OPS = {"+": "sum", "max": "max", "min": "min"}
 
 
 @dataclass
@@ -111,6 +118,33 @@ class JaxLowering:
                 self.num_keys[(ja.key.table, ja.key.field)] = self._key_space(
                     ja.key.table, ja.key.field
                 )
+        # Fused-kernel groups: aggregates one fused pallas_call evaluates
+        # together under agg_method='kernel' (same table / GROUP-BY key /
+        # row predicate, so they share one hit matrix and presence pass).
+        self.fused_groups: List[List[int]] = (
+            fused_agg_groups(self.spec.aggs) if self.choices.agg_method == "kernel" else []
+        )
+        # Loud method fallbacks: when a requested agg_method cannot evaluate
+        # an op, _aggregate downgrades that aggregate to 'dense' — the notes
+        # here are surfaced by the optimizer into the trace and the
+        # decision's rejections so the downgrade is never silent.
+        self.method_notes: List[str] = []
+        if self.choices.agg_method in ("onehot", "kernel"):
+            supported = ("+",) if self.choices.agg_method == "onehot" else FUSABLE_AGG_OPS
+            labelled = [
+                (f"agg {a.array}[{a.table}.{a.key_field}]", a.op) for a in self.spec.aggs
+            ] + [
+                (f"join-agg {ja.array}[{ja.key.table}.{ja.key.field}]", ja.op)
+                for j in self.spec.joins
+                for ja in j.aggs
+            ]
+            for label, op in labelled:
+                if op not in supported:
+                    self.method_notes.append(
+                        f"{label}: op {op!r} unsupported by "
+                        f"agg_method={self.choices.agg_method!r} — "
+                        "this aggregate falls back to 'dense'"
+                    )
 
     def _key_space(self, table: str, fld: str) -> int:
         col = self.db[table].columns[fld]
@@ -156,7 +190,11 @@ class JaxLowering:
     # -- aggregation kernels ----------------------------------------------------
     def _aggregate(self, keys, values, num_keys: int, op: str):
         method = self.choices.agg_method
-        if op != "+" and method in ("onehot", "kernel"):
+        # Per-op downgrades are recorded in self.method_notes (built at
+        # lowering time) and surfaced by the optimizer — not silent.
+        if op != "+" and method == "onehot":
+            method = "dense"
+        if op not in FUSABLE_AGG_OPS and method == "kernel":
             method = "dense"
         if method == "dense":
             if op == "+":
@@ -180,9 +218,7 @@ class JaxLowering:
                 return jax.ops.segment_min(sv, sk, num_segments=num_keys, indices_are_sorted=True)
             raise UnsupportedProgram(op)
         if method == "kernel":
-            from repro.kernels.segreduce import ops as segops
-
-            return segops.segreduce(keys, values, num_keys)
+            return segops.segreduce(keys, values, num_keys, op=_KERNEL_OPS[op])
         raise ValueError(f"bad agg method {method}")
 
     # -- shared per-op input preparation ----------------------------------------
@@ -220,6 +256,22 @@ class JaxLowering:
         if mask is not None:
             ones = jnp.where(mask, ones, 0)
         return keys, values, ones, mask
+
+    def fused_agg_inputs(self, aggs, cols, arrays):
+        """(keys, value-column tuple, combined row mask) for a fused
+        aggregate group (one entry of ``self.fused_groups``).  Unlike
+        ``agg_inputs`` the mask is NOT pre-applied: the fused kernel
+        evaluates it in-pass, funneling masked rows to each op's identity
+        via the shared hit matrix."""
+        first = aggs[0]
+        keys = cols[first.table][first.key_field]
+        mask = self._pred_mask(first.filter_pred, cols, first.table)
+        if first.member_filter is not None:
+            mf, mt, mfld = first.member_filter
+            member = jnp.isin(cols[first.table][mf], cols[mt][mfld])
+            mask = member if mask is None else (mask & member)
+        values = tuple(self._agg_value(a.value, keys, cols, a.table, arrays) for a in aggs)
+        return keys, values, mask
 
     def join_agg_inputs(self, ja, j: JoinSpec, jr: "_JoinRows", cols):
         """(keys, values, presence-ones) for one JoinAgg over the joined
@@ -271,6 +323,32 @@ class JaxLowering:
                 return acc, None
             ones = jnp.where(valid, ones, 0)
             return acc, self._aggregate(keys, ones, nk, "+")
+
+        return fn
+
+    def chunk_fused_agg_fn(self, aggs, with_presence: bool = True) -> Callable:
+        """(padded chunk cols, n_valid, env, arrays) -> (tuple of partial
+        accumulators — one per aggregate in the group, input dtypes
+        preserved — and the presence partial or None).
+
+        The fused variant of ``chunk_agg_fn``: the whole aggregate group
+        runs in ONE fused segreduce launch per chunk (filter mask, padding
+        mask and every accumulator in a single data pass); the partitioned
+        runner partial-merges the multi-accumulator state across chunks
+        element-wise under each aggregate's own op."""
+        first = aggs[0]
+        nk = self.num_keys[(first.table, first.key_field)]
+        ops = tuple(_KERNEL_OPS[a.op] for a in aggs)
+
+        def fn(chunk_cols, n_valid, env, arrays):
+            cols = dict(env)
+            cols[first.table] = chunk_cols
+            keys, values, mask = self.fused_agg_inputs(aggs, cols, arrays)
+            valid = jnp.arange(keys.shape[0], dtype=jnp.int32) < n_valid
+            mask = valid if mask is None else (mask & valid)
+            return segops.fused_segreduce(
+                keys, values, ops, nk, mask=mask, with_presence=with_presence
+            )
 
         return fn
 
@@ -365,8 +443,30 @@ class JaxLowering:
             out: Dict[str, Any] = {}
 
             # --- aggregations ------------------------------------------------
-            for agg in spec.aggs:
+            # Under agg_method='kernel' (sequential), each fused group runs
+            # as ONE fused segreduce launch — mask, every accumulator and
+            # the presence histogram in a single data pass — at the position
+            # of its first member; everything else keeps the per-aggregate
+            # path (vmap/shard_map partials merge per-op downstream).
+            fused_at: Dict[int, List[int]] = {}
+            if self.fused_groups and self.choices.parallel == "none":
+                fused_at = {g[0]: g for g in self.fused_groups}
+            fused_members = {i for g in fused_at.values() for i in g}
+            for ai, agg in enumerate(spec.aggs):
                 nk = self.num_keys[(agg.table, agg.key_field)]
+                group = fused_at.get(ai)
+                if group is not None:
+                    gaggs = [spec.aggs[i] for i in group]
+                    keys, values, mask = self.fused_agg_inputs(gaggs, cols, arrays)
+                    accs, pres = segops.fused_segreduce(
+                        keys, values, tuple(_KERNEL_OPS[a.op] for a in gaggs), nk, mask=mask
+                    )
+                    for a, acc in zip(gaggs, accs):
+                        arrays[a.array] = acc
+                    presence[(agg.table, agg.key_field)] = pres
+                    continue
+                if ai in fused_members:
+                    continue  # evaluated with its group above
                 safe_keys, values, ones, mask = self.agg_inputs(agg, cols, arrays)
                 arrays[agg.array] = self._parallel_aggregate(safe_keys, values, nk, agg.op, mask)
                 presence[(agg.table, agg.key_field)] = self._parallel_aggregate(safe_keys, ones, nk, "+", mask)

@@ -53,9 +53,11 @@ from repro.data.multiset import Database
 from repro.obs.trace import NULL_TRACER
 from repro.sched.loop_schedule import busy_times, make_policy, simulate_schedule, worker_imbalance
 
+from repro.kernels.segreduce import ops as segops
+
 from .codegen import _densify, required_columns
 from .interface import register_backend
-from .jax_vec import CodegenChoices, JaxLowering
+from .jax_vec import _KERNEL_OPS, CodegenChoices, JaxLowering
 
 SCHEDULES = ("static", "fixed", "guided")
 # accepted alternate spellings (sched/loop_schedule.py's own policy names)
@@ -226,6 +228,8 @@ class ChunkDispatch:
     t_ms: float = 0.0
     compiled: bool = False   # this dispatch triggered a fresh XLA compile
     queue_ms: float = 0.0    # dispatch-start → execution-start wait
+    n_aggs: int = 1          # accumulators this dispatch produced
+    fused: bool = False      # fused multi-aggregate kernel (one data pass)
 
     def trace_attrs(self) -> Dict[str, Any]:
         """The fields a per-chunk ``dispatch`` span carries — the trace is
@@ -241,6 +245,8 @@ class ChunkDispatch:
             "t_ms": self.t_ms,
             "compiled": self.compiled,
             "queue_ms": self.queue_ms,
+            "n_aggs": self.n_aggs,
+            "fused": self.fused,
         }
 
 
@@ -571,24 +577,49 @@ class PartitionedPlan:
         out: Dict[str, Any] = {}
 
         # --- aggregations: per-chunk partials, merged with the op ----------
-        for ai, agg in enumerate(spec.aggs):
+        # Dispatch *units*: under agg_method='kernel' each fused group
+        # (same table / GROUP-BY key / row predicate — codegen.
+        # fused_agg_groups) runs as ONE unit whose chunk kernel produces
+        # every accumulator of the group plus presence in a single data
+        # pass; each partial's multi-accumulator state is merged
+        # element-wise under its own op.  Uncovered aggregates keep the
+        # per-aggregate kernel.  Units run at their first member's
+        # statement position, so earlier-array reads stay ordered.
+        fused_cover = {i for g in low.fused_groups for i in g}
+        units = [(True, g) for g in low.fused_groups] + [
+            (False, [ai]) for ai in range(len(spec.aggs)) if ai not in fused_cover
+        ]
+        units.sort(key=lambda u: u[1][0])
+        for use_fused, idxs in units:
+            gaggs = [spec.aggs[i] for i in idxs]
+            agg = gaggs[0]
             nk = low.num_keys[(agg.table, agg.key_field)]
             layout = self._layout(agg.table, self._partition_key_for(agg.table, agg.key_field))
-            chunks = self._chunks(layout, f"agg:{agg.array}")
+            opname = "agg:" + "+".join(a.array for a in gaggs)
+            chunks = self._chunks(layout, opname)
+            for _, _, d in chunks:
+                d.n_aggs, d.fused = len(gaggs), use_fused
             pkey = ("agg", agg.table, agg.key_field)
             cacheable = agg.filter_pred is None and agg.member_filter is None
             cached_pres = self._presence_cache.get(pkey) if cacheable else None
             need_pres = cached_pres is None
             if use_jit:
                 kern = self._kernel(
-                    ("agg", ai, need_pres),
-                    lambda a=agg, wp=need_pres: low.chunk_agg_fn(a, with_presence=wp),
+                    ("agg", tuple(idxs), need_pres),
+                    lambda gs=tuple(gaggs), a=agg, uf=use_fused, wp=need_pres: (
+                        low.chunk_fused_agg_fn(gs, with_presence=wp)
+                        if uf
+                        else low.chunk_agg_fn(a, with_presence=wp)
+                    ),
                 )
                 extra = ()
                 if agg.member_filter is not None:
                     mf, mt, mfld = agg.member_filter
                     extra = ((mt, mfld),)
-                env = self._kernel_env((agg.value, agg.filter_pred), agg.table, pcols, extra)
+                env = self._kernel_env(
+                    tuple(a.value for a in gaggs) + (agg.filter_pred,),
+                    agg.table, pcols, extra,
+                )
                 snap = dict(arrays)  # aggs may read arrays of *earlier* aggs
 
                 def work(ch, _k=kern, _e=env, _a=snap, _t=agg.table):
@@ -596,6 +627,17 @@ class PartitionedPlan:
                     chunk, nv = self._padded_chunk(_t, idx, d)
                     res, d.compiled = _k(chunk, nv, _e, _a)
                     return res
+            elif use_fused:
+                gops = tuple(_KERNEL_OPS[a.op] for a in gaggs)
+
+                def work(ch, _gaggs=gaggs, _gops=gops, _nk=nk, _np=need_pres, _t=agg.table):
+                    _, idx, d = ch
+                    c2 = dict(cols)
+                    c2[_t] = self._slice(_t, idx)
+                    keys, values, mask = low.fused_agg_inputs(_gaggs, c2, arrays)
+                    return segops.fused_segreduce(
+                        keys, values, _gops, _nk, mask=mask, with_presence=_np
+                    )
             else:
 
                 def work(ch, _agg=agg, _nk=nk, _np=need_pres):
@@ -608,19 +650,23 @@ class PartitionedPlan:
                         low._aggregate(keys, ones, _nk, "+") if _np else None,
                     )
 
-            acc = pres = None
+            accs: List[Any] = [None] * len(gaggs)
+            pres = None
             for part in self._dispatch(chunks, work, tr):
-                acc = self._merge(acc, part[0], agg.op)
+                paccs = part[0] if use_fused else (part[0],)
+                for i, (a, p) in enumerate(zip(gaggs, paccs)):
+                    accs[i] = self._merge(accs[i], p, a.op)
                 if need_pres:
                     pres = self._merge(pres, part[1], "+")
             if not need_pres:
                 pres = cached_pres
-            if acc is None:  # empty table: identity accumulators
-                acc = jnp.zeros((nk,), jnp.int32)
+            if accs[0] is None:  # empty table: identity accumulators
+                accs = [jnp.zeros((nk,), jnp.int32) for _ in gaggs]
                 pres = jnp.zeros((nk,), jnp.int32)
             if cacheable and need_pres:
                 self._presence_cache[pkey] = pres
-            arrays[agg.array] = acc
+            for a, acc in zip(gaggs, accs):
+                arrays[a.array] = acc
             presence[(agg.table, agg.key_field)] = pres
 
         # --- joins: shuffle-on-key, each partition joins locally ------------
@@ -899,6 +945,8 @@ class PartitionedPlan:
                 t_ms=float(r.get("t_ms", 0.0)),
                 compiled=bool(r.get("compiled", False)),
                 queue_ms=float(r.get("queue_ms", 0.0)),
+                n_aggs=int(r.get("n_aggs", 1)),
+                fused=bool(r.get("fused", False)),
             )
             for r in trace.dispatch_records()
         ]

@@ -249,6 +249,15 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
         )
     with tr.span("lower", backend=opts.backend):
         plan = get_backend(opts.backend).compile(p, db, choices)
+    # Per-aggregate method downgrades (e.g. a non-SUM op under
+    # agg_method='onehot', or a non-fusable op under 'kernel') must never be
+    # silent: the lowering records them, and they surface both in the pass
+    # trace and in the planner decision's legality diagnostics.
+    notes = getattr(getattr(plan, "lowering", None), "method_notes", None)
+    if notes:
+        trace.append("=== aggregation-method fallback ===\n" + "\n".join(notes))
+        if decision is not None:
+            decision.rejections = decision.rejections + tuple(notes)
     if outcome is not None:
         outcome.store(plan, p)
     return OptimizeResult(

@@ -1,4 +1,5 @@
-# Pallas TPU kernel: segmented (group-by) aggregation.
+# Pallas TPU kernels: segmented (group-by) aggregation, single-op and
+# fused multi-aggregate.
 #
 # TPU adaptation of the paper's hash-table index-set materialization
 # (Fig. 1 bottom): scalar hashing is hostile to the VPU/MXU, so the
@@ -6,49 +7,164 @@
 # analogue of an L1-resident hash table) and each row tile contributes via a
 # one-hot × values contraction on the MXU.
 #
-# Layout: keys int32 (N,), values f32 (N,), out f32 (K,).  The wrapper pads
-# N to a multiple of the row tile (T) and K to a lane multiple (128).  The
-# grid is 1-D over row tiles; TPU grids execute sequentially, so read-
-# modify-write accumulation into o_ref across steps is race-free.
+# The fused kernel evaluates a whole query's aggregate group in ONE
+# pallas_call: per row tile it builds the (tile, keys) hit matrix once —
+# key equality AND the filter mask, so masked rows simply have no hit and
+# therefore contribute each op's identity — then drives every aggregate's
+# accumulator row from that one matrix (sums via MXU contraction, min/max
+# via masked VPU reductions) plus the group-presence histogram.  One data
+# pass replaces the per-aggregate mask/funnel/scatter/presence passes.
+#
+# Layout: keys int32 (N,), mask int32 (N,), one values column per
+# aggregate in its own dtype (int and float accumulators are preserved —
+# sub-f32 floats accumulate in f32 and are cast back).  The wrapper pads N
+# to a multiple of the row tile (T) with mask=0 rows (identity
+# contribution by construction) and K to a lane multiple (128).  The grid
+# is 1-D over row tiles; TPU grids execute sequentially, so
+# read-modify-write accumulation into the out refs across steps is
+# race-free.
 from __future__ import annotations
 
 import functools
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG = -3.0e38
+# Ops the segmented-aggregation kernels evaluate (engine spelling '+' is
+# mapped to 'sum' by backends/jax_vec).  COUNT and AVG lower to these at
+# the frontend: COUNT is a sum of ones, AVG a sum/count pair.
+OPS = ("sum", "max", "min")
 
 
-def _kernel_sum(keys_ref, vals_ref, out_ref, *, tile: int, num_keys: int):
+def op_identity(op: str, dtype) -> jnp.ndarray:
+    """Identity element of ``op`` for ``dtype`` — what masked/padded rows
+    contribute so they can never perturb a segment.  Dtype-correct: int
+    MIN/MAX use the iinfo extremes (a float -inf sentinel is *wrong* for
+    integer accumulators), float MIN/MAX use ±inf."""
+    dt = jnp.dtype(dtype)
+    if op == "sum":
+        return jnp.zeros((), dt)
+    if op not in ("max", "min"):
+        raise ValueError(f"unknown segreduce op {op!r}")
+    if jnp.issubdtype(dt, jnp.integer):
+        info = jnp.iinfo(dt)
+        return jnp.asarray(info.min if op == "max" else info.max, dt)
+    return jnp.asarray(-jnp.inf if op == "max" else jnp.inf, dt)
+
+
+def acc_dtype(dtype) -> jnp.dtype:
+    """Accumulator dtype for a value column: preserved, except sub-f32
+    floats (bf16/f16), which accumulate in f32 for precision and are cast
+    back at the end."""
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.floating) and dt.itemsize < 4:
+        return jnp.dtype(jnp.float32)
+    return dt
+
+
+def _fused_kernel(
+    *refs,
+    tile: int,
+    num_keys: int,
+    ops: Tuple[str, ...],
+    with_presence: bool,
+):
+    n_aggs = len(ops)
+    keys_ref, mask_ref = refs[0], refs[1]
+    vals_refs = refs[2 : 2 + n_aggs]
+    out_refs = refs[2 + n_aggs : 2 + 2 * n_aggs]
+    pres_ref = refs[2 + 2 * n_aggs] if with_presence else None
     step = pl.program_id(0)
 
     @pl.when(step == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        for op, o_ref in zip(ops, out_refs):
+            o_ref[...] = jnp.full_like(o_ref, op_identity(op, o_ref.dtype))
+        if pres_ref is not None:
+            pres_ref[...] = jnp.zeros_like(pres_ref)
 
     keys = keys_ref[...]  # (T, 1) int32
-    vals = vals_ref[...]  # (T, 1) f32
+    mask = mask_ref[...]  # (T, 1) int32; 0 ⇒ filtered out or padding
     key_ids = jax.lax.broadcasted_iota(jnp.int32, (tile, num_keys), 1)
-    onehot = (keys == key_ids).astype(vals.dtype)  # (T, K)
-    # (1, T) @ (T, K) -> (1, K): MXU contraction
-    out_ref[...] += jnp.dot(vals.T, onehot, preferred_element_type=jnp.float32)
+    # the one shared hit matrix: key match AND filter — a masked row has no
+    # hit anywhere, so every accumulator sees its identity for that row
+    hit = (keys == key_ids) & (mask > 0)  # (T, K)
+    for op, v_ref, o_ref in zip(ops, vals_refs, out_refs):
+        vals = v_ref[...].astype(o_ref.dtype)  # (T, 1)
+        if op == "sum":
+            onehot = hit.astype(o_ref.dtype)
+            # (1, T) @ (T, K) -> (1, K): MXU contraction
+            o_ref[...] += jnp.dot(vals.T, onehot, preferred_element_type=o_ref.dtype)
+        else:
+            ident = op_identity(op, o_ref.dtype)
+            contrib = jnp.where(hit, vals, ident)  # (T, K)
+            if op == "max":
+                o_ref[...] = jnp.maximum(o_ref[...], contrib.max(axis=0, keepdims=True))
+            else:
+                o_ref[...] = jnp.minimum(o_ref[...], contrib.min(axis=0, keepdims=True))
+    if pres_ref is not None:
+        pres_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=0, keepdims=True)
 
 
-def _kernel_max(keys_ref, vals_ref, out_ref, *, tile: int, num_keys: int):
-    step = pl.program_id(0)
+def fused_segreduce_pallas(
+    keys: jnp.ndarray,
+    values: Sequence[jnp.ndarray],
+    ops: Sequence[str],
+    num_keys: int,
+    mask: Optional[jnp.ndarray] = None,
+    with_presence: bool = True,
+    tile: int = 1024,
+    interpret: bool = True,
+) -> Tuple[Tuple[jnp.ndarray, ...], Optional[jnp.ndarray]]:
+    """Fused multi-aggregate segmented reduction in ONE pallas_call.
 
-    @pl.when(step == 0)
-    def _init():
-        out_ref[...] = jnp.full_like(out_ref, NEG)
-
-    keys = keys_ref[...]
-    vals = vals_ref[...]
-    key_ids = jax.lax.broadcasted_iota(jnp.int32, (tile, num_keys), 1)
-    hit = keys == key_ids
-    contrib = jnp.where(hit, vals, NEG)  # (T, K)
-    out_ref[...] = jnp.maximum(out_ref[...], contrib.max(axis=0, keepdims=True))
+    ``values[i]`` is aggregated under ``ops[i]`` into its own (num_keys,)
+    accumulator (input dtypes preserved); rows with ``mask == False`` (and
+    padding) contribute each op's identity.  Returns ``(accs, presence)``
+    where ``presence[k]`` counts unmasked rows of segment k (None when
+    ``with_presence=False``)."""
+    n_aggs = len(values)
+    if n_aggs != len(ops):
+        raise ValueError(f"{n_aggs} value columns but {len(ops)} ops")
+    for op in ops:
+        if op not in OPS:
+            raise ValueError(f"unknown segreduce op {op!r}")
+    dts = [acc_dtype(v.dtype) for v in values]
+    n = int(keys.shape[0])
+    if n == 0:
+        accs = tuple(
+            jnp.full((num_keys,), op_identity(op, dt), dt).astype(v.dtype)
+            for op, dt, v in zip(ops, dts, values)
+        )
+        pres = jnp.zeros((num_keys,), jnp.int32) if with_presence else None
+        return accs, pres
+    t = min(tile, max(8, n))
+    pad_n = (-n) % t
+    kp = num_keys + ((-num_keys) % 128)
+    keys_p = jnp.pad(keys.astype(jnp.int32), (0, pad_n))[:, None]
+    if mask is None:
+        mask = jnp.ones((n,), jnp.int32)
+    # padding extends the mask with zeros: padded rows are masked rows
+    mask_p = jnp.pad(mask.astype(jnp.int32), (0, pad_n))[:, None]
+    vals_p = [jnp.pad(v.astype(dt), (0, pad_n))[:, None] for v, dt in zip(values, dts)]
+    out_shapes = [jax.ShapeDtypeStruct((1, kp), dt) for dt in dts]
+    if with_presence:
+        out_shapes.append(jax.ShapeDtypeStruct((1, kp), jnp.int32))
+    outs = pl.pallas_call(
+        functools.partial(
+            _fused_kernel, tile=t, num_keys=kp, ops=tuple(ops), with_presence=with_presence
+        ),
+        grid=((n + pad_n) // t,),
+        in_specs=[pl.BlockSpec((t, 1), lambda i: (i, 0))] * (2 + n_aggs),
+        out_specs=tuple(pl.BlockSpec((1, kp), lambda i: (0, 0)) for _ in out_shapes),
+        out_shape=tuple(out_shapes),
+        interpret=interpret,
+    )(keys_p, mask_p, *vals_p)
+    accs = tuple(o[0, :num_keys].astype(v.dtype) for o, v in zip(outs[:n_aggs], values))
+    pres = outs[n_aggs][0, :num_keys] if with_presence else None
+    return accs, pres
 
 
 def segreduce_pallas(
@@ -59,25 +175,10 @@ def segreduce_pallas(
     tile: int = 1024,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    n = keys.shape[0]
-    t = min(tile, max(8, n))
-    pad_n = (-n) % t
-    pad_k = (-num_keys) % 128
-    kp = num_keys + pad_k
-    keys_p = jnp.pad(keys.astype(jnp.int32), (0, pad_n), constant_values=kp)[:, None]
-    fill = 0.0 if op == "sum" else NEG
-    vals_p = jnp.pad(values.astype(jnp.float32), (0, pad_n), constant_values=fill)[:, None]
-    grid = ((n + pad_n) // t,)
-    body = _kernel_sum if op == "sum" else _kernel_max
-    out = pl.pallas_call(
-        functools.partial(body, tile=t, num_keys=kp),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((t, 1), lambda i: (i, 0)),
-            pl.BlockSpec((t, 1), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, kp), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, kp), jnp.float32),
-        interpret=interpret,
-    )(keys_p, vals_p)
-    return out[0, :num_keys]
+    """Single-op segmented reduction (the fused kernel with one aggregate).
+    Input dtype is preserved; empty segments hold the op's identity."""
+    (acc,), _ = fused_segreduce_pallas(
+        keys, (values,), (op,), num_keys,
+        mask=None, with_presence=False, tile=tile, interpret=interpret,
+    )
+    return acc

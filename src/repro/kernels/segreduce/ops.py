@@ -1,22 +1,88 @@
-# Jitted public wrapper for the segreduce kernel.
+# Jitted public wrappers for the segreduce kernels, and the REPRO_PALLAS
+# execution-mode knob the query engine (and the planner's cost model)
+# resolves the Pallas-vs-jnp decision through.
 from __future__ import annotations
 
+import os
 from functools import partial
+from typing import Optional, Sequence
 
 import jax
 
-from .kernel import segreduce_pallas
-from .ref import segreduce_ref
+from .kernel import fused_segreduce_pallas, segreduce_pallas
+from .ref import fused_segreduce_ref, segreduce_ref
 
 
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def pallas_mode() -> str:
+    """How the segmented-aggregation kernels execute, resolved from the
+    ``REPRO_PALLAS`` environment knob:
+
+      * ``'compiled'``  — real Pallas kernel, Mosaic-compiled (TPU),
+      * ``'interpret'`` — Pallas kernel in interpret mode (slow; only when
+        forced off-TPU with ``REPRO_PALLAS=1`` — correctness testing),
+      * ``'off'``       — the pure-jnp fused fallback (``ref.py``).
+
+    Unset / ``auto``: compiled on TPU, fallback elsewhere.  ``1``/``force``
+    runs the Pallas kernel even off-TPU (interpret mode); ``0``/``off``
+    always uses the jnp fallback.  The knob is read at trace time — an
+    already-jitted caller keeps the mode it compiled with."""
+    env = os.environ.get("REPRO_PALLAS", "auto").strip().lower()
+    on_tpu = jax.default_backend() == "tpu"
+    if env in ("0", "off", "never", "jnp"):
+        return "off"
+    if env in ("1", "on", "force", "interpret"):
+        return "compiled" if on_tpu else "interpret"
+    return "compiled" if on_tpu else "off"
 
 
-@partial(jax.jit, static_argnames=("num_keys", "op", "use_pallas"))
-def segreduce(keys, values, num_keys: int, op: str = "sum", use_pallas: bool = True):
-    """Group-by aggregation with the VMEM-resident Pallas kernel (interpret
-    mode off-TPU).  Falls back to the jnp oracle with use_pallas=False."""
+def _resolve_mode(use_pallas: Optional[bool]) -> str:
+    if use_pallas is None:
+        return pallas_mode()
     if not use_pallas:
+        return "off"
+    return "compiled" if jax.default_backend() == "tpu" else "interpret"
+
+
+@partial(jax.jit, static_argnames=("num_keys", "op", "mode"))
+def _segreduce_impl(keys, values, num_keys: int, op: str, mode: str):
+    if mode == "off":
         return segreduce_ref(keys, values, num_keys, op)
-    return segreduce_pallas(keys, values, num_keys, op, interpret=_use_interpret())
+    return segreduce_pallas(keys, values, num_keys, op, interpret=(mode == "interpret"))
+
+
+def segreduce(keys, values, num_keys: int, op: str = "sum", use_pallas: Optional[bool] = None):
+    """Single-op group-by aggregation.  ``use_pallas=None`` resolves the
+    execution mode through ``pallas_mode()`` (the REPRO_PALLAS knob);
+    True/False force the Pallas kernel / the jnp oracle."""
+    return _segreduce_impl(keys, values, num_keys, op, _resolve_mode(use_pallas))
+
+
+@partial(jax.jit, static_argnames=("ops", "num_keys", "with_presence", "mode"))
+def _fused_impl(keys, values, mask, ops, num_keys: int, with_presence: bool, mode: str):
+    if mode == "off":
+        return fused_segreduce_ref(
+            keys, values, ops, num_keys, mask=mask, with_presence=with_presence
+        )
+    return fused_segreduce_pallas(
+        keys, values, ops, num_keys, mask=mask,
+        with_presence=with_presence, interpret=(mode == "interpret"),
+    )
+
+
+def fused_segreduce(
+    keys,
+    values: Sequence,
+    ops: Sequence[str],
+    num_keys: int,
+    mask=None,
+    with_presence: bool = True,
+    use_pallas: Optional[bool] = None,
+):
+    """Fused multi-aggregate group-by: ``values[i]`` aggregated under
+    ``ops[i]`` (each a segreduce op: 'sum'/'max'/'min') in one data pass,
+    plus the group-presence histogram.  Masked rows contribute each op's
+    identity.  Returns ``(accs tuple, presence-or-None)``."""
+    return _fused_impl(
+        keys, tuple(values), mask, tuple(ops), num_keys, with_presence,
+        _resolve_mode(use_pallas),
+    )

@@ -1,14 +1,81 @@
-# Pure-jnp oracle for the segreduce kernel.
+# Pure-jnp oracle for the segreduce kernels, plus the fused fallback the
+# query engine runs when Pallas is unavailable (see ops.pallas_mode).
 from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from .kernel import acc_dtype, op_identity
 
-def segreduce_ref(keys: jnp.ndarray, values: jnp.ndarray, num_keys: int, op: str = "sum") -> jnp.ndarray:
-    """Group-by aggregation: out[k] = op over values[i] where keys[i] == k."""
-    if op == "sum":
-        return jax.ops.segment_sum(values, keys, num_segments=num_keys)
-    if op == "max":
-        return jax.ops.segment_max(values, keys, num_segments=num_keys)
-    raise ValueError(op)
+_SEGMENT_OPS = {
+    "sum": jax.ops.segment_sum,
+    "max": jax.ops.segment_max,
+    "min": jax.ops.segment_min,
+}
+
+
+def segreduce_ref(
+    keys: jnp.ndarray, values: jnp.ndarray, num_keys: int, op: str = "sum"
+) -> jnp.ndarray:
+    """Group-by aggregation: out[k] = op over values[i] where keys[i] == k.
+    Input dtype preserved; empty segments hold the op's identity (the XLA
+    segment ops' own fill convention)."""
+    seg = _SEGMENT_OPS.get(op)
+    if seg is None:
+        raise ValueError(op)
+    return seg(values, keys, num_segments=num_keys)
+
+
+def fused_segreduce_ref(
+    keys: jnp.ndarray,
+    values: Sequence[jnp.ndarray],
+    ops: Sequence[str],
+    num_keys: int,
+    mask: Optional[jnp.ndarray] = None,
+    with_presence: bool = True,
+) -> Tuple[Tuple[jnp.ndarray, ...], Optional[jnp.ndarray]]:
+    """Pure-jnp fused fallback: the same contract as
+    ``kernel.fused_segreduce_pallas`` built from ONE pass over the data —
+    the key column is masked/funneled once, then the aggregates are
+    *stacked* by (op, accumulator dtype) family so each family runs one
+    segment op over an (N, A) block instead of A separate scatters."""
+    if len(values) != len(ops):
+        raise ValueError(f"{len(values)} value columns but {len(ops)} ops")
+    keys = keys.astype(jnp.int32)
+    if mask is not None:
+        mask = mask.astype(bool)
+        # masked rows funnel to segment 0 carrying each op's identity
+        keys = jnp.where(mask, keys, 0)
+    accs: list = [None] * len(ops)
+    families: dict = {}
+    for i, (op, v) in enumerate(zip(ops, values)):
+        if op not in _SEGMENT_OPS:
+            raise ValueError(op)
+        families.setdefault((op, acc_dtype(v.dtype)), []).append(i)
+    for (op, dt), idxs in families.items():
+        cols = []
+        for i in idxs:
+            v = values[i].astype(dt)
+            if mask is not None:
+                v = jnp.where(mask, v, op_identity(op, dt))
+            cols.append(v)
+        if len(idxs) == 1:
+            # a singleton family scatters the 1-D column directly — an
+            # (N, 1) stack would pay 2-D scatter overhead for nothing
+            accs[idxs[0]] = _SEGMENT_OPS[op](cols[0], keys, num_segments=num_keys).astype(
+                values[idxs[0]].dtype
+            )
+            continue
+        stacked = jnp.stack(cols, axis=-1)  # (N, A): one scatter per family
+        reduced = _SEGMENT_OPS[op](stacked, keys, num_segments=num_keys)
+        for j, i in enumerate(idxs):
+            accs[i] = reduced[:, j].astype(values[i].dtype)
+    pres = None
+    if with_presence:
+        ones = jnp.ones(keys.shape, jnp.int32)
+        if mask is not None:
+            ones = jnp.where(mask, ones, 0)
+        pres = jax.ops.segment_sum(ones, keys, num_segments=num_keys)
+    return tuple(accs), pres

@@ -23,7 +23,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.backends import JoinSpec, ProgramSpec
+from repro.backends import FUSABLE_AGG_OPS, JoinSpec, ProgramSpec, fused_agg_groups
+from repro.kernels.segreduce.ops import pallas_mode
 
 from .cardinality import CardinalityEstimator
 from .stats import DbStats
@@ -36,8 +37,12 @@ class CostCoefficients:
     c_onehot: float = 0.08       # per cell of the rows×keys one-hot matmul
     c_sort: float = 1.2          # per element per log2(rows) of argsort
     c_kernel: float = 2.0        # per element inside the Pallas kernel
-    c_kernel_interpret: float = 400.0  # ... in interpret mode (CPU fallback)
+    c_kernel_interpret: float = 400.0  # ... in interpret mode (forced off-TPU)
+    c_kernel_fallback: float = 2.2     # ... in the pure-jnp fused fallback
     c_kernel_fixed: float = 2e4  # kernel launch / trace overhead
+    c_kernel_agg: float = 0.7    # per element per EXTRA fused aggregate —
+    #                              another accumulator update inside the one
+    #                              pass, not another pass over the data
     c_combine: float = 1.5       # per accumulator cell when merging partials
     c_shard_fixed: float = 5e4   # shard_map trace/collective setup
     c_join_probe: float = 3.0    # searchsorted probe per row
@@ -79,10 +84,24 @@ class CostModel:
         self.est = CardinalityEstimator(stats)
 
     # -- aggregation --------------------------------------------------------
+    def _kernel_per_elem(self) -> float:
+        """Per-element cost of the segreduce kernel path under the mode the
+        runtime will actually execute (kernels/segreduce/ops.pallas_mode):
+        Mosaic-compiled on TPU/GPU, the pure-jnp fused fallback off-device,
+        or interpret mode when REPRO_PALLAS forces the kernel off-TPU."""
+        c = self.coeffs
+        if self.backend in ("tpu", "gpu"):
+            return c.c_kernel
+        return c.c_kernel_interpret if pallas_mode() == "interpret" else c.c_kernel_fallback
+
     def agg_cost(self, rows: float, num_keys: float, method: str, op: str) -> float:
         c = self.coeffs
-        if op != "+" and method in ("onehot", "kernel"):
-            method = "dense"  # the lowering falls back; cost what actually runs
+        # These downgrades mirror jax_vec._aggregate exactly (and the
+        # lowering records them in method_notes): cost what actually runs.
+        if op != "+" and method == "onehot":
+            method = "dense"
+        if op not in FUSABLE_AGG_OPS and method == "kernel":
+            method = "dense"
         if method == "dense":
             return rows * c.c_dense + num_keys * c.c_output
         if method == "onehot":
@@ -90,9 +109,37 @@ class CostModel:
         if method == "sort":
             return rows * c.c_sort * max(1.0, math.log2(max(2.0, rows))) + rows * c.c_dense
         if method == "kernel":
-            per = c.c_kernel if self.backend in ("tpu", "gpu") else c.c_kernel_interpret
-            return c.c_kernel_fixed + rows * per + num_keys * c.c_output
+            return c.c_kernel_fixed + rows * self._kernel_per_elem() + num_keys * c.c_output
         raise ValueError(f"bad agg method {method}")
+
+    def fused_agg_cost(self, rows: float, num_keys: float, n_aggs: int) -> float:
+        """One fused kernel launch evaluating ``n_aggs`` accumulators plus
+        presence in a SINGLE data pass: one launch fee and one streaming
+        scan are amortized over the whole group — each extra aggregate
+        adds only an in-pass accumulator update (c_kernel_agg), not
+        another pass — versus n_aggs full launches+scans unfused."""
+        c = self.coeffs
+        return (
+            c.c_kernel_fixed
+            + rows * self._kernel_per_elem()
+            + rows * max(0, n_aggs - 1) * c.c_kernel_agg
+            + n_aggs * num_keys * c.c_output
+        )
+
+    def agg_units(self, spec: ProgramSpec, agg_method: str) -> List[Tuple[bool, List[int]]]:
+        """Aggregation costing units, (is_fused, agg indices): under
+        'kernel' each fused group (backends.codegen.fused_agg_groups — the
+        same partition the lowering executes) is ONE unit costed by
+        ``fused_agg_cost``; everything else is per-aggregate."""
+        if agg_method == "kernel":
+            groups = fused_agg_groups(spec.aggs)
+            cover = {i for g in groups for i in g}
+            units = [(True, g) for g in groups] + [
+                (False, [i]) for i in range(len(spec.aggs)) if i not in cover
+            ]
+            units.sort(key=lambda u: u[1][0])
+            return units
+        return [(False, [i]) for i in range(len(spec.aggs))]
 
     def parallel_cost(
         self, base_cost: float, rows: float, num_keys: float, parallel: str, n_parts: int
@@ -181,10 +228,20 @@ class CostModel:
         K = max(1, n_partitions)
         breakdown: List[Tuple[str, float]] = []
 
-        for agg in spec.aggs:
+        for fused, idxs in self.agg_units(spec, agg_method):
+            aggs = [spec.aggs[i] for i in idxs]
+            agg = aggs[0]
             rows = float(self.stats.n_rows(agg.table))
             nk = float(self.stats.key_space(agg.table, agg.key_field))
-            base = self.agg_cost(rows, nk, agg_method, agg.op) + rows * c.c_scan
+            if fused:
+                # one chunk-kernel dispatch per chunk serves the WHOLE
+                # group: single scan + launch, amortized (fused_agg_cost);
+                # the per-accumulator merge work is not amortized
+                base = self.fused_agg_cost(rows, nk, len(aggs)) + rows * c.c_scan
+                mdesc = f"kernel(fused, {len(aggs)} aggs)"
+            else:
+                base = self.agg_cost(rows, nk, agg_method, agg.op) + rows * c.c_scan
+                mdesc = agg_method
             nch = self.est_chunks(schedule, K, rows)
             # skew is priced on the field the runtime actually hashes on:
             # the backend always prefers the op's own key column
@@ -195,11 +252,12 @@ class CostModel:
                 + rows * c.c_scan                     # hash + shuffle pass
                 + nch * c.c_part_launch               # jitted chunk dispatches
                 + self.est_buckets(schedule, K, rows) * c.c_part_compile
-                + nch * nk * c.c_combine              # partial-accumulator merges
+                + nch * nk * len(aggs) * c.c_combine  # partial-accumulator merges
                 + self.memory_penalty(rows / K)       # per-chunk working set
             )
+            name = "+".join(a.array for a in aggs)
             breakdown.append(
-                (f"agg {agg.array}[{agg.table}.{agg.key_field}] ({agg_method}, K={K}, {schedule})", total)
+                (f"agg {name}[{agg.table}.{agg.key_field}] ({mdesc}, K={K}, {schedule})", total)
             )
 
         for sr in spec.scalar_reduces:
@@ -307,13 +365,27 @@ class CostModel:
         c = self.coeffs
         breakdown: List[Tuple[str, float]] = []
 
-        for agg in spec.aggs:
+        # fusion requires sequential execution — under vmap/shard_map the
+        # lowering runs the per-aggregate parallel path, so cost that
+        units = (
+            self.agg_units(spec, agg_method)
+            if parallel == "none"
+            else [(False, [i]) for i in range(len(spec.aggs))]
+        )
+        for fused, idxs in units:
+            aggs = [spec.aggs[i] for i in idxs]
+            agg = aggs[0]
             # filtered rows still stream through the vectorized kernel with
             # zero weight, so the filter does not shrink the aggregate cost
             rows = float(self.stats.n_rows(agg.table))
             num_keys = float(self.stats.key_space(agg.table, agg.key_field))
-            base = self.agg_cost(rows, num_keys, agg_method, agg.op)
-            base += rows * c.c_scan  # key/value/mask streaming
+            if fused:
+                base = self.fused_agg_cost(rows, num_keys, len(aggs))
+                mdesc = f"kernel(fused, {len(aggs)} aggs)"
+            else:
+                base = self.agg_cost(rows, num_keys, agg_method, agg.op)
+                mdesc = agg_method
+            base += rows * c.c_scan  # key/value/mask streaming (once per unit)
             total = self.parallel_cost(base, rows, num_keys, parallel, n_parts)
             total *= self._skew_penalty(agg.table, partition_field, parallel, n_parts)
             # monolithic execution keeps the whole table resident (shard_map
@@ -322,7 +394,8 @@ class CostModel:
             total += self.memory_penalty(
                 rows / n_parts if parallel == "shard_map" else rows
             )
-            breakdown.append((f"agg {agg.array}[{agg.table}.{agg.key_field}] ({agg_method})", total))
+            name = "+".join(a.array for a in aggs)
+            breakdown.append((f"agg {name}[{agg.table}.{agg.key_field}] ({mdesc})", total))
 
         for sr in spec.scalar_reduces:
             rows = float(self.stats.n_rows(sr.table))

@@ -10,7 +10,13 @@ from typing import List, Optional, Sequence, Tuple
 from repro.analysis import deps
 from repro.core import transforms as T
 from repro.core.ir import Program
-from repro.backends import ProgramSpec, UnsupportedProgram, extract_spec
+from repro.backends import (
+    FUSABLE_AGG_OPS,
+    ProgramSpec,
+    UnsupportedProgram,
+    extract_spec,
+    fused_agg_groups,
+)
 
 from .cardinality import CardinalityEstimator, LoopEstimate
 from .cost import CostCoefficients, CostModel
@@ -37,6 +43,10 @@ class Candidate:
     # the candidate targets a monolithic executor
     n_partitions: Optional[int] = None
     schedule: Optional[str] = None
+    # aggregates the fused multi-aggregate kernel evaluates in one pass
+    # (agg_method='kernel' only; None = no fusion) — EXPLAIN renders this
+    # as agg_method=kernel(fused, N aggs)
+    fused_aggs: Optional[int] = None
 
 
 @dataclass
@@ -152,6 +162,7 @@ def enumerate_candidates(
         )
     out: List[Candidate] = []
     last_err: Optional[Exception] = None
+    kernel_gate_noted = False
     for order_name, prog in orders:
         try:
             spec = extract_spec(prog)
@@ -160,6 +171,28 @@ def enumerate_candidates(
             continue
         has_aggs = bool(spec.aggs) or any(j.aggs for j in spec.joins)
         methods: Sequence[str] = AGG_METHODS if has_aggs else ("dense",)
+        # Fused-kernel legality (analysis.deps): the fused kernel's partials
+        # merge under the op itself, so every op it covers must be
+        # commutative+associative AND one the kernel implements.  When no
+        # aggregate qualifies, a 'kernel' candidate would just be the dense
+        # plan wearing a kernel label — don't emit it.
+        agg_ops = {a.op for a in spec.aggs} | {ja.op for j in spec.joins for ja in j.aggs}
+        kernel_ops = {
+            op for op in agg_ops
+            if op in FUSABLE_AGG_OPS and op not in deps.fusion_illegal_ops(agg_ops)
+        }
+        if has_aggs and agg_ops and not kernel_ops:
+            methods = tuple(m for m in methods if m != "kernel")
+            if rejections is not None and not kernel_gate_noted:
+                ops_s = ", ".join(repr(o) for o in sorted(agg_ops))
+                rejections.append(
+                    "fused-kernel candidates rejected: accumulate op(s) "
+                    f"{ops_s} are outside the fusable op algebra "
+                    "(commutative+associative +/max/min)"
+                )
+                kernel_gate_noted = True
+        # aggregates one fused launch covers (EXPLAIN: kernel(fused, N aggs))
+        n_fused = sum(len(g) for g in fused_agg_groups(spec.aggs))
         if partitioned:
             ks = _k_choices(n_parts, n_partitions)
             if illegal_ops:
@@ -185,6 +218,9 @@ def enumerate_candidates(
                                         order_name, prog, method, "none", pf, cost,
                                         tuple(breakdown), join_method=jm,
                                         n_partitions=K, schedule=sched,
+                                        fused_aggs=(
+                                            n_fused if method == "kernel" and n_fused else None
+                                        ),
                                     )
                                 )
             continue
@@ -205,6 +241,13 @@ def enumerate_candidates(
                             Candidate(
                                 order_name, prog, method, parallel, pf, cost,
                                 tuple(breakdown), join_method=jm,
+                                # the monolithic lowering only fuses on the
+                                # sequential path (vmap/shard_map stay per-agg)
+                                fused_aggs=(
+                                    n_fused
+                                    if method == "kernel" and parallel == "none" and n_fused
+                                    else None
+                                ),
                             )
                         )
     if not out:

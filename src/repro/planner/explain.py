@@ -13,6 +13,14 @@ from typing import Any, Dict
 from .enumerate import Decision
 
 
+def _agg_method(c) -> str:
+    """``kernel(fused, N aggs)`` when the candidate runs the fused
+    multi-aggregate kernel; the bare method name otherwise."""
+    if getattr(c, "fused_aggs", None):
+        return f"{c.agg_method}(fused, {c.fused_aggs} aggs)"
+    return c.agg_method
+
+
 def _distribution(c) -> str:
     """Chosen data distribution of a partitioned-executor candidate:
     `` partition=<table>.<field> K=<k> schedule=<policy>`` (empty for
@@ -55,7 +63,7 @@ def render_explain(
     jm = f" join_method={c.join_method}" if c.join_method else ""
     dist = _distribution(c)
     lines.append(
-        f"  chosen: order={c.order} agg_method={c.agg_method} parallel={c.parallel} "
+        f"  chosen: order={c.order} agg_method={_agg_method(c)} parallel={c.parallel} "
         f"partition_field={pf}{jm}{dist} est_cost≈{_fmt(c.cost)}"
     )
     for op, cost in c.breakdown:
@@ -75,7 +83,7 @@ def render_explain(
             apf = f"{a.partition_field[0]}.{a.partition_field[1]}" if a.partition_field else "-"
             ajm = f" join_method={a.join_method}" if a.join_method else ""
             lines.append(
-                f"    order={a.order} agg_method={a.agg_method} parallel={a.parallel} "
+                f"    order={a.order} agg_method={_agg_method(a)} parallel={a.parallel} "
                 f"partition_field={apf}{ajm}{_distribution(a)} est_cost≈{_fmt(a.cost)}"
             )
         if len(alts) > max_alternatives:

@@ -1,14 +1,25 @@
 # Per-kernel validation: shape/dtype sweeps, Pallas (interpret mode) vs the
-# pure-jnp oracle, plus hypothesis property tests on segreduce.
+# pure-jnp oracle, the fused multi-aggregate differential matrix, plus
+# hypothesis property tests on segreduce (skipped if hypothesis is absent —
+# the matrix below must run regardless).
 import numpy as np
 import pytest
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 import jax.numpy as jnp
 
-from repro.kernels.segreduce.kernel import segreduce_pallas
-from repro.kernels.segreduce.ref import segreduce_ref
+from repro.kernels.segreduce.kernel import (
+    fused_segreduce_pallas,
+    op_identity,
+    segreduce_pallas,
+)
+from repro.kernels.segreduce.ref import fused_segreduce_ref, segreduce_ref
 from repro.kernels.flash.kernel import flash_attention_pallas
 from repro.kernels.flash.ref import attention_ref
 from repro.kernels.wkv6.kernel import wkv6_pallas
@@ -21,38 +32,327 @@ from repro.kernels.wkv6.ref import wkv6_ref
 
 @pytest.mark.parametrize("n", [8, 100, 1024, 5000])
 @pytest.mark.parametrize("k", [1, 7, 128, 1000])
-@pytest.mark.parametrize("op", ["sum", "max"])
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
 def test_segreduce_sweep(rng, n, k, op):
     keys = jnp.asarray(rng.integers(0, k, n), jnp.int32)
     vals = jnp.asarray(rng.normal(size=n), jnp.float32)
     got = segreduce_pallas(keys, vals, k, op=op, interpret=True)
     want = segreduce_ref(keys, vals, k, op=op)
-    if op == "max":
-        # empty segments: kernel yields -inf sentinel, ref yields -inf
+    if op in ("max", "min"):
+        # empty segments: kernel and ref both yield the ∓inf identity
         mask = np.asarray(segreduce_ref(keys, jnp.ones_like(vals), k)) > 0
         np.testing.assert_allclose(np.asarray(got)[mask], np.asarray(want)[mask], rtol=1e-6, atol=1e-6)
     else:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
-def test_segreduce_dtypes(rng, dtype):
+def test_segreduce_dtypes(rng, dtype, op):
+    """Input dtype is PRESERVED (int32 in → int32 out), with dtype-correct
+    identities — int MIN/MAX use the iinfo extremes, not a float sentinel."""
     keys = jnp.asarray(rng.integers(0, 33, 500), jnp.int32)
     vals = jnp.asarray(rng.integers(0, 10, 500)).astype(dtype)
-    got = segreduce_pallas(keys, vals, 33, interpret=True)
-    want = segreduce_ref(keys, vals.astype(jnp.float32), 33)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-2, atol=1e-2)
+    got = segreduce_pallas(keys, vals, 33, op=op, interpret=True)
+    want = segreduce_ref(keys, vals, 33, op=op)
+    assert got.dtype == jnp.dtype(dtype)
+    assert want.dtype == jnp.dtype(dtype)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64), rtol=1e-2, atol=1e-2
+    )
 
 
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(1, 2000), k=st.integers(1, 300), seed=st.integers(0, 99))
-def test_property_segreduce_equals_ref(n, k, seed):
-    rng = np.random.default_rng(seed)
-    keys = jnp.asarray(rng.integers(0, k, n), jnp.int32)
-    vals = jnp.asarray(rng.normal(size=n), jnp.float32)
-    got = segreduce_pallas(keys, vals, k, interpret=True)
-    want = segreduce_ref(keys, vals, k)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+def test_segreduce_int_extremes_identity():
+    """Empty int32 MIN/MAX segments hold the iinfo identity, and negative
+    extremes survive (a -inf/f32 sentinel would corrupt both)."""
+    keys = jnp.asarray([0, 0, 2], jnp.int32)
+    vals = jnp.asarray([-(2**31) + 5, 7, -3], jnp.int32)
+    mx = segreduce_pallas(keys, vals, 3, op="max", interpret=True)
+    mn = segreduce_pallas(keys, vals, 3, op="min", interpret=True)
+    assert mx.dtype == jnp.int32 and mn.dtype == jnp.int32
+    assert np.asarray(mx).tolist() == [7, np.iinfo(np.int32).min, -3]
+    assert np.asarray(mn).tolist() == [-(2**31) + 5, np.iinfo(np.int32).max, -3]
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 2000), k=st.integers(1, 300), seed=st.integers(0, 99))
+    def test_property_segreduce_equals_ref(n, k, seed):
+        rng = np.random.default_rng(seed)
+        keys = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=n), jnp.float32)
+        got = segreduce_pallas(keys, vals, k, interpret=True)
+        want = segreduce_ref(keys, vals, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-aggregate segreduce: the differential matrix
+#
+# Query-level ops {SUM, COUNT, MIN, MAX, AVG} × value dtypes {int32, f32} ×
+# {unfiltered, filtered} × {empty table, empty groups, single tile,
+# multi-tile}, for BOTH implementations (Pallas interpret mode and the
+# pure-jnp fused fallback) against a row-loop numpy oracle; plus
+# partial-merge associativity of the multi-accumulator state.
+# ---------------------------------------------------------------------------
+
+# (n rows, num_keys, key range) — TILE=1024 ⇒ multi_tile spans 5 row tiles,
+# and empty_groups leaves keys [8, 64) with no rows at all
+_SHAPES = {
+    "empty_table": (0, 16, 16),
+    "empty_groups": (200, 64, 8),
+    "single_tile": (300, 16, 16),
+    "multi_tile": (5000, 16, 16),
+}
+
+_MERGE_NP = {"sum": np.add, "max": np.maximum, "min": np.minimum}
+
+
+def _query_lowering(qop, vals_np):
+    """Lower one query-level aggregate to kernel (columns, ops), matching
+    the SQL frontend: COUNT is a sum of ones, AVG a SUM/COUNT pair."""
+    ones = np.ones(vals_np.shape[0], np.int32)
+    if qop == "SUM":
+        return [vals_np], ["sum"]
+    if qop == "COUNT":
+        return [ones], ["sum"]
+    if qop == "MIN":
+        return [vals_np], ["min"]
+    if qop == "MAX":
+        return [vals_np], ["max"]
+    if qop == "AVG":
+        return [vals_np, ones], ["sum", "sum"]
+    raise AssertionError(qop)
+
+
+def _oracle(keys, vals, op, mask, num_keys):
+    """Row-loop numpy oracle: per-group reduction with op identities."""
+    out = np.full(num_keys, op_identity(op, vals.dtype), vals.dtype)
+    for key, val, m in zip(keys, vals, mask):
+        if not m:
+            continue
+        if op == "sum":
+            out[key] += val
+        elif op == "max":
+            out[key] = max(out[key], val)
+        else:
+            out[key] = min(out[key], val)
+    return out
+
+
+def _matrix_inputs(rng, shape, dtype, filtered):
+    n, num_keys, key_range = _SHAPES[shape]
+    keys = rng.integers(0, key_range, n).astype(np.int32)
+    if dtype == "int32":
+        vals = rng.integers(-50, 50, n).astype(np.int32)
+    else:
+        vals = rng.normal(size=n).astype(np.float32)
+    mask = rng.integers(0, 2, n).astype(bool) if filtered else np.ones(n, bool)
+    return keys, vals, mask, num_keys
+
+
+def _run_fused(impl, keys, values, ops, num_keys, mask):
+    fn = fused_segreduce_pallas if impl == "pallas" else fused_segreduce_ref
+    kwargs = {"interpret": True} if impl == "pallas" else {}
+    return fn(
+        jnp.asarray(keys),
+        tuple(jnp.asarray(v) for v in values),
+        tuple(ops),
+        num_keys,
+        mask=jnp.asarray(mask),
+        **kwargs,
+    )
+
+
+@pytest.mark.parametrize("shape", list(_SHAPES))
+@pytest.mark.parametrize("filtered", [False, True], ids=["unfiltered", "filtered"])
+@pytest.mark.parametrize("dtype", ["int32", "float32"])
+@pytest.mark.parametrize("qop", ["SUM", "COUNT", "MIN", "MAX", "AVG"])
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_fused_differential_matrix(rng, impl, qop, dtype, filtered, shape):
+    keys, vals, mask, num_keys = _matrix_inputs(rng, shape, dtype, filtered)
+    cols, ops = _query_lowering(qop, vals)
+    accs, pres = _run_fused(impl, keys, cols, ops, num_keys, mask)
+
+    pres_np = np.array([np.sum((keys == g) & mask) for g in range(num_keys)])
+    np.testing.assert_array_equal(np.asarray(pres), pres_np)
+    for col, op, acc in zip(cols, ops, accs):
+        want = _oracle(keys, col, op, mask, num_keys)
+        got = np.asarray(acc)
+        assert got.dtype == col.dtype, (impl, qop, got.dtype, col.dtype)
+        np.testing.assert_allclose(
+            got.astype(np.float64), want.astype(np.float64), rtol=1e-5, atol=1e-5
+        )
+    if qop == "AVG":  # the pair the frontend divides: sum / count where count > 0
+        s, c = np.asarray(accs[0], np.float64), np.asarray(accs[1], np.float64)
+        avg = np.divide(s, c, out=np.zeros_like(s), where=c > 0)
+        want_avg = np.zeros(num_keys)
+        for g in range(num_keys):
+            sel = vals[(keys == g) & mask]
+            if len(sel):
+                want_avg[g] = sel.astype(np.float64).mean()
+        np.testing.assert_allclose(avg, want_avg, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_fused_multi_aggregate_mixed_dtypes(rng, impl):
+    """One launch, four aggregates over distinct columns and mixed dtypes —
+    the whole-query shape the engine actually emits."""
+    n, num_keys = 4000, 48
+    keys = rng.integers(0, num_keys, n).astype(np.int32)
+    vi = rng.integers(-100, 100, n).astype(np.int32)
+    vf = rng.normal(size=n).astype(np.float32)
+    mask = rng.integers(0, 4, n) > 0
+    cols = [vf, vi, vi, vf]
+    ops = ["sum", "sum", "min", "max"]
+    accs, pres = _run_fused(impl, keys, cols, ops, num_keys, mask)
+    for col, op, acc in zip(cols, ops, accs):
+        want = _oracle(keys, col, op, mask, num_keys)
+        assert np.asarray(acc).dtype == col.dtype
+        np.testing.assert_allclose(
+            np.asarray(acc, np.float64), want.astype(np.float64), rtol=1e-5, atol=1e-5
+        )
+    np.testing.assert_array_equal(
+        np.asarray(pres), np.bincount(keys[mask], minlength=num_keys)
+    )
+
+
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+@pytest.mark.parametrize("n_chunks", [1, 3, 8])
+def test_fused_partial_merge_associativity(rng, impl, n_chunks):
+    """Chunked partial merge (the partitioned runtime's reduction) is
+    equivalent to one whole-table pass: split rows into K chunks, run the
+    fused kernel per chunk, merge each accumulator under its own op and
+    presence under +."""
+    n, num_keys = 3000, 32
+    keys = rng.integers(0, num_keys, n).astype(np.int32)
+    vi = rng.integers(-100, 100, n).astype(np.int32)
+    vf = rng.normal(size=n).astype(np.float32)
+    mask = rng.integers(0, 3, n) > 0
+    cols = [vi, vf, vi]
+    ops = ["sum", "max", "min"]
+
+    whole_accs, whole_pres = _run_fused(impl, keys, cols, ops, num_keys, mask)
+
+    bounds = np.linspace(0, n, n_chunks + 1).astype(int)
+    accs = [None] * len(ops)
+    pres = None
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        part, ppres = _run_fused(
+            impl, keys[lo:hi], [c[lo:hi] for c in cols], ops, num_keys, mask[lo:hi]
+        )
+        for i, op in enumerate(ops):
+            a = np.asarray(part[i])
+            accs[i] = a if accs[i] is None else _MERGE_NP[op](accs[i], a)
+        p = np.asarray(ppres)
+        pres = p if pres is None else pres + p
+    for i, (op, col) in enumerate(zip(ops, cols)):
+        assert accs[i].dtype == col.dtype
+        np.testing.assert_allclose(
+            accs[i].astype(np.float64),
+            np.asarray(whole_accs[i], np.float64),
+            rtol=1e-5, atol=1e-5,
+        )
+    np.testing.assert_array_equal(pres, np.asarray(whole_pres))
+
+
+# ---------------------------------------------------------------------------
+# fused kernel ↔ engine wiring
+# ---------------------------------------------------------------------------
+
+
+def _kernel_db(rng, n=20000):
+    from repro.data.multiset import Database, Multiset
+
+    return Database().add(
+        Multiset.from_columns(
+            "t",
+            k=rng.integers(0, 50, n).astype(np.int32),
+            v=rng.integers(-100, 100, n).astype(np.int32),
+            w=rng.normal(size=n).astype(np.float32),
+        )
+    )
+
+
+_MULTI_AGG_SQL = "SELECT k, SUM(v), MIN(v), MAX(w), COUNT(k), AVG(w) FROM t GROUP BY k"
+
+
+def _rows_close(a, b, tol=1e-3):
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        for x, y in zip(ra, rb):
+            assert abs(float(x) - float(y)) < tol, (ra, rb)
+
+
+@pytest.mark.parametrize("where", ["", " WHERE v > 10"])
+def test_engine_kernel_matches_dense_monolithic(rng, where):
+    """agg_method='kernel' (one fused launch for the whole aggregate group)
+    is row-identical to 'dense' through the full SQL lowering."""
+    from repro.backends.jax_vec import CodegenChoices, Plan
+    from repro.core.transforms import canonicalize_array_names
+    from repro.frontends.sql import sql_to_forelem
+
+    db = _kernel_db(rng)
+    sql = _MULTI_AGG_SQL.replace(" GROUP BY", where + " GROUP BY")
+    p = canonicalize_array_names(sql_to_forelem(sql, {"t": ["k", "v", "w"]}))
+    kplan = Plan(p, db, CodegenChoices(agg_method="kernel"))
+    # the whole query's aggregates land in ONE fused group, loudly
+    assert [len(g) for g in kplan.lowering.fused_groups] == [6]
+    assert kplan.lowering.method_notes == []
+    _rows_close(
+        sorted(Plan(p, db, CodegenChoices(agg_method="dense")).run()["R"]),
+        sorted(kplan.run()["R"]),
+    )
+
+
+@pytest.mark.parametrize("jit_chunks,async_dispatch", [(True, False), (False, False), (True, True)])
+def test_engine_kernel_matches_dense_partitioned(rng, jit_chunks, async_dispatch):
+    """The partitioned runtime dispatches the fused group as ONE unit per
+    chunk and partial-merges the multi-accumulator state."""
+    from repro.backends.jax_vec import CodegenChoices, Plan
+    from repro.backends.partitioned import PartitionedChoices, PartitionedPlan
+    from repro.core.transforms import canonicalize_array_names
+    from repro.frontends.sql import sql_to_forelem
+
+    db = _kernel_db(rng)
+    p = canonicalize_array_names(sql_to_forelem(_MULTI_AGG_SQL, {"t": ["k", "v", "w"]}))
+    want = sorted(Plan(p, db, CodegenChoices(agg_method="dense")).run()["R"])
+    plan = PartitionedPlan(
+        p, db,
+        PartitionedChoices(
+            base=CodegenChoices(agg_method="kernel"), n_partitions=4,
+            jit_chunks=jit_chunks, async_dispatch=async_dispatch,
+        ),
+    )
+    _rows_close(want, sorted(plan.run()["R"]))
+    agg_ds = [d for d in plan.dispatch_log if d.op.startswith("agg:")]
+    assert agg_ds and all(d.fused and d.n_aggs == 6 for d in agg_ds)
+    # run 2 exercises the memoized presence path on the fused kernel
+    _rows_close(want, sorted(plan.run()["R"]))
+
+
+def test_onehot_min_fallback_is_loud(rng):
+    """Satellite: an op the requested method cannot evaluate downgrades to
+    'dense' — with a method_notes entry the optimizer surfaces into the
+    pass trace and Decision.rejections, never silently."""
+    from repro.backends.jax_vec import CodegenChoices, Plan
+    from repro.core import OptimizeOptions, optimize
+    from repro.core.transforms import canonicalize_array_names
+    from repro.frontends.sql import sql_to_forelem
+
+    db = _kernel_db(rng, n=2000)
+    sql = "SELECT k, MIN(v) FROM t GROUP BY k"
+    p = canonicalize_array_names(sql_to_forelem(sql, {"t": ["k", "v", "w"]}))
+    plan = Plan(p, db, CodegenChoices(agg_method="onehot"))
+    assert any("onehot" in note and "'min'" in note for note in plan.lowering.method_notes)
+    # ... and the downgraded execution is still correct
+    _rows_close(
+        sorted(Plan(p, db, CodegenChoices(agg_method="dense")).run()["R"]),
+        sorted(plan.run()["R"]),
+    )
+    res = optimize(p, db, OptimizeOptions(agg_method="onehot", trace=True))
+    assert any("aggregation-method fallback" in t for t in res.trace)
 
 
 # ---------------------------------------------------------------------------
