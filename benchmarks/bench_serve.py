@@ -1,0 +1,241 @@
+# Serving soak benchmark: sustained QPS and tail latency of the
+# multi-tenant QueryServer (engine/server.py) under a mixed
+# aggregate/join workload from concurrent tenants.
+#
+# Phase 1 (clean): N_TENANTS threads each submit the query mix repeatedly
+#   against one server; reports sustained QPS, p50/p95/p99 latency, and
+#   two machine-independent gated counts —
+#     plan_cache_misses_n_tenants: the shared cache + single-flight must
+#       compile each distinct logical query exactly once no matter how
+#       many tenants race it (a regression means compile-per-tenant),
+#     chunk_retries_zero_fault: with no injected faults the retry path
+#       must never fire (a regression means phantom retries burning the
+#       pool on healthy chunks).
+# Phase 2 (faulted): same workload with an ~8% injected chunk-fault rate;
+#   every query must complete with results bit-identical to serial
+#   execution and bounded retries — completion and correctness are hard
+#   failures here, not timings.
+#
+# Run:  PYTHONPATH=src python benchmarks/bench_serve.py
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro import QueryServer, Session
+from repro.sched.elastic import PoolScalePolicy
+from repro.sched.fault_tolerant import RetryPolicy, deterministic_fault_hook
+
+N_ROWS = 120_000
+N_USERS = 500
+N_TENANTS = 8
+QUERIES_PER_TENANT = 8
+N_PARTITIONS = 4
+FAULT_RATE = 0.08
+
+
+def _tables(seed: int = 0) -> Dict[str, Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    i32 = np.int32
+    return {
+        "access": {
+            "url": (rng.zipf(1.3, N_ROWS) % 2000).astype(i32),
+            "uid": rng.integers(0, N_USERS, N_ROWS).astype(i32),
+            "size": rng.integers(1, 5000, N_ROWS).astype(i32),
+        },
+        "users": {
+            "uid": np.arange(N_USERS, dtype=i32),
+            "region": rng.integers(0, 8, N_USERS).astype(i32),
+        },
+    }
+
+
+# the mixed workload: two aggregates + one join-aggregate
+QUERIES = [
+    "SELECT url, COUNT(url) FROM access GROUP BY url",
+    "SELECT url, SUM(size) FROM access GROUP BY url",
+    "SELECT u.region, COUNT(u.region), SUM(a.size) FROM access a, users u "
+    "WHERE a.uid = u.uid GROUP BY u.region",
+]
+
+
+def _server(fault: Any = None) -> QueryServer:
+    srv = QueryServer(
+        n_partitions=N_PARTITIONS,
+        max_pending=2 * N_TENANTS,
+        admission="block",
+        fault=fault,
+        scale=PoolScalePolicy(min_workers=2, max_workers=4, queue_high=2.0),
+    )
+    for name, cols in _tables().items():
+        srv.register(name, **cols)
+    return srv
+
+
+def _serial_reference() -> Dict[str, List[Tuple]]:
+    s = Session(backend="partitioned", n_partitions=N_PARTITIONS, async_dispatch=False)
+    for name, cols in _tables().items():
+        s.register(name, **cols)
+    return {q: sorted(s.sql(q).rows) for q in QUERIES}
+
+
+def _soak(srv: QueryServer, serial: Dict[str, List[Tuple]]) -> Dict[str, Any]:
+    """Drive the mixed workload from N_TENANTS threads; returns wall time,
+    per-query latencies, and correctness/retry accounting."""
+    latencies: List[float] = []
+    errors: List[BaseException] = []
+    mismatches: List[str] = []
+    lock = threading.Lock()
+    barrier = threading.Barrier(N_TENANTS)
+
+    def tenant(tid: int) -> None:
+        try:
+            barrier.wait()
+            for j in range(QUERIES_PER_TENANT):
+                q = QUERIES[(tid + j) % len(QUERIES)]
+                t0 = time.perf_counter()
+                r = srv.submit(q, tenant=f"t{tid}", priority=tid % 3)
+                dt = time.perf_counter() - t0
+                ok = sorted(r.rows) == serial[q]
+                with lock:
+                    latencies.append(dt)
+                    if not ok:
+                        mismatches.append(f"tenant {tid} query {j}")
+        except BaseException as e:  # noqa: BLE001 - reported by the caller
+            with lock:
+                errors.append(e)
+
+    threads = [threading.Thread(target=tenant, args=(i,)) for i in range(N_TENANTS)]
+    t_wall0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall_s = time.perf_counter() - t_wall0
+    if errors:
+        raise errors[0]
+    return {
+        "wall_s": wall_s,
+        "latencies_s": latencies,
+        "mismatches": mismatches,
+        "completed": len(latencies),
+        "expected": N_TENANTS * QUERIES_PER_TENANT,
+    }
+
+
+def _pcts(lat: List[float]) -> Dict[str, float]:
+    a = np.sort(np.asarray(lat))
+    return {
+        "p50_ms": float(np.percentile(a, 50) * 1e3),
+        "p95_ms": float(np.percentile(a, 95) * 1e3),
+        "p99_ms": float(np.percentile(a, 99) * 1e3),
+        "mean_ms": float(a.mean() * 1e3),
+        "max_ms": float(a.max() * 1e3),
+    }
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    serial = _serial_reference()
+
+    # -- phase 1: clean soak (QPS / p99 + gated counters) --------------------
+    srv = _server(fault=None)
+    try:
+        for q in QUERIES:  # warm: compile each distinct query once
+            srv.submit(q, tenant="warmup")
+        soak = _soak(srv, serial)
+        qps = soak["completed"] / soak["wall_s"]
+        pct = _pcts(soak["latencies_s"])
+        cache = srv.plan_cache.stats()
+        retries_clean = srv.metrics.counter("serve.chunk.retries")
+        pool = srv.pool.stats()
+        if soak["mismatches"]:
+            raise AssertionError(f"clean soak diverged from serial: {soak['mismatches'][:5]}")
+        if soak["completed"] != soak["expected"]:
+            raise AssertionError(
+                f"clean soak incomplete: {soak['completed']}/{soak['expected']}"
+            )
+    finally:
+        srv.close()
+
+    rows.append(("serve_clean_qps", qps, f"{N_TENANTS} tenants"))
+    rows.append(("serve_clean_p50", pct["p50_ms"] * 1e3, "us"))
+    rows.append(("serve_clean_p99", pct["p99_ms"] * 1e3, "us"))
+    rows.append(("serve_plan_cache_misses", float(cache["misses"]), "gated (lower is better)"))
+    rows.append(("serve_retries_zero_fault", float(retries_clean), "gated (lower is better)"))
+
+    # -- phase 2: fault-injected soak (completion + correctness) -------------
+    srv = _server(
+        fault=RetryPolicy(
+            max_retries=2,
+            speculate=True,
+            fault_hook=deterministic_fault_hook(FAULT_RATE, seed=7),
+        )
+    )
+    try:
+        soak_f = _soak(srv, serial)
+        qps_f = soak_f["completed"] / soak_f["wall_s"]
+        pct_f = _pcts(soak_f["latencies_s"])
+        retries = srv.metrics.counter("serve.chunk.retries")
+        speculated = srv.metrics.counter("serve.chunk.speculated")
+        if soak_f["mismatches"]:
+            raise AssertionError(
+                f"faulted soak diverged from serial: {soak_f['mismatches'][:5]}"
+            )
+        if soak_f["completed"] != soak_f["expected"]:
+            raise AssertionError(
+                f"faulted soak incomplete: {soak_f['completed']}/{soak_f['expected']}"
+            )
+    finally:
+        srv.close()
+
+    rows.append(("serve_faulted_qps", qps_f, f"fault_rate={FAULT_RATE}"))
+    rows.append(("serve_faulted_p99", pct_f["p99_ms"] * 1e3, "us"))
+    rows.append(("serve_faulted_retries", float(retries), f"speculated={speculated:.0f}"))
+
+    report = {
+        "n_rows": N_ROWS,
+        "n_tenants": N_TENANTS,
+        "queries_per_tenant": QUERIES_PER_TENANT,
+        "n_partitions": N_PARTITIONS,
+        "queries": QUERIES,
+        "clean": {
+            "qps": qps,
+            "wall_s": soak["wall_s"],
+            "completed": soak["completed"],
+            **pct,
+            "plan_cache": cache,
+            "chunk_retries": retries_clean,
+            "pool_workers": pool["n_workers"],
+            "pool_scale_events": len(pool["scale_events"]),
+        },
+        "faulted": {
+            "fault_rate": FAULT_RATE,
+            "qps": qps_f,
+            "wall_s": soak_f["wall_s"],
+            "completed": soak_f["completed"],
+            **pct_f,
+            "chunk_retries": retries,
+            "chunk_speculated": speculated,
+            "serial_identical": not soak_f["mismatches"],
+        },
+        # machine-independent, gated lower-is-better by check_regression.py:
+        # the fixed query mix fully determines both counts
+        "key_counts": {
+            "plan_cache_misses_n_tenants": int(cache["misses"]),
+            "chunk_retries_zero_fault": int(retries_clean),
+        },
+    }
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("serve_report", 0.0, "BENCH_serve.json"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

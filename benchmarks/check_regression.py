@@ -77,6 +77,13 @@ def _kernel_counts(d: Dict) -> Dict[str, float]:
     return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
 
 
+def _serve_counts(d: Dict) -> Dict[str, float]:
+    # serving counters from bench_serve.py: shared-plan-cache compile count
+    # under N tenants (single-flight must dedupe racing compiles) and the
+    # chunk retry count at zero injected faults (phantom retries)
+    return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
+
+
 # report file -> metric extractor (name -> higher-is-better ratio)
 EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_engine.json": _engine_metrics,
@@ -91,6 +98,7 @@ COUNT_EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_partition.json": _partition_counts,
     "BENCH_engine.json": _engine_counts,
     "BENCH_kernels.json": _kernel_counts,
+    "BENCH_serve.json": _serve_counts,
 }
 
 

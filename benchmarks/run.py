@@ -2,14 +2,27 @@
 # Prints ``name,us_per_call,derived`` CSV (and tees a copy under runs/).
 # Exits non-zero when any suite fails — CI must not mistake a partial
 # report set for a complete run.
+#
+# ``--ci`` runs only the CI-gated smoke suites (the ones whose BENCH_*.json
+# reports check_regression.py compares against committed baselines) — the
+# single benchmark step both ci.yml and nightly.yml share.
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import traceback
 
+# suites whose reports the CI regression gate consumes
+CI_SUITES = ("kernels", "planner", "join", "engine", "partition", "serve", "trace")
 
-def main() -> int:
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="run only the CI-gated smoke suites (skip the "
+                         "paper-figure measurement suites)")
+    args = ap.parse_args(argv)
     rows = []
     failed = []
     from . import (
@@ -21,6 +34,7 @@ def main() -> int:
         bench_pipeline,
         bench_planner,
         bench_sched,
+        bench_serve,
         bench_trace,
     )
 
@@ -33,8 +47,11 @@ def main() -> int:
         ("join", bench_join.run),
         ("engine", bench_engine.run),
         ("partition", bench_partition.run),
+        ("serve", bench_serve.run),   # writes BENCH_serve.json (QPS/p99 gate)
         ("trace", bench_trace.run),   # writes BENCH_trace.json.gz (CI artifact)
     ]
+    if args.ci:
+        suites = [s for s in suites if s[0] in CI_SUITES]
     print("name,us_per_call,derived")
     for name, fn in suites:
         try:

@@ -29,6 +29,7 @@ BENCHES = {
     "BENCH_engine.json": "benchmarks/bench_engine.py",
     "BENCH_partition.json": "benchmarks/bench_partition.py",
     "BENCH_kernels.json": "benchmarks/bench_kernels.py",
+    "BENCH_serve.json": "benchmarks/bench_serve.py",
 }
 
 

@@ -10,7 +10,7 @@
 #
 # The low-level pipeline (frontend → optimize → plan.run) stays available
 # for callers that need to drive individual passes.
-from repro.engine import EngineError, QueryResult, Session  # noqa: F401
+from repro.engine import AdmissionError, EngineError, QueryResult, QueryServer, Session  # noqa: F401
 from repro.core.passes import OptimizeOptions, OptimizeResult, optimize  # noqa: F401
 from repro.frontends.sql import sql_to_forelem  # noqa: F401
 from repro.frontends.mapreduce import MapReduceSpec  # noqa: F401
@@ -19,8 +19,10 @@ from repro.obs import MetricsRegistry, QueryTrace, Tracer  # noqa: F401
 
 __all__ = [
     "Session",
+    "QueryServer",
     "QueryResult",
     "EngineError",
+    "AdmissionError",
     "optimize",
     "OptimizeOptions",
     "OptimizeResult",

@@ -40,6 +40,7 @@ from __future__ import annotations
 import os
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -51,6 +52,12 @@ import jax.numpy as jnp
 from repro.core.ir import Const, Program, apply_order_limit
 from repro.data.multiset import Database
 from repro.obs.trace import NULL_TRACER
+from repro.sched.fault_tolerant import (
+    ChunkRetryExceeded,
+    FaultStats,
+    RetryPolicy,
+    StragglerDetector,
+)
 from repro.sched.loop_schedule import busy_times, make_policy, simulate_schedule, worker_imbalance
 
 from repro.kernels.segreduce import ops as segops
@@ -230,6 +237,9 @@ class ChunkDispatch:
     queue_ms: float = 0.0    # dispatch-start → execution-start wait
     n_aggs: int = 1          # accumulators this dispatch produced
     fused: bool = False      # fused multi-aggregate kernel (one data pass)
+    start: int = 0           # chunk offset in the op's partitioned iteration space
+    attempt: int = 0         # retries consumed (fault-tolerant dispatch)
+    speculated: bool = False  # a backup copy was launched for this chunk
 
     def trace_attrs(self) -> Dict[str, Any]:
         """The fields a per-chunk ``dispatch`` span carries — the trace is
@@ -247,6 +257,9 @@ class ChunkDispatch:
             "queue_ms": self.queue_ms,
             "n_aggs": self.n_aggs,
             "fused": self.fused,
+            "start": self.start,
+            "attempt": self.attempt,
+            "speculated": self.speculated,
         }
 
 
@@ -302,11 +315,28 @@ class PartitionedPlan:
                 f: np.asarray(ms.field(f)) for f in fields if f in ms.columns
             }
         self._layouts: Dict[Tuple[str, Optional[str]], _Layout] = {}
-        self.dispatch_log: List[ChunkDispatch] = []
+        # Per-run observable state is *thread-keyed*: a cached plan is shared
+        # across tenant sessions, and the serving engine runs the same plan
+        # concurrently from many threads — each run's dispatch log must not
+        # clobber another's (``dispatch_log`` resolves to the calling
+        # thread's run, falling back to the most recent run anywhere).
+        self._tls = threading.local()
+        self._last_log: List[ChunkDispatch] = []
+        self._last_run_ms: float = 0.0
+        # run-time serving attachments — configured by the Session/server
+        # after compile (never part of the plan fingerprint): chunk-level
+        # fault tolerance, a shared cross-query chunk executor, and the
+        # metrics registry fault/dispatch events feed
+        self.fault: Optional[RetryPolicy] = None
+        self.fault_stats = FaultStats()
+        self.chunk_executor: Any = None
+        self.metrics_registry: Any = None
         # bucketed jit chunk kernels: one _JitKernel per extracted op,
-        # built lazily, shared counters in jit_stats (per plan)
+        # built lazily, shared counters in jit_stats (per plan); creation is
+        # locked — concurrent first runs must not build the same kernel twice
         self.jit_stats = JitCacheStats()
         self._kernels: Dict[Tuple, _JitKernel] = {}
+        self._kernels_lock = threading.Lock()
         self._dev_cols: Dict[Tuple[str, str], jnp.ndarray] = {}
         # run-invariant presence of *unfiltered* aggregations: a pure
         # histogram of the key column, memoized across run() calls — a
@@ -319,7 +349,27 @@ class PartitionedPlan:
         # are run-invariant too: dimension-sized, kept device-resident
         # across runs (the *probe* side stays chunked — it is the big one)
         self._build_cache: Dict[Tuple, Any] = {}
-        self.last_run_ms: float = 0.0
+
+    # -- per-run observable state (thread-keyed; see __init__) ---------------
+    @property
+    def dispatch_log(self) -> List[ChunkDispatch]:
+        log = getattr(self._tls, "log", None)
+        return log if log is not None else self._last_log
+
+    @dispatch_log.setter
+    def dispatch_log(self, value: List[ChunkDispatch]) -> None:
+        self._tls.log = value
+        self._last_log = value
+
+    @property
+    def last_run_ms(self) -> float:
+        ms = getattr(self._tls, "run_ms", None)
+        return ms if ms is not None else self._last_run_ms
+
+    @last_run_ms.setter
+    def last_run_ms(self, value: float) -> None:
+        self._tls.run_ms = value
+        self._last_run_ms = value
 
     # -- data distribution ---------------------------------------------------
     def _table_len(self, table: str) -> int:
@@ -384,7 +434,7 @@ class PartitionedPlan:
                 p += 1
             size = policy.next_chunk(total - pos, self.k, w % self.k, [])
             size = max(1, min(size, int(layout.bounds[p + 1]) - pos))
-            d = ChunkDispatch(op, p, size, w % self.k)
+            d = ChunkDispatch(op, p, size, w % self.k, start=pos)
             out.append((p, layout.order[pos: pos + size], d))
             self.dispatch_log.append(d)
             pos += size
@@ -450,9 +500,12 @@ class PartitionedPlan:
     def _kernel(self, key: Tuple[str, int], build: Callable[[], Callable]) -> _JitKernel:
         kern = self._kernels.get(key)
         if kern is None:
-            kern = self._kernels[key] = _JitKernel(
-                f"{key[0]}[{key[1]}]", build(), self.jit_stats, self.choices.jit_cache_cap
-            )
+            with self._kernels_lock:
+                kern = self._kernels.get(key)
+                if kern is None:
+                    kern = self._kernels[key] = _JitKernel(
+                        f"{key[0]}[{key[1]}]", build(), self.jit_stats, self.choices.jit_cache_cap
+                    )
         return kern
 
     # -- dispatch --------------------------------------------------------------
@@ -480,7 +533,18 @@ class PartitionedPlan:
         op and each chunk emits a ``dispatch`` span carrying the
         ``ChunkDispatch`` fields — attached to the op span by *explicit*
         parent id, because worker threads have no span stack to inherit
-        from."""
+        from.
+
+        Fault tolerance (paper §III-A3, hybrid scheduling): when a
+        ``RetryPolicy`` is attached (``self.fault``), a failing chunk is
+        re-queued up to ``max_retries`` times instead of killing the query,
+        and — in the pool path — a chunk running longer than the straggler
+        threshold gets one speculative backup; the first finisher wins.
+        Results stay bit-identical to serial because partials are still
+        merged in chunk order regardless of which attempt produced them.
+        When a ``chunk_executor`` is attached (the serving engine's shared
+        pool), the whole chunk set is delegated to it instead of spinning a
+        per-query pool."""
         results: List[Any] = [None] * len(chunks)
         if not chunks:
             return results
@@ -489,63 +553,209 @@ class PartitionedPlan:
         op_id = op_span.id if traced else None
         t_disp0 = time.perf_counter()
         nw = self._n_workers()
+        fault = self.fault
         try:
+            if self.chunk_executor is not None:
+                return self.chunk_executor.run_chunks(
+                    chunks,
+                    work,
+                    tr=tr,
+                    op_id=op_id,
+                    fault=fault,
+                    fault_stats=self.fault_stats,
+                    metrics=self.metrics_registry,
+                )
             if not self.choices.async_dispatch or nw <= 1 or len(chunks) <= 1:
                 for i, ch in enumerate(chunks):
                     d = ch[2]
                     t0 = time.perf_counter()
                     d.queue_ms = (t0 - t_disp0) * 1e3
-                    if traced:
-                        s = tr.start("dispatch", parent=op_id, seq=i)
-                    results[i] = work(ch)
-                    d.t_ms = (time.perf_counter() - t0) * 1e3
-                    if traced:
-                        tr.end(s, **d.trace_attrs())
-                return results
-            it = iter(enumerate(chunks))
-            lock = threading.Lock()
-            errors: List[BaseException] = []
-
-            def runner(w: int) -> None:
-                while not errors:
-                    with lock:
-                        nxt = next(it, None)
-                    if nxt is None:
-                        return
-                    i, ch = nxt
-                    d = ch[2]
-                    d.worker = w
-                    t0 = time.perf_counter()
-                    d.queue_ms = (t0 - t_disp0) * 1e3
-                    if traced:
-                        s = tr.start("dispatch", parent=op_id, seq=i)
-                    try:
-                        r = work(ch)
-                        jax.block_until_ready(r)
-                    except BaseException as e:  # re-raised in the caller
+                    while True:
                         if traced:
-                            tr.end(s, error=type(e).__name__)
-                        errors.append(e)
-                        return
-                    d.t_ms = (time.perf_counter() - t0) * 1e3
-                    if traced:
-                        tr.end(s, **d.trace_attrs())
-                    results[i] = r
-
-            threads = [
-                threading.Thread(target=runner, args=(w,), daemon=True)
-                for w in range(min(nw, len(chunks)))
-            ]
-            for t in threads:
-                t.start()
-            for t in threads:
-                t.join()
-            if errors:
-                raise errors[0]
-            return results
+                            s = tr.start("dispatch", parent=op_id, seq=i)
+                        try:
+                            if fault is not None and fault.fault_hook is not None:
+                                fault.fault_hook(d)
+                            results[i] = work(ch)
+                        except BaseException as e:
+                            if traced:
+                                tr.end(s, error=type(e).__name__)
+                            if fault is not None and fault.retryable(d.attempt):
+                                d.attempt += 1
+                                self._note_retry(d, tr, op_id)
+                                continue
+                            if fault is not None:
+                                self.fault_stats.bump("failed")
+                                raise ChunkRetryExceeded(
+                                    f"chunk {d.op}[p{d.partition}] failed after "
+                                    f"{d.attempt + 1} attempts"
+                                ) from e
+                            raise
+                        d.t_ms = (time.perf_counter() - t0) * 1e3
+                        if traced:
+                            tr.end(s, **d.trace_attrs())
+                        break
+                return results
+            return self._dispatch_pool(
+                chunks, work, results, tr, traced, op_id, t_disp0, nw, fault
+            )
         finally:
             if traced:
                 tr.end(op_span)
+
+    def _note_retry(self, d: ChunkDispatch, tr, op_id) -> None:
+        self.fault_stats.bump("retries")
+        if self.metrics_registry is not None:
+            self.metrics_registry.inc("serve.chunk.retries")
+        if tr.enabled:
+            s = tr.start(
+                "fault.retry", parent=op_id, op=d.op, partition=d.partition, attempt=d.attempt
+            )
+            tr.end(s)
+
+    def _dispatch_pool(
+        self,
+        chunks: List[Tuple[int, np.ndarray, ChunkDispatch]],
+        work,
+        results: List[Any],
+        tr,
+        traced: bool,
+        op_id,
+        t_disp0: float,
+        nw: int,
+        fault,
+    ) -> List[Any]:
+        """The local worker-pool path of ``_dispatch``: a Condition-guarded
+        work queue (instead of a shared iterator) so failed chunks can be
+        re-queued and idle workers can launch speculative backups for
+        stragglers."""
+        n = len(chunks)
+        pending: deque = deque(enumerate(chunks))
+        done = [False] * n
+        inflight: Dict[int, float] = {}
+        speculated: set = set()
+        errors: List[BaseException] = []
+        cv = threading.Condition()
+        detector = (
+            StragglerDetector(fault.straggler_factor, fault.min_completed)
+            if fault is not None and fault.speculate
+            else None
+        )
+        state = {"ndone": 0}
+
+        def runner(w: int) -> None:
+            while True:
+                item = None
+                backup = False
+                with cv:
+                    while True:
+                        if errors or state["ndone"] >= n:
+                            return
+                        if pending:
+                            item = pending.popleft()
+                            if done[item[0]]:
+                                item = None
+                                continue
+                            break
+                        if detector is not None:
+                            thr = detector.threshold_ms()
+                            now = time.perf_counter()
+                            cand = None
+                            if thr is not None:
+                                for j, tj in inflight.items():
+                                    if (
+                                        not done[j]
+                                        and j not in speculated
+                                        and (now - tj) * 1e3 >= thr
+                                    ):
+                                        cand = j
+                                        break
+                            if cand is not None:
+                                speculated.add(cand)
+                                item = (cand, chunks[cand])
+                                backup = True
+                                break
+                        cv.wait(timeout=0.005)
+                i, ch = item
+                d = ch[2]
+                t0 = time.perf_counter()
+                with cv:
+                    if backup:
+                        d.speculated = True
+                        self.fault_stats.bump("speculated")
+                        if self.metrics_registry is not None:
+                            self.metrics_registry.inc("serve.chunk.speculated")
+                    else:
+                        inflight.setdefault(i, t0)
+                        if d.queue_ms == 0.0:
+                            d.queue_ms = (t0 - t_disp0) * 1e3
+                if traced:
+                    s = tr.start("dispatch", parent=op_id, seq=i, worker=w)
+                try:
+                    # a speculative backup skips the fault hook: it models a
+                    # retry on a different (healthy) worker
+                    if fault is not None and fault.fault_hook is not None and not backup:
+                        fault.fault_hook(d)
+                    r = work(ch)
+                    jax.block_until_ready(r)
+                except BaseException as e:
+                    if traced:
+                        tr.end(s, error=type(e).__name__)
+                    with cv:
+                        if done[i]:
+                            cv.notify_all()
+                            continue
+                        if fault is not None and fault.retryable(d.attempt):
+                            d.attempt += 1
+                            pending.append((i, ch))
+                            self._note_retry(d, tr, op_id)
+                        else:
+                            if fault is not None:
+                                self.fault_stats.bump("failed")
+                                err: BaseException = ChunkRetryExceeded(
+                                    f"chunk {d.op}[p{d.partition}] failed after "
+                                    f"{d.attempt + 1} attempts"
+                                )
+                                err.__cause__ = e
+                            else:
+                                err = e
+                            errors.append(err)
+                        cv.notify_all()
+                    continue
+                t_ms = (time.perf_counter() - t0) * 1e3
+                with cv:
+                    if done[i]:
+                        # lost the first-finisher race against a backup (or
+                        # the primary) — identical deterministic result, so
+                        # dropping it is safe; count the wasted work
+                        self.fault_stats.bump("wasted")
+                        cv.notify_all()
+                        if traced:
+                            tr.end(s, wasted=True, seq=i)
+                        continue
+                    done[i] = True
+                    state["ndone"] += 1
+                    results[i] = r
+                    d.worker = w
+                    d.t_ms = t_ms
+                    inflight.pop(i, None)
+                    if detector is not None:
+                        detector.record(t_ms)
+                    cv.notify_all()
+                if traced:
+                    tr.end(s, **d.trace_attrs())
+
+        threads = [
+            threading.Thread(target=runner, args=(w,), daemon=True)
+            for w in range(min(nw, n))
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        return results
 
     # -- partial merging -----------------------------------------------------
     @staticmethod
@@ -947,6 +1157,9 @@ class PartitionedPlan:
                 queue_ms=float(r.get("queue_ms", 0.0)),
                 n_aggs=int(r.get("n_aggs", 1)),
                 fused=bool(r.get("fused", False)),
+                start=int(r.get("start", 0)),
+                attempt=int(r.get("attempt", 0)),
+                speculated=bool(r.get("speculated", False)),
             )
             for r in trace.dispatch_records()
         ]

@@ -16,6 +16,7 @@
 # hits the *same* plan-cache entry.
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from contextlib import contextmanager
@@ -134,6 +135,8 @@ class Session:
         revalidate: str = "content",
         trace: Union[bool, Tracer] = False,
         metrics: Optional[MetricsRegistry] = None,
+        fault: Any = None,
+        chunk_executor: Any = None,
     ):
         if revalidate not in ("content", "signature"):
             raise EngineError(f"revalidate must be 'content' or 'signature', got {revalidate!r}")
@@ -182,6 +185,13 @@ class Session:
         else:
             self.tracer = Tracer() if trace else NULL_TRACER
         self.metrics_registry = metrics if metrics is not None else MetricsRegistry()
+        # serving-time execution policy, attached to every compiled plan on
+        # the dispatch path (run-time attachments — deliberately NOT part of
+        # the plan-cache fingerprint, see ``_configure_plan``): a
+        # ``sched.fault_tolerant.RetryPolicy`` and a shared chunk executor
+        # (``engine.server.SharedChunkPool``)
+        self.fault = fault
+        self.chunk_executor = chunk_executor
         # warm-dispatch memo: (query key, stats epoch) → OptimizeResult;
         # bounded like the plan cache — serving traffic with per-request
         # literals would otherwise pin one compiled plan per query text
@@ -191,6 +201,11 @@ class Session:
         # cleared whenever the database changes (programs bind schemas)
         self._programs: Dict[str, Program] = {}
         self._programs_cap = 1024
+        # both memos are plain LRU dicts whose get does pop+reinsert — under
+        # concurrent submissions (QueryServer tenants share nothing *per
+        # session*, but one session may still be driven from several
+        # threads) the pop/insert pair must be atomic
+        self._memo_lock = threading.Lock()
         self._epoch = self.db.stats_epoch()
         self._db_sig = self._signature()
 
@@ -301,16 +316,18 @@ class Session:
         return key, prog
 
     def _get_program(self, key: str) -> Optional[Program]:
-        prog = self._programs.get(key)
-        if prog is not None:
-            # LRU: re-insert so cap eviction removes the coldest entry
-            self._programs[key] = self._programs.pop(key)
-        return prog
+        with self._memo_lock:
+            prog = self._programs.get(key)
+            if prog is not None:
+                # LRU: re-insert so cap eviction removes the coldest entry
+                self._programs[key] = self._programs.pop(key)
+            return prog
 
     def _memo_program(self, key: str, prog: Program) -> None:
-        if len(self._programs) >= self._programs_cap:
-            self._programs.pop(next(iter(self._programs)))
-        self._programs[key] = prog
+        with self._memo_lock:
+            if len(self._programs) >= self._programs_cap:
+                self._programs.pop(next(iter(self._programs)))
+            self._programs[key] = prog
 
     def sql(self, query: str, params: Optional[Dict[str, Any]] = None) -> QueryResult:
         """Submit a SQL query through the engine pipeline."""
@@ -422,17 +439,37 @@ class Session:
         return text
 
     # -- the one pipeline ----------------------------------------------------
+    def _configure_plan(self, plan: Any) -> None:
+        """Attach the serving-time execution policy to a compiled plan.
+
+        These are *run-time attachments*, deliberately not plan-cache
+        fingerprint inputs: a plan cached by one tenant must behave
+        identically for every tenant, so sessions sharing a cache (a
+        ``QueryServer``) all attach the same server-wide fault policy /
+        chunk executor / metrics registry, and re-attaching on every
+        dispatch keeps a cache-shared plan consistent with *this*
+        session's configuration."""
+        if hasattr(plan, "fault"):
+            plan.fault = self.fault
+        if hasattr(plan, "chunk_executor"):
+            plan.chunk_executor = self.chunk_executor
+        if hasattr(plan, "metrics_registry"):
+            plan.metrics_registry = self.metrics_registry
+
     def _prepare(self, key: str, prog: Program) -> Tuple[OptimizeResult, bool]:
         """Returns (optimize outcome, dispatch_hit).  Callers run
         ``_revalidate`` first, so ``self._epoch`` is trustworthy here."""
         dkey = (key, self._epoch)
-        hit = self._dispatch.get(dkey)
+        with self._memo_lock:
+            hit = self._dispatch.get(dkey)
+            if hit is not None:
+                # LRU: re-insert so cap eviction removes the coldest entry
+                self._dispatch[dkey] = self._dispatch.pop(dkey)
         if hit is not None:
-            # LRU: re-insert so cap eviction removes the coldest entry
-            self._dispatch[dkey] = self._dispatch.pop(dkey)
             if self.tracer.enabled:
                 with self.tracer.span("dispatch.lookup") as ds:
                     ds.set(hit=True)
+            self._configure_plan(hit.plan)
             return hit, True
         with self.tracer.span("optimize", backend=self.backend):
             res = optimize(
@@ -458,9 +495,11 @@ class Session:
         if res.db is not self.db:
             self.db = res.db
             self._refresh_epoch()
-        if len(self._dispatch) >= self._dispatch_cap:
-            self._dispatch.pop(next(iter(self._dispatch)))
-        self._dispatch[(key, self._epoch)] = res
+        with self._memo_lock:
+            if len(self._dispatch) >= self._dispatch_cap:
+                self._dispatch.pop(next(iter(self._dispatch)))
+            self._dispatch[(key, self._epoch)] = res
+        self._configure_plan(res.plan)
         return res, False
 
     def _submit(
@@ -512,9 +551,13 @@ class Session:
         m.observe("query.latency_ms", qr.elapsed_s * 1e3)
         jit_after = self._jit_counters(res.plan)
         if jit_before is not None and jit_after is not None:
-            m.inc("jit.compiles", jit_after[0] - jit_before[0])
-            m.inc("jit.hits", jit_after[1] - jit_before[1])
-            m.inc("jit.overflows", jit_after[2] - jit_before[2])
+            # clamped: when two sessions run one cache-shared plan
+            # concurrently, another tenant's counters may move between this
+            # query's before/after reads — a negative delta is attribution
+            # noise, not a real decrement
+            m.inc("jit.compiles", max(0, jit_after[0] - jit_before[0]))
+            m.inc("jit.hits", max(0, jit_after[1] - jit_before[1]))
+            m.inc("jit.overflows", max(0, jit_after[2] - jit_before[2]))
         log = getattr(res.plan, "dispatch_log", None)
         if log:
             m.inc("chunks.dispatched", len(log))

@@ -8,6 +8,7 @@
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, replace
 from typing import Any, Optional, Tuple
@@ -42,46 +43,58 @@ class CacheEntry:
 
 
 class PlanCache:
-    """LRU cache of planned+compiled queries."""
+    """LRU cache of planned+compiled queries.
+
+    Thread-safe: a ``QueryServer`` shares one cache across every tenant
+    session, so lookups (which mutate LRU order and counters), inserts and
+    evictions race without a lock — an OrderedDict mid-``move_to_end`` is
+    not safe to read from another thread."""
 
     def __init__(self, capacity: int = 256):
         self.capacity = capacity
         self._entries: "OrderedDict[Tuple[str, str], CacheEntry]" = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def get(self, fingerprint: str, epoch: str) -> Optional[CacheEntry]:
         key = (fingerprint, epoch)
-        entry = self._entries.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return entry
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry
 
     def put(self, fingerprint: str, epoch: str, entry: CacheEntry) -> None:
         key = (fingerprint, epoch)
-        self._entries[key] = entry
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
 
     def invalidate_epoch(self, epoch: str) -> int:
         """Drop every entry planned against ``epoch``; returns count."""
-        stale = [k for k in self._entries if k[1] == epoch]
-        for k in stale:
-            del self._entries[k]
-        return len(stale)
+        with self._lock:
+            stale = [k for k in self._entries if k[1] == epoch]
+            for k in stale:
+                del self._entries[k]
+            return len(stale)
 
     def clear(self) -> None:
-        self._entries.clear()
+        with self._lock:
+            self._entries.clear()
 
     def stats(self) -> dict:
-        return {"entries": len(self._entries), "hits": self.hits, "misses": self.misses}
+        with self._lock:
+            return {"entries": len(self._entries), "hits": self.hits, "misses": self.misses}
 
 
 # Shared default cache used by passes.optimize(planner="cost") when the

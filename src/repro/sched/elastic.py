@@ -8,7 +8,8 @@
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+import threading
+from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 
@@ -101,3 +102,83 @@ class ElasticController:
         accum = max(1, math.ceil(global_batch / max(replicas, 1)))
         per_replica = max(1, global_batch // (replicas * accum))
         return per_replica, accum
+
+
+# ---------------------------------------------------------------------------
+# Worker-pool elasticity (the serving engine's shared chunk pool)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PoolScaleEvent:
+    """One scale decision of a ``PoolScalePolicy`` (the pool analogue of
+    ``ScaleEvent``)."""
+
+    time: float
+    kind: str            # 'up' | 'down'
+    n_workers: int       # worker count after the decision
+    queue_depth: int
+
+
+@dataclass
+class PoolScalePolicy:
+    """Queue-depth-driven worker scale-up/down with hysteresis — the same
+    batching idea as ``ElasticController.join_delay``, applied to a thread
+    worker pool instead of a device mesh.
+
+    Scale up when the chunk queue holds more than ``queue_high`` pending
+    chunks per live worker, but only after the pressure has persisted for
+    ``grow_delay`` seconds (a momentary burst of tiny chunks must not
+    thrash thread creation the way a trickle of rejoining hosts must not
+    thrash the compile cache).  Scale down is decided by the workers
+    themselves: a worker idle longer than ``idle_timeout`` retires, never
+    below ``min_workers``.  Thread-safe: pool workers and submitters
+    consult one policy concurrently."""
+
+    min_workers: int = 1
+    max_workers: int = 8
+    queue_high: float = 2.0       # pending chunks per worker that mean pressure
+    grow_delay: float = 0.0       # seconds of sustained pressure before growing
+    idle_timeout: float = 0.25    # seconds a worker may idle before retiring
+    events: List[PoolScaleEvent] = field(default_factory=list)
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _pressure_t0: Optional[float] = field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        if not 1 <= self.min_workers <= self.max_workers:
+            raise ValueError(
+                f"need 1 <= min_workers <= max_workers, got "
+                f"{self.min_workers}..{self.max_workers}"
+            )
+
+    def initial_workers(self) -> int:
+        return self.min_workers
+
+    def want_grow(self, queue_depth: int, n_workers: int, now: float) -> bool:
+        """True when the pool should add one worker: sustained queue
+        pressure and headroom below ``max_workers``."""
+        with self._lock:
+            if n_workers >= self.max_workers:
+                self._pressure_t0 = None
+                return False
+            pressured = queue_depth > self.queue_high * max(1, n_workers)
+            if not pressured:
+                self._pressure_t0 = None
+                return False
+            if self._pressure_t0 is None:
+                self._pressure_t0 = now
+            if now - self._pressure_t0 < self.grow_delay:
+                return False
+            self._pressure_t0 = None  # re-arm the hysteresis window
+            return True
+
+    def want_shrink(self, idle_s: float, n_workers: int) -> bool:
+        """True when an idle worker should retire (called by the worker
+        itself after waiting ``idle_s`` without work)."""
+        return n_workers > self.min_workers and idle_s >= self.idle_timeout
+
+    def note(self, kind: str, n_workers: int, queue_depth: int, now: float) -> PoolScaleEvent:
+        ev = PoolScaleEvent(now, kind, n_workers, queue_depth)
+        with self._lock:
+            self.events.append(ev)
+        return ev

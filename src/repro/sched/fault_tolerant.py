@@ -16,15 +16,144 @@
 # with checkpoint/restart + elastic re-meshing (sched/elastic.py).
 from __future__ import annotations
 
+import bisect
 import heapq
 import math
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 
 from .loop_schedule import ChunkPolicy, GuidedSelfScheduling
 
 # ---------------------------------------------------------------------------
+# Runtime fault tolerance (the non-simulated half of this module):
+# the partitioned backend's dispatch queue and the serving engine's shared
+# chunk pool consume these to turn a slow or failing chunk into a re-queue
+# instead of a stalled query.
+# ---------------------------------------------------------------------------
+
+
+class ChunkRetryExceeded(RuntimeError):
+    """A chunk failed more times than ``RetryPolicy.max_retries`` allows —
+    the query fails loudly instead of retrying forever."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Chunk-level fault-tolerance knobs for *real* dispatch (the simulator
+    above models the same scheme; this configures the runtime).
+
+    ``fault_hook`` is the injectable chunk-level fault point for testing: it
+    is called with the chunk's ``ChunkDispatch`` record at execution start
+    and may raise to simulate a worker losing that chunk.  A raised hook (or
+    any execution error) re-queues the chunk up to ``max_retries`` extra
+    attempts; past that the original error propagates as
+    ``ChunkRetryExceeded``."""
+
+    max_retries: int = 2               # extra attempts per chunk after the first
+    speculate: bool = True             # duplicate straggling in-flight chunks
+    straggler_factor: float = 4.0      # in-flight > factor x median(done) => straggler
+    min_completed: int = 3             # completed samples before detection engages
+    fault_hook: Optional[Callable[[Any], None]] = None
+
+    def retryable(self, attempt: int) -> bool:
+        return attempt < self.max_retries
+
+
+@dataclass
+class FaultStats:
+    """Cumulative fault-handling counters of one plan / one pool (the
+    analogue of ``JitCacheStats`` for the fault path).  Thread-safe: pooled
+    workers bump these concurrently."""
+
+    retries: int = 0          # chunk attempts re-queued after a failure
+    speculated: int = 0       # backup copies launched for straggling chunks
+    wasted: int = 0           # speculative copies that lost the race
+    failed: int = 0           # chunks abandoned after max_retries
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def bump(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            setattr(self, name, getattr(self, name) + n)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "retries": self.retries,
+                "speculated": self.speculated,
+                "wasted": self.wasted,
+                "failed": self.failed,
+            }
+
+
+class StragglerDetector:
+    """Online straggler detection over completed-chunk durations: an
+    in-flight chunk whose elapsed time exceeds ``factor`` x the median
+    completed duration is a straggler candidate for speculative
+    re-execution (first finisher wins — classic backup-task execution).
+
+    The runtime analogue of the simulator's busy_until-based victim pick;
+    thread-safe, O(log n) per record via a bounded sorted sample."""
+
+    def __init__(self, factor: float = 4.0, min_completed: int = 3, max_samples: int = 512):
+        self.factor = factor
+        self.min_completed = min_completed
+        self.max_samples = max_samples
+        self._lock = threading.Lock()
+        self._sorted: List[float] = []
+
+    def record(self, t_ms: float) -> None:
+        with self._lock:
+            bisect.insort(self._sorted, float(t_ms))
+            if len(self._sorted) > self.max_samples:
+                # drop the extremes pairwise so the median stays representative
+                self._sorted = self._sorted[1:-1]
+
+    def threshold_ms(self) -> Optional[float]:
+        """Elapsed time past which an in-flight chunk counts as a
+        straggler; None until enough completions have been observed."""
+        with self._lock:
+            n = len(self._sorted)
+            if n < self.min_completed:
+                return None
+            return self.factor * self._sorted[n // 2]
+
+    def is_straggler(self, elapsed_ms: float) -> bool:
+        thr = self.threshold_ms()
+        return thr is not None and elapsed_ms > thr
+
+
+def deterministic_fault_hook(
+    rate: float, seed: int = 0, max_faulty_attempts: int = 1
+) -> Callable[[Any], None]:
+    """A reproducible chunk-fault injector for tests and the serve
+    benchmark: fails ~``rate`` of chunks on their first
+    ``max_faulty_attempts`` attempts (so every query still completes under
+    bounded retry), keyed on the chunk's (op, partition, rows) identity —
+    the same chunk fails deterministically across runs and across serial
+    vs concurrent execution."""
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"fault rate must be in [0, 1], got {rate}")
+    denom = 1_000_000
+
+    def hook(d: Any) -> None:
+        if getattr(d, "attempt", 0) >= max_faulty_attempts:
+            return
+        key = f"{seed}:{d.op}:{d.partition}:{d.rows}".encode()
+        if zlib.crc32(key) % denom < int(rate * denom):
+            raise InjectedChunkFault(
+                f"injected fault: chunk op={d.op} partition={d.partition} "
+                f"rows={d.rows} attempt={d.attempt}"
+            )
+
+    return hook
+
+
+class InjectedChunkFault(RuntimeError):
+    """Raised by ``deterministic_fault_hook`` — a distinguishable, always
+    retryable failure class for fault-injection tests."""
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,411 @@
+# Multi-tenant serving engine (engine/server.py): admission control,
+# shared plan cache with single-flight compilation, fault-tolerant chunk
+# dispatch on the shared worker pool, and elastic pool scaling.
+#
+# The centerpiece is the concurrency stress test: N tenant threads × M
+# queries through one QueryServer with injected chunk faults and a
+# straggler, asserting results stay bit-identical to serial execution,
+# retries are bounded, coverage holds (every chunk of every op executed
+# exactly once), and the plan cache compiled each distinct logical query
+# exactly once.
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import AdmissionError, QueryServer, Session
+from repro.engine.server import SharedChunkPool
+from repro.sched.elastic import PoolScalePolicy
+from repro.sched.fault_tolerant import (
+    ChunkRetryExceeded,
+    FTResult,
+    RetryPolicy,
+    deterministic_fault_hook,
+    verify_coverage,
+)
+
+N_ROWS = 30_000
+
+
+def _tables(seed=0):
+    rng = np.random.default_rng(seed)
+    i32 = np.int32
+    return {
+        "access": dict(
+            url=rng.integers(0, 40, N_ROWS).astype(i32),
+            uid=rng.integers(0, 300, N_ROWS).astype(i32),
+            size=rng.integers(1, 1000, N_ROWS).astype(i32),
+        ),
+        "users": dict(
+            uid=np.arange(300, dtype=i32),
+            region=rng.integers(0, 5, 300).astype(i32),
+        ),
+    }
+
+
+# a mixed aggregate/join workload: three distinct logical queries
+QUERIES = [
+    "SELECT url, COUNT(url) FROM access GROUP BY url",
+    "SELECT url, SUM(size) FROM access GROUP BY url",
+    "SELECT u.region, COUNT(u.region), SUM(a.size) FROM access a, users u "
+    "WHERE a.uid = u.uid GROUP BY u.region",
+]
+
+
+def _server(**kw):
+    kw.setdefault("n_partitions", 4)
+    srv = QueryServer(**kw)
+    for name, cols in _tables().items():
+        srv.register(name, **cols)
+    return srv
+
+
+def _serial_results():
+    s = Session(backend="partitioned", n_partitions=4, async_dispatch=False)
+    for name, cols in _tables().items():
+        s.register(name, **cols)
+    return {q: sorted(s.sql(q).rows) for q in QUERIES}
+
+
+@pytest.fixture(scope="module")
+def serial():
+    return _serial_results()
+
+
+# ---------------------------------------------------------------------------
+# The stress test
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_tenants_faults_and_straggler(serial):
+    """8 tenants × 6 queries each, 8% injected chunk-fault rate plus one
+    slow chunk: every query completes, every result is bit-identical to
+    serial, retries stay bounded, chunk coverage holds per op, and the
+    plan cache compiled each distinct query exactly once."""
+    inject = deterministic_fault_hook(0.08, seed=3)
+    slow_hit = threading.Event()
+
+    def hook(d):
+        # one straggling chunk (first attempt only) + deterministic faults
+        if d.op.startswith("agg:") and d.partition == 1 and d.attempt == 0 and not slow_hit.is_set():
+            slow_hit.set()
+            time.sleep(0.25)
+        inject(d)
+
+    srv = _server(
+        fault=RetryPolicy(max_retries=2, fault_hook=hook),
+        scale=PoolScalePolicy(min_workers=2, max_workers=4),
+        max_pending=16,
+        admission="block",
+    )
+    n_tenants, n_queries = 8, 6
+    errors = []
+    logs = []  # (query, [ChunkDispatch...]) per run, collected per thread
+    lock = threading.Lock()
+
+    def tenant(tid):
+        try:
+            for j in range(n_queries):
+                q = QUERIES[(tid + j) % len(QUERIES)]
+                r = srv.submit(q, tenant=f"t{tid}", priority=tid % 3)
+                rows = sorted(r.rows)
+                # dispatch_log is thread-local per run: read it on the
+                # submitting thread, right after the run
+                log = list(r.plan.dispatch_log)
+                with lock:
+                    logs.append((q, log))
+                if rows != serial[q]:
+                    raise AssertionError(f"tenant {tid} query {j}: result diverged from serial")
+        except BaseException as e:  # noqa: BLE001 - collected for the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=tenant, args=(i,)) for i in range(n_tenants)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    try:
+        assert not errors, errors
+        assert len(logs) == n_tenants * n_queries
+        # bounded retries: no chunk ever exceeded max_retries attempts
+        for _, log in logs:
+            for d in log:
+                assert d.attempt <= 2
+        # coverage: per run and per op, completed chunk starts tile
+        # [0, total rows) exactly once (the simulator's verify_coverage
+        # applied to real dispatch records)
+        for _, log in logs:
+            per_op = {}
+            for d in log:
+                per_op.setdefault(d.op, []).append(d)
+            for ds in per_op.values():
+                total = sum(d.rows for d in ds)
+                res = FTResult(
+                    makespan=0.0,
+                    events=[],
+                    completed={d.start: d.worker for d in ds},
+                    duplicated_work=0,
+                    lost_work=0,
+                    checkpoints=0,
+                )
+                assert verify_coverage(res, total)
+        # single-flight + shared cache: one compile per distinct query
+        st = srv.plan_cache.stats()
+        assert st["misses"] == len(QUERIES)
+        # the injected faults actually exercised the retry path
+        assert srv.metrics.counter("serve.chunk.retries") > 0
+        assert srv.metrics.counter("serve.admitted") == n_tenants * n_queries
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_reject_when_full():
+    srv = _server(max_pending=1, admission="reject")
+    try:
+        srv._admit("a", 0)  # occupy the only slot
+        with pytest.raises(AdmissionError):
+            srv.submit(QUERIES[0], tenant="b")
+        assert srv.metrics.counter("serve.rejected") == 1
+        srv._release()
+        assert sorted(srv.submit(QUERIES[0], tenant="b").rows) == _serial_results()[QUERIES[0]]
+    finally:
+        srv.close()
+
+
+def test_admission_block_waits_for_slot():
+    srv = _server(max_pending=1, admission="block")
+    try:
+        srv._admit("a", 0)
+        got = []
+        t = threading.Thread(
+            target=lambda: got.append(srv.submit(QUERIES[0], tenant="b"))
+        )
+        t.start()
+        time.sleep(0.1)
+        assert not got  # still blocked on admission
+        assert srv.metrics.counter("serve.blocked") == 1
+        srv._release()
+        t.join(timeout=30)
+        assert got and got[0].rows is not None
+    finally:
+        srv.close()
+
+
+def test_block_mode_full_load_completes(serial):
+    srv = _server(max_pending=2, admission="block")
+    errors = []
+
+    def go(i):
+        try:
+            q = QUERIES[i % len(QUERIES)]
+            assert sorted(srv.submit(q, tenant=f"t{i}").rows) == serial[q]
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=go, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    try:
+        assert not errors, errors
+        assert srv.metrics.counter("serve.admitted") == 8
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Fault handling
+# ---------------------------------------------------------------------------
+
+
+def test_retry_exhaustion_raises():
+    # every attempt of every chunk faults (max_faulty_attempts > max_retries)
+    srv = _server(
+        fault=RetryPolicy(
+            max_retries=1,
+            speculate=False,
+            fault_hook=deterministic_fault_hook(1.0, max_faulty_attempts=5),
+        )
+    )
+    try:
+        with pytest.raises(ChunkRetryExceeded):
+            srv.submit(QUERIES[0])
+        assert srv.metrics.counter("serve.chunk.retries") > 0
+    finally:
+        srv.close()
+
+
+def test_zero_fault_rate_means_zero_retries(serial):
+    srv = _server(fault=RetryPolicy(max_retries=2, fault_hook=deterministic_fault_hook(0.0)))
+    try:
+        for q in QUERIES:
+            assert sorted(srv.submit(q).rows) == serial[q]
+        assert srv.metrics.counter("serve.chunk.retries") == 0
+    finally:
+        srv.close()
+
+
+def test_serial_session_fault_path(serial):
+    """The local (non-server) dispatch path honors the same RetryPolicy:
+    a Session with an attached fault policy retries failing chunks."""
+    s = Session(
+        backend="partitioned",
+        n_partitions=4,
+        async_dispatch=False,
+        fault=RetryPolicy(max_retries=2, fault_hook=deterministic_fault_hook(0.3, seed=1)),
+    )
+    for name, cols in _tables().items():
+        s.register(name, **cols)
+    r = s.sql(QUERIES[0])
+    assert sorted(r.rows) == serial[QUERIES[0]]
+    assert r.plan.fault_stats.retries > 0
+    assert all(d.attempt <= 2 for d in r.plan.dispatch_log)
+
+
+def test_local_pool_fault_path(serial):
+    """The per-query worker pool (async_dispatch with explicit n_workers —
+    cpu_count may be 1 in CI) re-queues failed chunks instead of dying."""
+    s = Session(
+        backend="partitioned",
+        n_partitions=4,
+        fault=RetryPolicy(max_retries=2, fault_hook=deterministic_fault_hook(0.3, seed=1)),
+    )
+    for name, cols in _tables().items():
+        s.register(name, **cols)
+    r0 = s.sql(QUERIES[0])  # compile once
+    r0.plan.choices.n_workers = 3
+    r0.plan.choices.async_dispatch = True
+    r = s.sql(QUERIES[0])
+    assert sorted(r.rows) == serial[QUERIES[0]]
+    assert r.plan.fault_stats.retries > 0
+
+
+# ---------------------------------------------------------------------------
+# Elastic pool scaling
+# ---------------------------------------------------------------------------
+
+
+def test_pool_scales_up_and_down():
+    policy = PoolScalePolicy(min_workers=1, max_workers=4, queue_high=1.0, idle_timeout=0.05)
+    pool = SharedChunkPool(policy)
+    try:
+        def work(ch):
+            time.sleep(0.01)
+            return ch[2]
+
+        from repro.backends.partitioned import ChunkDispatch
+
+        chunks = [(0, None, ChunkDispatch("op", 0, 1, 0, start=i)) for i in range(16)]
+        out = pool.run_chunks(chunks, work)
+        assert len(out) == 16
+        kinds = [e.kind for e in policy.events]
+        assert "up" in kinds  # queue pressure grew the pool
+        deadline = time.time() + 5.0
+        while pool.n_workers > 1 and time.time() < deadline:
+            time.sleep(0.02)
+        assert pool.n_workers == 1  # idle workers retired to min_workers
+        assert "down" in [e.kind for e in policy.events]
+    finally:
+        pool.close()
+
+
+def test_speculation_on_straggler():
+    """A chunk an order of magnitude slower than the median gets one
+    speculative backup; the backup's result wins and work completes."""
+    policy = PoolScalePolicy(min_workers=3, max_workers=3)
+    pool = SharedChunkPool(policy)
+    try:
+        from repro.backends.partitioned import ChunkDispatch
+
+        def hook(d):
+            if d.start == 0 and not d.speculated:
+                time.sleep(0.5)  # primary of chunk 0 straggles
+
+        fault = RetryPolicy(max_retries=1, speculate=True, straggler_factor=4.0,
+                            min_completed=3, fault_hook=hook)
+        chunks = [(0, None, ChunkDispatch("op", 0, 1, 0, start=i)) for i in range(12)]
+
+        def work(ch):
+            time.sleep(0.01)
+            return ch[2].start
+
+        out = pool.run_chunks(chunks, work, fault=fault)
+        assert out == list(range(12))
+        assert chunks[0][2].speculated
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Shared state under concurrency (the bugfix satellite's regression harness)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_concurrent_mutation():
+    from repro.planner.cache import CacheEntry, PlanCache
+
+    cache = PlanCache(capacity=32)
+    errors = []
+
+    def pound(tid):
+        try:
+            for i in range(400):
+                k = f"fp{(tid * 400 + i) % 64}"
+                if cache.get(k, "e") is None:
+                    cache.put(k, "e", CacheEntry(None, None, "", None, "e"))
+                if i % 50 == 0:
+                    cache.stats()
+                    len(cache)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=pound, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(cache) <= 32
+    st = cache.stats()
+    assert st["hits"] + st["misses"] == 8 * 400
+
+
+def test_metrics_registry_concurrent_counts():
+    from repro.obs import MetricsRegistry
+
+    m = MetricsRegistry()
+
+    def bump():
+        for _ in range(1000):
+            m.inc("c")
+            m.observe("h", 1.0)
+
+    threads = [threading.Thread(target=bump) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert m.counter("c") == 8000
+    assert m.snapshot()["histograms"]["h"]["count"] == 8000
+
+
+def test_tenant_isolation_and_shared_cache(serial):
+    """Tenants see their own query logs but share one compiled plan."""
+    srv = _server()
+    try:
+        srv.submit(QUERIES[0], tenant="alice")
+        srv.submit(QUERIES[0], tenant="bob")
+        assert len(srv.session("alice").query_log) == 1
+        assert len(srv.session("bob").query_log) == 1
+        assert srv.tenants() == ["alice", "bob"]
+        st = srv.plan_cache.stats()
+        assert st["misses"] == 1 and st["hits"] >= 1
+    finally:
+        srv.close()
