@@ -1,0 +1,141 @@
+# Adaptive re-optimization benchmark: feedback-driven re-planning from
+# measured chunk telemetry (planner/feedback.py + engine/session.py).
+#
+# The workload is a hash-collision-skewed GROUP BY: every key occurs exactly
+# PER_KEY times, so table statistics see a perfectly balanced field
+# (most_common_frac = 1/N_KEYS → estimated partition skew 1.0) — but 60% of
+# the keys are ≡ 0 (mod 8), and hash_partition's multiplier is ≡ 1 (mod 8),
+# so partition 0 actually receives ~60% of the rows.  Run 1 therefore plans
+# open-loop onto a static schedule; the measured dispatch log reports a
+# ~4.8× max/mean row skew, the drift trigger evicts the plan, and run 2
+# re-plans onto a self-scheduling policy that rebalances the hot partition.
+#
+# Reported and CI-gated (benchmarks/check_regression.py):
+#   adaptive_run1_vs_run3 (ratio, higher is better): run-1 wall / run-3 wall.
+#     Run 3 serves the re-planned, converged, fully-warm plan; the ISSUE's
+#     acceptance bar (run-3 ≤ 0.8× run-1) corresponds to ratio ≥ 1.25.
+#   replans_converged (count, lower is better): total drift re-plans across
+#     N_RUNS runs.  Exactly 1 — the re-planned decision is priced on the
+#     profile it was planned from, so it cannot drift against itself; more
+#     than 1 means the feedback loop oscillates.
+#
+# Hard in-bench assertions (not timings): run 2's EXPLAIN carries observed=
+# stats and a changed decision, every run's results are bit-identical to an
+# open-loop oracle, and the drift counter freezes after run 2.
+#
+# Run:  PYTHONPATH=src python benchmarks/bench_adaptive.py
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro import Session
+
+N_KEYS = 2_048
+PER_KEY = 320  # exactly uniform per-key counts: stats estimate zero skew
+HOT_FRAC = 0.6  # fraction of keys ≡ 0 (mod 8) → partition 0's row share
+N_PARTITIONS = 8
+N_RUNS = 4
+QUERY = "SELECT v, SUM(w) FROM t GROUP BY v"
+
+
+def _skewed_table(seed: int = 0) -> Dict[str, np.ndarray]:
+    n_hot = int(N_KEYS * HOT_FRAC)
+    hot = np.arange(0, 8 * n_hot, 8)
+    cold = np.array([x for x in range(1, 9 * N_KEYS) if x % 8][: N_KEYS - n_hot])
+    keys = np.concatenate([hot, cold])
+    assert len(keys) == N_KEYS
+    rng = np.random.default_rng(seed)
+    v = np.repeat(keys, PER_KEY)
+    rng.shuffle(v)
+    return {
+        "v": v.astype(np.int64),
+        "w": rng.integers(0, 1000, len(v)).astype(np.int64),
+    }
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    cols = _skewed_table()
+
+    # open-loop oracle: plans once on the stats estimates, never re-plans
+    oracle = Session(backend="partitioned", n_partitions=N_PARTITIONS)
+    oracle.register("t", **cols)
+    want = repr(oracle.sql(QUERY).results)
+
+    s = Session(backend="partitioned", n_partitions=N_PARTITIONS, feedback=True)
+    s.register("t", **cols)
+
+    walls: List[float] = []
+    decisions: List[Any] = []
+    drift_after: List[float] = []
+    for i in range(N_RUNS):
+        t0 = time.perf_counter()
+        r = s.sql(QUERY)
+        walls.append(time.perf_counter() - t0)
+        decisions.append(r.decision)
+        drift_after.append(s.metrics_registry.counter_total("replan.drift"))
+        if repr(r.results) != want:
+            raise AssertionError(f"run {i + 1} diverged from the open-loop oracle")
+
+    # the adaptive story, asserted hard: open-loop run 1, re-planned run 2
+    d1, d2 = decisions[0], decisions[1]
+    if d1.chosen.schedule == d2.chosen.schedule and d1.chosen.n_partitions == d2.chosen.n_partitions:
+        raise AssertionError(
+            f"run 2 did not change the decision: schedule={d2.chosen.schedule} "
+            f"K={d2.chosen.n_partitions} (run 1: {d1.chosen.schedule}/{d1.chosen.n_partitions})"
+        )
+    if not d2.replanned or d2.observed is None:
+        raise AssertionError(f"run 2 is not a feedback re-plan: replanned={d2.replanned!r}")
+    explain2 = s.explain(QUERY)
+    if "observed=" not in explain2 or "replanned:" not in explain2:
+        raise AssertionError("run-2 EXPLAIN is missing the observed=/replanned: block")
+    # convergence: the drift trigger fired exactly once, then went quiet
+    replans = drift_after[-1]
+    if drift_after[0] != replans:
+        raise AssertionError(f"drift kept firing after run 1: {drift_after}")
+
+    profiles = s.metrics_registry.counter_total("replan.profiles")
+    # run-1 (cold, open-loop) over the best converged run (3+): the plan is
+    # re-planned and warm from run 3 on, so min() over those runs measures
+    # the converged state without single-run scheduler noise
+    ratio = walls[0] / min(walls[2:])
+    for i, w in enumerate(walls):
+        rows.append((f"adaptive_run{i + 1}_wall", w * 1e6, "us"))
+    rows.append(("adaptive_run1_vs_run3", ratio, f"replanned: {d2.replanned}"))
+    rows.append(("adaptive_replans", replans, "gated (lower is better)"))
+
+    report = {
+        "n_rows": int(N_KEYS * PER_KEY),
+        "n_keys": N_KEYS,
+        "hot_frac": HOT_FRAC,
+        "n_partitions": N_PARTITIONS,
+        "query": QUERY,
+        "runs": [
+            {
+                "wall_s": walls[i],
+                "schedule": decisions[i].chosen.schedule,
+                "k": decisions[i].chosen.n_partitions,
+                "replanned": decisions[i].replanned,
+            }
+            for i in range(N_RUNS)
+        ],
+        "observed_skew": d2.observed.row_skew,
+        "profiles_recorded": profiles,
+        "oracle_identical": True,
+        # machine-independent ratio + count, gated by check_regression.py
+        "key_ratios": {"adaptive_run1_vs_run3": ratio},
+        "key_counts": {"replans_converged": int(replans)},
+    }
+    with open("BENCH_adaptive.json", "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(("adaptive_report", 0.0, "BENCH_adaptive.json"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name:<28s} {us:>12.1f}  {derived}")

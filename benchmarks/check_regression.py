@@ -77,6 +77,18 @@ def _kernel_counts(d: Dict) -> Dict[str, float]:
     return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
 
 
+def _adaptive_metrics(d: Dict) -> Dict[str, float]:
+    # run-1 (cold, open-loop) / run-3 (re-planned + warm) wall ratio from
+    # bench_adaptive.py — feedback re-planning must keep paying off
+    return {k: float(v) for k, v in d.get("key_ratios", {}).items() if v and v > 0}
+
+
+def _adaptive_counts(d: Dict) -> Dict[str, float]:
+    # drift re-plans across the run sequence: exactly one (the re-planned
+    # decision is priced on its own profile, so it cannot oscillate)
+    return {k: float(v) for k, v in d.get("key_counts", {}).items() if v is not None and v >= 0}
+
+
 def _serve_counts(d: Dict) -> Dict[str, float]:
     # serving counters from bench_serve.py: shared-plan-cache compile count
     # under N tenants (single-flight must dedupe racing compiles) and the
@@ -91,6 +103,7 @@ EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_planner.json": _planner_metrics,
     "BENCH_partition.json": _partition_metrics,
     "BENCH_kernels.json": _kernel_metrics,
+    "BENCH_adaptive.json": _adaptive_metrics,
 }
 
 # report file -> lower-is-better count extractor (compile counts etc.)
@@ -99,6 +112,7 @@ COUNT_EXTRACTORS: Dict[str, Callable[[Dict], Dict[str, float]]] = {
     "BENCH_engine.json": _engine_counts,
     "BENCH_kernels.json": _kernel_counts,
     "BENCH_serve.json": _serve_counts,
+    "BENCH_adaptive.json": _adaptive_counts,
 }
 
 

@@ -14,7 +14,7 @@ import sys
 import traceback
 
 # suites whose reports the CI regression gate consumes
-CI_SUITES = ("kernels", "planner", "join", "engine", "partition", "serve", "trace")
+CI_SUITES = ("kernels", "planner", "join", "engine", "partition", "serve", "trace", "adaptive")
 
 
 def main(argv=None) -> int:
@@ -26,6 +26,7 @@ def main(argv=None) -> int:
     rows = []
     failed = []
     from . import (
+        bench_adaptive,
         bench_engine,
         bench_fig2,
         bench_join,
@@ -49,6 +50,7 @@ def main(argv=None) -> int:
         ("partition", bench_partition.run),
         ("serve", bench_serve.run),   # writes BENCH_serve.json (QPS/p99 gate)
         ("trace", bench_trace.run),   # writes BENCH_trace.json.gz (CI artifact)
+        ("adaptive", bench_adaptive.run),  # writes BENCH_adaptive.json (replan gate)
     ]
     if args.ci:
         suites = [s for s in suites if s[0] in CI_SUITES]

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+# Keep the docs honest: every fenced ``python`` block in README.md and
+# docs/*.md must actually run, and every relative markdown link and
+# `src/repro/...` path reference must point at something that exists.
+#
+#   python scripts/check_docs.py            # all checks
+#   python scripts/check_docs.py --no-run   # links/paths only (fast)
+#
+# Conventions the docs follow (and this script enforces):
+#   - only ```python fences are executed; EXPLAIN samples, console
+#     transcripts and diagrams use ```text / ```console / bare fences
+#   - each file's python blocks are self-contained *as a sequence*: they
+#     are concatenated and run top-to-bottom in ONE namespace per file
+#     (so a later block may reuse `s` from an earlier one, but never
+#     anything from a different file)
+#   - blocks run as a subprocess from a temp cwd with PYTHONPATH=src, so
+#     artifacts they save (e.g. trace files) never land in the repo
+#
+# Exit status: 0 clean, 1 any broken block/link/path (each failure is
+# printed with its file and line).
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from typing import List, Tuple
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — skip images; URL-ish and in-page anchors are not checked
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+PATH_RE = re.compile(r"src/repro[\w./-]*")
+
+
+def doc_files() -> List[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
+        )
+    return files
+
+
+def python_blocks(text: str) -> List[Tuple[int, str]]:
+    """(start_line, code) for every ```python fence, in order."""
+    blocks: List[Tuple[int, str]] = []
+    lang: str | None = None
+    buf: List[str] = []
+    start = 0
+    for ln, line in enumerate(text.splitlines(), 1):
+        m = FENCE_RE.match(line)
+        if m and lang is None:
+            lang, buf, start = m.group(1).lower(), [], ln + 1
+        elif line.strip().startswith("```") and lang is not None:
+            if lang == "python":
+                blocks.append((start, "\n".join(buf)))
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+    return blocks
+
+
+def check_links(path: str, text: str) -> List[str]:
+    errors: List[str] = []
+    base = os.path.dirname(path)
+    in_fence = False
+    for ln, line in enumerate(text.splitlines(), 1):
+        if line.strip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue  # code samples mention illustrative names, not links
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            if not os.path.exists(os.path.join(base, target)):
+                rel = os.path.relpath(path, ROOT)
+                errors.append(f"{rel}:{ln}: broken link ({target})")
+        for m in PATH_RE.finditer(line):
+            ref = m.group(0).rstrip(".")  # "src/repro/..." ellipses
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                rel = os.path.relpath(path, ROOT)
+                errors.append(f"{rel}:{ln}: missing path ({ref})")
+    return errors
+
+
+def run_blocks(path: str, blocks: List[Tuple[int, str]]) -> List[str]:
+    if not blocks:
+        return []
+    rel = os.path.relpath(path, ROOT)
+    # one namespace per file: concatenate, keeping a line map for errors
+    parts = [f"# --- {rel} block @ line {ln}\n{code}" for ln, code in blocks]
+    script = "\n\n".join(parts) + "\n"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        proc = subprocess.run(
+            [sys.executable, "-c", script],
+            cwd=tmp,  # saved artifacts stay out of the repo
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=600,
+        )
+    if proc.returncode != 0:
+        tail = "\n".join(proc.stderr.strip().splitlines()[-6:])
+        return [f"{rel}: python blocks failed (lines "
+                f"{', '.join(str(ln) for ln, _ in blocks)}):\n    "
+                + tail.replace("\n", "\n    ")]
+    return []
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--no-run", action="store_true",
+                    help="skip executing python blocks (links/paths only)")
+    args = ap.parse_args(argv)
+
+    errors: List[str] = []
+    for path in doc_files():
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        errors += check_links(path, text)
+        blocks = python_blocks(text)
+        if args.no_run:
+            print(f"{os.path.relpath(path, ROOT)}: {len(blocks)} python "
+                  "block(s) (not run), links ok"
+                  if not errors else f"{os.path.relpath(path, ROOT)}: checked")
+            continue
+        errs = run_blocks(path, blocks)
+        errors += errs
+        status = "FAIL" if errs else "ok"
+        print(f"{os.path.relpath(path, ROOT)}: {len(blocks)} python "
+              f"block(s) {status}")
+    if errors:
+        print(f"\n{len(errors)} problem(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("docs ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,6 +30,7 @@ BENCHES = {
     "BENCH_partition.json": "benchmarks/bench_partition.py",
     "BENCH_kernels.json": "benchmarks/bench_kernels.py",
     "BENCH_serve.json": "benchmarks/bench_serve.py",
+    "BENCH_adaptive.json": "benchmarks/bench_adaptive.py",
 }
 
 

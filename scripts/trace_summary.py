@@ -44,23 +44,43 @@ def render_summary(trace: QueryTrace) -> str:
     return "\n".join(lines)
 
 
+# dispatch-adjacent event spans: emitted *between* chunk dispatches by the
+# fault-tolerance and adaptive re-planning machinery.  Rendered as their own
+# section (and folded into the per-op table) rather than silently dropped.
+EVENT_SPANS = ("fault.retry", "fault.speculate", "replan.split", "replan.drift")
+
+
 def render_dispatch(trace: QueryTrace) -> str:
     recs = trace.dispatch_records()
-    if not recs:
+    events = [s for name in EVENT_SPANS for s in trace.by_name(name)]
+    if not recs and not events:
         return "dispatch: (no chunk dispatch spans in this trace)"
     per_op = {}
     for r in recs:
         per_op.setdefault(r.get("op", "?"), []).append(r)
-    lines = [f"dispatch: {len(recs)} chunks over {len(per_op)} op(s)"]
+    ev_per_op: dict = {}
+    for s in events:
+        op = s.attrs.get("op", "?")
+        ev_per_op.setdefault(op, {}).setdefault(s.name, 0)
+        ev_per_op[op][s.name] += 1
+    lines = [f"dispatch: {len(recs)} chunks over {len(per_op)} op(s)"
+             + (f", {len(events)} fault/replan event(s)" if events else "")]
     for op, rs in sorted(per_op.items()):
         workers = sorted({r.get("worker", 0) for r in rs})
         compiled = sum(1 for r in rs if r.get("compiled"))
+        evs = ev_per_op.get(op, {})
+        ev_str = "".join(f" {name}={n}" for name, n in sorted(evs.items()))
         lines.append(
             f"  {op:<40s} chunks={len(rs):<4d} rows={sum(r.get('rows', 0) for r in rs):<9d}"
             f" busy={sum(r.get('t_ms', 0.0) for r in rs):8.1f}ms"
             f" queue={sum(r.get('queue_ms', 0.0) for r in rs):7.1f}ms"
-            f" compiles={compiled:<3d} workers={workers}"
+            f" compiles={compiled:<3d} workers={workers}" + ev_str
         )
+    if events:
+        lines.append(f"events: {len(events)} fault/replan span(s)")
+        for s in events:
+            attrs = " ".join(f"{k}={v}" for k, v in sorted(s.attrs.items()))
+            lines.append(f"  {s.name:<18s} {attrs}")
     return "\n".join(lines)
 
 

@@ -240,6 +240,10 @@ class ChunkDispatch:
     start: int = 0           # chunk offset in the op's partitioned iteration space
     attempt: int = 0         # retries consumed (fault-tolerant dispatch)
     speculated: bool = False  # a backup copy was launched for this chunk
+    # this chunk was produced by a mid-run skew split (``SplitPolicy``) —
+    # sub-chunks are never split again, so one pathological partition
+    # splits exactly once per op instead of recursing
+    split_child: bool = False
 
     def trace_attrs(self) -> Dict[str, Any]:
         """The fields a per-chunk ``dispatch`` span carries — the trace is
@@ -261,6 +265,56 @@ class ChunkDispatch:
             "attempt": self.attempt,
             "speculated": self.speculated,
         }
+
+
+@dataclass
+class SplitPolicy:
+    """Mid-run skew mitigation (adaptive re-optimization's runtime half):
+    when one partition's measured chunk time exceeds ``threshold_factor`` ×
+    the mean of the other completed chunks, that partition's *remaining*
+    chunks are split into guided-policy-sized sub-chunks before dispatch,
+    so a pathological partition load-balances across workers within the
+    run instead of waiting for the next plan.
+
+    Each split records a ``replan.split`` span and bumps the
+    ``replan.splits`` metric.  Sub-chunks are exact: partials still merge
+    in chunk order under the accumulate op's own (commutative+associative)
+    reduction and streaming rows are re-sorted by original row index, so
+    results stay bit-identical to the unsplit plan.
+
+    Applies to the plan's local dispatch paths (serial and per-query
+    pool); the serving engine's ``SharedChunkPool`` executes chunk sets
+    verbatim and does not split."""
+
+    # a completed chunk slower than factor × mean-of-other-completed flags
+    # its partition (0.0 = flag every partition once min_completed is met)
+    threshold_factor: float = 4.0
+    # never split chunks smaller than this — sub-chunks below the shape-
+    # bucket floor would all pad back up to BUCKET_MIN and gain nothing
+    min_rows: int = 2 * BUCKET_MIN
+    # completed chunks required before the mean is trustworthy
+    min_completed: int = 2
+
+
+class _SplitState:
+    """Per-op bookkeeping for ``SplitPolicy``: completed-chunk times and
+    the set of partitions flagged as slow.  Callers synchronize access
+    (the pool path mutates it under its Condition lock)."""
+
+    def __init__(self) -> None:
+        self.times: List[float] = []
+        self.slow: set = set()
+
+    def note_complete(self, d: ChunkDispatch, sp: Optional[SplitPolicy]) -> None:
+        if sp is None:
+            return
+        self.times.append(d.t_ms)
+        n = len(self.times)
+        if n <= sp.min_completed:
+            return
+        mean_others = max((sum(self.times) - d.t_ms) / (n - 1), 1e-9)
+        if d.t_ms > sp.threshold_factor * mean_others:
+            self.slow.add(d.partition)
 
 
 @dataclass
@@ -331,6 +385,10 @@ class PartitionedPlan:
         self.fault_stats = FaultStats()
         self.chunk_executor: Any = None
         self.metrics_registry: Any = None
+        # mid-run skew mitigation (None = off); attached by the Session
+        # when feedback is enabled — like ``fault``, never part of the plan
+        # fingerprint and never a result-changing knob
+        self.split: Optional[SplitPolicy] = None
         # bucketed jit chunk kernels: one _JitKernel per extracted op,
         # built lazily, shared counters in jit_stats (per plan); creation is
         # locked — concurrent first runs must not build the same kernel twice
@@ -440,6 +498,86 @@ class PartitionedPlan:
             pos += size
             w += 1
         return out
+
+    def partition_row_counts(self) -> Dict[str, np.ndarray]:
+        """Measured per-partition row counts of every hash layout this plan
+        materialized, keyed ``"table.field"`` — the feedback loop's
+        observed row skew (planner/feedback.py ``extract_profile``).  Range
+        layouts are omitted: they are even by construction."""
+        out: Dict[str, np.ndarray] = {}
+        for (table, fld), layout in self._layouts.items():
+            if fld is not None and layout.mode.startswith("hash"):
+                out[f"{table}.{fld}"] = np.diff(layout.bounds)
+        return out
+
+    # -- mid-run skew splitting (SplitPolicy) ---------------------------------
+    def _split_chunk(
+        self, ch: Tuple[int, np.ndarray, ChunkDispatch]
+    ) -> List[Tuple[int, np.ndarray, ChunkDispatch]]:
+        """Split one pending chunk of a flagged partition into guided-size
+        sub-chunks (geometrically decaying, floored at 1/(4K) of the chunk
+        — coarser than the global guided floor: these pieces only need to
+        spread ONE partition's tail across the pool)."""
+        p, idx, d = ch
+        total = int(idx.shape[0])
+        policy = make_policy("guided", total, self.k, min_chunk=max(1, total // (4 * self.k)))
+        policy.reset()
+        subs: List[Tuple[int, np.ndarray, ChunkDispatch]] = []
+        pos, w = 0, 0
+        while pos < total:
+            size = max(1, min(policy.next_chunk(total - pos, self.k, w % self.k, []), total - pos))
+            sd = replace(
+                d,
+                rows=size,
+                start=d.start + pos,
+                t_ms=0.0,
+                queue_ms=0.0,
+                bucket=0,
+                compiled=False,
+                attempt=0,
+                speculated=False,
+                split_child=True,
+            )
+            subs.append((p, idx[pos: pos + size], sd))
+            pos += size
+            w += 1
+        return subs
+
+    def _log_replace(self, old: ChunkDispatch, subs: List[ChunkDispatch]) -> None:
+        """Splice a split chunk's sub-dispatches into the dispatch log in
+        place of the original entry (the log stays a faithful record of
+        what actually executed, in schedule order)."""
+        log = self.dispatch_log
+        for j in range(len(log) - 1, -1, -1):
+            if log[j] is old:
+                log[j: j + 1] = subs
+                return
+        log.extend(subs)
+
+    def _note_split(
+        self, d: ChunkDispatch, subs: List[Tuple[int, np.ndarray, ChunkDispatch]], tr, op_id
+    ) -> None:
+        if self.metrics_registry is not None:
+            self.metrics_registry.inc("replan.splits")
+        if tr.enabled:
+            s = tr.start(
+                "replan.split",
+                parent=op_id,
+                op=d.op,
+                partition=d.partition,
+                rows=d.rows,
+                n_subchunks=len(subs),
+            )
+            tr.end(s)
+
+    def _split_eligible(self, d: ChunkDispatch, st: "_SplitState") -> bool:
+        sp = self.split
+        return (
+            sp is not None
+            and not d.split_child
+            and d.partition in st.slow
+            and d.rows >= sp.min_rows
+        )
 
     # -- chunk column views ----------------------------------------------------
     def _global_cols(self, params: Optional[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
@@ -565,9 +703,24 @@ class PartitionedPlan:
                     fault_stats=self.fault_stats,
                     metrics=self.metrics_registry,
                 )
+            st = _SplitState()
             if not self.choices.async_dispatch or nw <= 1 or len(chunks) <= 1:
-                for i, ch in enumerate(chunks):
+                # index-based loop: a mid-run split splices sub-chunks into
+                # ``chunks``/``results`` at the current position, so the
+                # caller's positional zip over (chunks, results) stays valid
+                i = 0
+                while i < len(chunks):
+                    ch = chunks[i]
                     d = ch[2]
+                    if self._split_eligible(d, st):
+                        subs = self._split_chunk(ch)
+                        if len(subs) > 1:
+                            chunks[i: i + 1] = subs
+                            results[i: i + 1] = [None] * len(subs)
+                            self._log_replace(d, [s[2] for s in subs])
+                            self._note_split(d, subs, tr, op_id)
+                            ch = chunks[i]
+                            d = ch[2]
                     t0 = time.perf_counter()
                     d.queue_ms = (t0 - t_disp0) * 1e3
                     while True:
@@ -595,9 +748,11 @@ class PartitionedPlan:
                         if traced:
                             tr.end(s, **d.trace_attrs())
                         break
+                    st.note_complete(d, self.split)
+                    i += 1
                 return results
             return self._dispatch_pool(
-                chunks, work, results, tr, traced, op_id, t_disp0, nw, fault
+                chunks, work, results, tr, traced, op_id, t_disp0, nw, fault, st
             )
         finally:
             if traced:
@@ -624,11 +779,16 @@ class PartitionedPlan:
         t_disp0: float,
         nw: int,
         fault,
+        st: Optional["_SplitState"] = None,
     ) -> List[Any]:
         """The local worker-pool path of ``_dispatch``: a Condition-guarded
         work queue (instead of a shared iterator) so failed chunks can be
-        re-queued and idle workers can launch speculative backups for
-        stragglers."""
+        re-queued, idle workers can launch speculative backups for
+        stragglers, and a flagged-slow partition's pending chunks can be
+        split (``SplitPolicy``) before dispatch.  Split sub-chunks are
+        appended to ``chunks``/``results`` (the first sub-chunk keeps the
+        original slot) — legal because every partial merge op is
+        commutative+associative, which K>1 execution already requires."""
         n = len(chunks)
         pending: deque = deque(enumerate(chunks))
         done = [False] * n
@@ -641,7 +801,9 @@ class PartitionedPlan:
             if fault is not None and fault.speculate
             else None
         )
-        state = {"ndone": 0}
+        if st is None:
+            st = _SplitState()
+        state = {"ndone": 0, "total": n}
 
         def runner(w: int) -> None:
             while True:
@@ -649,13 +811,29 @@ class PartitionedPlan:
                 backup = False
                 with cv:
                     while True:
-                        if errors or state["ndone"] >= n:
+                        if errors or state["ndone"] >= state["total"]:
                             return
                         if pending:
                             item = pending.popleft()
-                            if done[item[0]]:
+                            i0, ch0 = item
+                            if done[i0]:
                                 item = None
                                 continue
+                            d0 = ch0[2]
+                            if self._split_eligible(d0, st) and d0.attempt == 0:
+                                subs = self._split_chunk(ch0)
+                                if len(subs) > 1:
+                                    base = len(chunks)
+                                    chunks[i0] = subs[0]
+                                    chunks.extend(subs[1:])
+                                    results.extend([None] * (len(subs) - 1))
+                                    done.extend([False] * (len(subs) - 1))
+                                    for kk in reversed(range(len(subs) - 1)):
+                                        pending.appendleft((base + kk, subs[kk + 1]))
+                                    state["total"] += len(subs) - 1
+                                    self._log_replace(d0, [s[2] for s in subs])
+                                    self._note_split(d0, subs, tr, op_id)
+                                    item = (i0, subs[0])
                             break
                         if detector is not None:
                             thr = detector.threshold_ms()
@@ -741,6 +919,7 @@ class PartitionedPlan:
                     inflight.pop(i, None)
                     if detector is not None:
                         detector.record(t_ms)
+                    st.note_complete(d, self.split)
                     cv.notify_all()
                 if traced:
                     tr.end(s, **d.trace_attrs())

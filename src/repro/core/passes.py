@@ -29,6 +29,14 @@ from repro.obs.trace import NULL_TRACER
 
 @dataclass
 class OptimizeOptions:
+    """Every knob of the ``optimize`` pass pipeline.
+
+    The first block configures the *fixed* pipeline (used as-is when
+    ``planner='none'``); ``planner='cost'`` hands the strategy knobs to the
+    cost-based planner and uses the remainder (backend, cache, feedback,
+    tracing, verification) as planning inputs.
+    """
+
     n_parts: int = 1                   # target parallel width (forall N)
     partition: str = "indirect"        # 'direct' | 'indirect' | 'none'
     partition_field: Optional[Tuple[str, str]] = None  # (table, field)
@@ -65,6 +73,18 @@ class OptimizeOptions:
     # thread worker pool (double-buffered dispatch; self-scheduling
     # policies become real load balancing)
     async_dispatch: bool = True
+    # -- adaptive re-optimization (planner='cost'; repro.planner.feedback) ---
+    # FeedbackStore of ObservedProfiles from earlier runs of the same
+    # program: the planner substitutes measured selectivity / row skew /
+    # jit hit rate for the static estimates.  None → open-loop planning.
+    feedback: Any = None
+    # tenant label namespacing profile lookups inside a shared FeedbackStore
+    # (a QueryServer passes the tenant id; profiles never cross tenants)
+    feedback_tenant: str = ""
+    # drift tolerance: after a run, an observed/estimated ratio outside
+    # [1/drift_band, drift_band] invalidates the cached plan so the next
+    # dispatch re-plans against the measured profile (Session._feedback_update)
+    drift_band: float = 2.0
     # repro.obs.Tracer receiving per-stage spans (passes, cache.lookup,
     # plan.enumerate, lower); None → NULL_TRACER (zero-cost no-ops).  Not
     # part of any plan fingerprint — tracing must never change the plan.
@@ -167,6 +187,8 @@ def optimize(program: Program, db: Database, opts: Optional[OptimizeOptions] = N
             jit_chunks=opts.jit_chunks,
             async_dispatch=opts.async_dispatch,
             tracer=tr,
+            feedback=opts.feedback,
+            feedback_tenant=opts.feedback_tenant,
         )
         decision, explain = outcome.decision, outcome.explain
         if outcome.cached_entry is not None:

@@ -105,7 +105,14 @@ class SharedChunkPool:
 
     Elasticity: ``PoolScalePolicy`` hysteresis grows the pool on sustained
     queue pressure (checked at enqueue time) and retires workers idle past
-    ``idle_timeout``, never below ``min_workers``."""
+    ``idle_timeout``, never below ``min_workers``.
+
+    Limitation: the shared pool does NOT perform mid-run straggler
+    *splitting* (``SplitPolicy``) — chunk lists here are shared across
+    tenants and re-shaping one query's chunks under the pool lock would
+    stall the others.  Skewed partitions on the shared pool are instead
+    handled across runs by feedback-driven re-planning (the next plan of
+    that fingerprint picks a finer/guided chunk policy up front)."""
 
     # queue priorities: retries and speculative backups outrank any fresh
     # submission (they gate an already-running query's completion)
@@ -392,7 +399,14 @@ class QueryServer:
     (shed load) and ``admission='block'`` waits for a slot
     (backpressure).  ``priority`` orders *chunk* scheduling on the shared
     pool, so an admitted high-priority query overtakes lower-priority
-    work at every dispatch boundary."""
+    work at every dispatch boundary.
+
+    Adaptive re-optimization (``feedback=True``): the server owns ONE
+    shared ``FeedbackStore`` whose LRU budget spans all tenants, but
+    profiles are keyed per tenant — tenant A's measured selectivities
+    never steer tenant B's plans (workloads with per-tenant parameter
+    skew must not cross-contaminate).  ``drift_band`` is the shared
+    re-planning tolerance."""
 
     def __init__(
         self,
@@ -410,6 +424,8 @@ class QueryServer:
         metrics: Optional[MetricsRegistry] = None,
         trace: bool = False,
         max_query_log: int = 256,
+        feedback: Any = False,
+        drift_band: float = 2.0,
     ):
         if admission not in ("reject", "block"):
             raise EngineError(f"admission must be 'reject' or 'block', got {admission!r}")
@@ -427,6 +443,16 @@ class QueryServer:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = Tracer() if trace else NULL_TRACER
         self.max_query_log = max_query_log
+        if feedback is True:
+            from repro.planner import FeedbackStore
+
+            self.feedback: Any = FeedbackStore()
+        elif feedback is False or feedback is None:
+            self.feedback = None
+        else:
+            # a store instance (possibly empty, hence no truthiness test)
+            self.feedback = feedback
+        self.drift_band = drift_band
         self.pool = SharedChunkPool(scale, tracer=self.tracer, metrics=self.metrics)
         self._sessions: Dict[str, Session] = {}
         self._sessions_lock = threading.Lock()
@@ -478,6 +504,9 @@ class QueryServer:
                     max_query_log=self.max_query_log,
                     fault=self.fault,
                     chunk_executor=self.pool,
+                    feedback=self.feedback if self.feedback is not None else False,
+                    feedback_tenant=tenant,
+                    drift_band=self.drift_band,
                 )
             return sess
 
@@ -545,8 +574,24 @@ class QueryServer:
         priority: int = 0,
     ) -> QueryResult:
         """Submit one query (SQL string or ``MapReduceSpec``) on the
-        calling thread.  Raises :class:`AdmissionError` under 'reject'
-        overload; blocks for a slot under 'block'."""
+        calling thread and return its :class:`QueryResult`.
+
+        ``query`` is either a SQL string (parameterized with ``:name``
+        placeholders bound from ``params``) or a ``MapReduceSpec``.
+        ``tenant`` selects the per-tenant :class:`Session` (created on
+        first use); all tenants share the plan cache, chunk pool,
+        metrics registry and — when the server was built with
+        ``feedback=True`` — the feedback store, though observed profiles
+        remain keyed per tenant.  ``priority`` (higher = sooner) orders
+        this query's chunks on the shared pool relative to concurrent
+        submissions.
+
+        Admission control applies before any work: under
+        ``admission='reject'`` a full server raises
+        :class:`AdmissionError`; under ``'block'`` the call waits for an
+        in-flight slot.  Identical logical queries race through a
+        single-flight latch so only one thread compiles; the rest reuse
+        the shared plan cache."""
         if self._closed:
             raise EngineError("QueryServer is closed")
         is_mr = isinstance(query, MapReduceSpec)

@@ -113,6 +113,49 @@ class Session:
     it (replacement also invalidates the old epoch's plan-cache entries so a
     stale compiled plan can never be served), and data reformatting done by
     the optimizer persists across queries (the paper's amortization model).
+
+    With ``feedback`` enabled the session also closes the adaptive
+    re-optimization loop (planner/feedback.py): every run's measured
+    selectivity / row skew / chunk cost is recorded, drift outside
+    ``drift_band`` invalidates the cached plan so the next dispatch
+    re-plans against the observations, and pathological partitions are
+    split mid-run (``replan.split``).
+
+    Constructor arguments:
+
+    ``db``              database to serve (a fresh empty one by default).
+    ``n_parts``         target parallel width for the monolithic backends.
+    ``planner``         'cost' (default: statistics-driven planning with a
+                        plan cache) or 'none' (the fixed pass pipeline).
+    ``backend``         executor: 'jax' | 'reference' | 'partitioned'.
+    ``n_partitions``    pin the partitioned backend's K (None = planner).
+    ``schedule``        pin the chunk schedule policy ('static' | 'fixed' |
+                        'guided'); 'auto' leaves it to the planner.
+    ``jit_chunks``      bucketed jit chunk kernels (partitioned backend).
+    ``async_dispatch``  worker-pool chunk dispatch (partitioned backend).
+    ``plan_cache``      planner.PlanCache to share (a QueryServer passes
+                        its server-wide cache); None = private cache.
+    ``reformat``        allow amortized data reformatting.
+    ``expected_runs``   reformatting amortization horizon.
+    ``mesh``            jax device mesh enabling shard_map candidates.
+    ``history_limit`` / ``max_query_log``
+                        cap of the metadata-only query log ring buffer.
+    ``revalidate``      'content' re-hashes table data per dispatch;
+                        'signature' only checks table identity (serving).
+    ``trace``           True → collect per-stage spans on every query
+                        (``take_trace()``); or pass a ``Tracer`` to share.
+                        ``profile()`` scopes a tracer to one block instead.
+    ``metrics``         MetricsRegistry to feed (shared by a QueryServer);
+                        None = a private registry (``metrics()`` snapshot).
+    ``fault``           sched.fault_tolerant.RetryPolicy for chunk retries.
+    ``chunk_executor``  shared chunk pool (engine.server.SharedChunkPool).
+    ``feedback``        adaptive re-optimization: True → private
+                        FeedbackStore; a FeedbackStore instance → shared
+                        (the QueryServer wiring); False/None → open loop.
+    ``drift_band``      observed/estimated tolerance band (default 2×)
+                        before the drift trigger invalidates the plan.
+    ``feedback_tenant`` tenant label namespacing profiles in a shared
+                        FeedbackStore (set by ``QueryServer.session``).
     """
 
     def __init__(
@@ -137,6 +180,9 @@ class Session:
         metrics: Optional[MetricsRegistry] = None,
         fault: Any = None,
         chunk_executor: Any = None,
+        feedback: Any = False,
+        drift_band: float = 2.0,
+        feedback_tenant: str = "",
     ):
         if revalidate not in ("content", "signature"):
             raise EngineError(f"revalidate must be 'content' or 'signature', got {revalidate!r}")
@@ -192,6 +238,24 @@ class Session:
         # (``engine.server.SharedChunkPool``)
         self.fault = fault
         self.chunk_executor = chunk_executor
+        # adaptive re-optimization (planner/feedback.py): the feedback store
+        # (True = private, or a shared FeedbackStore), the drift band the
+        # trigger compares observed/estimated ratios against, and the tenant
+        # label isolating this session's profiles in a shared store
+        if feedback is True:
+            from repro.planner import FeedbackStore
+
+            self.feedback: Any = FeedbackStore()
+        elif feedback is False or feedback is None:
+            self.feedback = None
+        else:
+            # a store instance (possibly empty, hence no truthiness test)
+            self.feedback = feedback
+        if drift_band < 1.0:
+            raise EngineError(f"drift_band must be >= 1.0, got {drift_band}")
+        self.drift_band = drift_band
+        self.feedback_tenant = feedback_tenant
+        self._split_policy: Any = None
         # warm-dispatch memo: (query key, stats epoch) → OptimizeResult;
         # bounded like the plan cache — serving traffic with per-request
         # literals would otherwise pin one compiled plan per query text
@@ -455,6 +519,20 @@ class Session:
             plan.chunk_executor = self.chunk_executor
         if hasattr(plan, "metrics_registry"):
             plan.metrics_registry = self.metrics_registry
+        if hasattr(plan, "split"):
+            plan.split = self._split_policy_for()
+
+    def _split_policy_for(self) -> Any:
+        """The mid-run skew-split policy attached to partitioned plans —
+        only when feedback is enabled (the split is the runtime half of the
+        adaptive loop; open-loop sessions keep the historical behavior)."""
+        if self.feedback is None:
+            return None
+        if self._split_policy is None:
+            from repro.backends.partitioned import SplitPolicy
+
+            self._split_policy = SplitPolicy()
+        return self._split_policy
 
     def _prepare(self, key: str, prog: Program) -> Tuple[OptimizeResult, bool]:
         """Returns (optimize outcome, dispatch_hit).  Callers run
@@ -488,6 +566,9 @@ class Session:
                     expected_runs=self.expected_runs,
                     mesh=self.mesh,
                     tracer=self.tracer,
+                    feedback=self.feedback,
+                    feedback_tenant=self.feedback_tenant,
+                    drift_band=self.drift_band,
                 ),
             )
         # reformatting persists across the session (amortization, §III-C1);
@@ -526,7 +607,49 @@ class Session:
             QueryLogEntry(source, text, qr.cache_hit, qr.dispatch_hit, qr.elapsed_s)
         )
         self._record_metrics(qr, res, jit_before)
+        self._feedback_update(key, res, qr)
         return qr
+
+    # -- adaptive re-optimization (planner/feedback.py) ----------------------
+    def _feedback_update(self, key: str, res: OptimizeResult, qr: QueryResult) -> None:
+        """Close the feedback loop after one run: record the measured
+        profile, then fire the drift trigger — when an observed/estimated
+        ratio leaves the band AND the plan was open-loop (it consumed no
+        profile), evict the cached plan + warm-dispatch memo so the next
+        submission re-plans against the observations.
+
+        The open-loop guard is the convergence proof: a re-planned decision
+        carries ``observed`` and is priced on the profile itself
+        (est==observed), so it can never re-trigger — each fingerprint
+        re-plans at most once per stats epoch, no oscillation."""
+        store = self.feedback
+        decision = res.decision
+        if store is None or decision is None:
+            return
+        sem_fp = getattr(decision, "fingerprint", "")
+        if not sem_fp:
+            return
+        from repro.planner import drift_report, extract_profile
+
+        prof = extract_profile(res.plan, decision=decision, results=qr.results)
+        if prof is None:
+            return
+        stored = store.record(sem_fp, prof, tenant=self.feedback_tenant)
+        self.metrics_registry.inc("replan.profiles")
+        if getattr(decision, "observed", None) is not None:
+            return  # already profile-planned — converged
+        reasons = drift_report(stored, getattr(decision, "estimates", {}), self.drift_band)
+        if not reasons:
+            return
+        n = self.plan_cache.invalidate_fingerprint(sem_fp)
+        with self._memo_lock:
+            self._dispatch.pop((key, self._epoch), None)
+        self.metrics_registry.inc("replan.drift")
+        if n:
+            self.metrics_registry.inc("replan.invalidated_plans", n)
+        if self.tracer.enabled:
+            s = self.tracer.start("replan.drift", fingerprint=sem_fp[:12], n_invalidated=n)
+            self.tracer.end(s, reason=reasons[0])
 
     # -- metrics recording ---------------------------------------------------
     @staticmethod

@@ -18,11 +18,23 @@
 #                   transform, pruned with the cost model,
 #   cache.py        a plan cache keyed on (program fingerprint, stats epoch)
 #                   for repeated serving traffic,
-#   explain.py      EXPLAIN rendering of estimates vs. the chosen plan.
+#   feedback.py     adaptive re-optimization: ObservedProfiles distilled
+#                   from run telemetry, a bounded per-tenant FeedbackStore,
+#                   and the drift trigger that re-plans when measurements
+#                   leave the estimate band,
+#   explain.py      EXPLAIN rendering of estimates vs. the chosen plan
+#                   (est=/observed= + ``replanned:`` under feedback).
 #
 # Entry point: ``run_planner(program, db, opts)`` — used by
 # ``core.passes.optimize`` when ``OptimizeOptions(planner="cost")``.
 from .stats import DbStats, FieldStats, TableStats, collect_stats
+from .feedback import (
+    FeedbackStore,
+    ObservedProfile,
+    drift_report,
+    extract_profile,
+    filter_signature,
+)
 from .cardinality import CardinalityEstimator, LoopEstimate
 from .cost import CostCoefficients, CostModel, calibrate
 from .enumerate import Candidate, Decision, enumerate_candidates, plan_query
@@ -52,4 +64,9 @@ __all__ = [
     "render_explain",
     "PlannerOutcome",
     "run_planner",
+    "FeedbackStore",
+    "ObservedProfile",
+    "drift_report",
+    "extract_profile",
+    "filter_signature",
 ]

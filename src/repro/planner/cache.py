@@ -80,6 +80,19 @@ class PlanCache:
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
 
+    def invalidate_fingerprint(self, prefix: str) -> int:
+        """Drop every entry whose fingerprint starts with ``prefix``.
+
+        The planner's cache key is ``<semantic fingerprint>|<knob suffix>``,
+        so passing the semantic ``program_fingerprint`` evicts every knob
+        variant of ONE query while neighbour queries survive — this is the
+        drift trigger's targeted invalidation path.  Returns the count."""
+        with self._lock:
+            stale = [k for k in self._entries if k[0].startswith(prefix)]
+            for k in stale:
+                del self._entries[k]
+            return len(stale)
+
     def invalidate_epoch(self, epoch: str) -> int:
         """Drop every entry planned against ``epoch``; returns count."""
         with self._lock:

@@ -31,6 +31,7 @@ from repro.core.ir import (
     _ixset_str,
 )
 
+from .feedback import ObservedProfile, filter_signature
 from .stats import DbStats
 
 DEFAULT_SELECTIVITY = 1.0 / 3.0  # fallback for unestimatable predicates
@@ -48,14 +49,37 @@ class LoopEstimate:
 
 
 class CardinalityEstimator:
-    def __init__(self, stats: DbStats):
+    def __init__(self, stats: DbStats, profile: Optional[ObservedProfile] = None):
         self.stats = stats
+        self.profile = profile
 
     # -- predicate selectivity ----------------------------------------------
     def selectivity(self, pred: Optional[Expr], table: str) -> float:
         if pred is None:
             return 1.0
+        if self.profile is not None:
+            obs = self.profile.selectivity.get(filter_signature(pred, table))
+            if obs is not None:
+                return float(obs)
         return self._sel(pred, table)
+
+    def partition_row_skew(self, table: str, fld: str, n_partitions: int) -> float:
+        """Max/mean per-partition row ratio when hash-partitioning ``table``
+        on ``fld`` into ``n_partitions`` parts (1.0 = perfectly even).
+
+        Open-loop estimate: the most-common value's frequency bounds the
+        heaviest partition at ``most_common_frac × K`` of even share.  With
+        a feedback profile, the *measured* ratio from the last run's layout
+        wins — it also captures residue clustering (many distinct keys
+        hashing to one partition) that per-key stats cannot see."""
+        if self.profile is not None:
+            obs = self.profile.row_skew.get(f"{table}.{fld}")
+            if obs is not None:
+                return max(1.0, float(obs))
+        fs = self.stats.field(table, fld)
+        if fs is None:
+            return 1.0
+        return max(1.0, fs.most_common_frac * max(1, n_partitions))
 
     def _sel(self, e: Expr, table: str) -> float:
         if isinstance(e, BinOp):

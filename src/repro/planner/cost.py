@@ -27,6 +27,7 @@ from repro.backends import FUSABLE_AGG_OPS, JoinSpec, ProgramSpec, fused_agg_gro
 from repro.kernels.segreduce.ops import pallas_mode
 
 from .cardinality import CardinalityEstimator
+from .feedback import ObservedProfile
 from .stats import DbStats
 
 
@@ -70,6 +71,7 @@ class CostModel:
         stats: DbStats,
         coeffs: Optional[CostCoefficients] = None,
         backend: Optional[str] = None,
+        profile: Optional[ObservedProfile] = None,
     ):
         self.stats = stats
         self.coeffs = coeffs or default_coefficients()
@@ -81,7 +83,8 @@ class CostModel:
             except Exception:
                 backend = "cpu"
         self.backend = backend
-        self.est = CardinalityEstimator(stats)
+        self.profile = profile
+        self.est = CardinalityEstimator(stats, profile)
 
     # -- aggregation --------------------------------------------------------
     def _kernel_per_elem(self) -> float:
@@ -196,14 +199,42 @@ class CostModel:
             return 1.0 + math.log2(max(2.0, rows / max(1, n_partitions)))
         return 1.0
 
+    def _compile_discount(self) -> float:
+        """Scale on the per-bucket compile term when a feedback profile
+        reports the jit cache's measured hit rate: a plan whose buckets are
+        already compiled (hit rate → 1) pays almost no compile cost on the
+        next run, so re-planning should not over-penalize bucket-rich
+        schedules that are in fact warm."""
+        if self.profile is None:
+            return 1.0
+        return max(0.1, 1.0 - float(self.profile.jit_hit_rate))
+
+    def _compile_cost(self, schedule: str, n_partitions: int, rows: float) -> float:
+        return (
+            self.est_buckets(schedule, n_partitions, rows)
+            * self.coeffs.c_part_compile
+            * self._compile_discount()
+        )
+
     def partition_skew(
         self, table: str, partition_field: Optional[Tuple[str, str]], n_partitions: int, schedule: str
     ) -> float:
         """Hash-partitioning on a skewed field leaves one partition with
         most of the rows.  A static schedule dispatches it as one block
         (full skew penalty); the self-scheduling policies break it into
-        shrinking chunks that rebalance, retaining only a fraction of it."""
-        base = self._skew_penalty(table, partition_field, "partitioned", n_partitions)
+        shrinking chunks that rebalance, retaining only a fraction of it.
+
+        With a feedback profile the *measured* max/mean row ratio replaces
+        the stats-derived estimate: the observed ratio directly bounds the
+        static-schedule makespan inflation (the heaviest partition runs
+        obs× the even share), clamped at K (perfect serialization)."""
+        base = None
+        if self.profile is not None and partition_field is not None:
+            obs = self.profile.row_skew.get(f"{partition_field[0]}.{partition_field[1]}")
+            if obs is not None:
+                base = 1.0 + min(float(n_partitions) - 1.0, max(0.0, float(obs) - 1.0))
+        if base is None:
+            base = self._skew_penalty(table, partition_field, "partitioned", n_partitions)
         if schedule == "static":
             return base
         # self-scheduling re-chunks the heavy partition into shrinking
@@ -251,7 +282,7 @@ class CostModel:
                 base * self.partition_skew(agg.table, pf, K, schedule)
                 + rows * c.c_scan                     # hash + shuffle pass
                 + nch * c.c_part_launch               # jitted chunk dispatches
-                + self.est_buckets(schedule, K, rows) * c.c_part_compile
+                + self._compile_cost(schedule, K, rows)
                 + nch * nk * len(aggs) * c.c_combine  # partial-accumulator merges
                 + self.memory_penalty(rows / K)       # per-chunk working set
             )
@@ -268,7 +299,7 @@ class CostModel:
                     f"reduce {sr.var} over {sr.table} (K={K})",
                     rows * c.c_scan
                     + nch * c.c_part_launch
-                    + self.est_buckets(schedule, K, rows) * c.c_part_compile,
+                    + self._compile_cost(schedule, K, rows),
                 )
             )
 
@@ -288,7 +319,7 @@ class CostModel:
                     rows * c.c_scan
                     + sel * rows * c.c_output * max(1, len(fp.items))
                     + nch * c.c_part_launch
-                    + self.est_buckets(schedule, K, rows) * c.c_part_compile,
+                    + self._compile_cost(schedule, K, rows),
                 )
             )
 
@@ -302,7 +333,7 @@ class CostModel:
                 * self.partition_skew(j.probe_table, (j.probe_table, j.probe_fk), K, schedule)
                 + (probe + build) * c.c_scan          # shuffle both sides on the key
                 + nch * c.c_part_launch
-                + self.est_buckets(schedule, K, probe) * c.c_part_compile
+                + self._compile_cost(schedule, K, probe)
                 + self.memory_penalty((probe + build) / K)
             )
             if j.aggs:

@@ -56,6 +56,8 @@ def run_planner(
     jit_chunks: bool = True,
     async_dispatch: bool = True,
     tracer: Any = None,
+    feedback: Any = None,
+    feedback_tenant: str = "",
 ) -> PlannerOutcome:
     tr = tracer if tracer is not None else NULL_TRACER
     cache = plan_cache if plan_cache is not None else DEFAULT_CACHE
@@ -65,9 +67,12 @@ def run_planner(
     # backend is part of the key: a plan compiled by one backend must never
     # be served to a caller asking for another; likewise a pinned K /
     # schedule / chunk-dispatch knob (jit_chunks, async_dispatch) produces
-    # a different compiled plan than the planner's pick.
+    # a different compiled plan than the planner's pick.  The semantic
+    # fingerprint is the key's PREFIX so the drift trigger can evict every
+    # knob variant of one query (PlanCache.invalidate_fingerprint).
+    sem_fp = program_fingerprint(program)
     fp = (
-        f"{program_fingerprint(program)}|n{n_parts}|s{int(allow_shard_map)}"
+        f"{sem_fp}|n{n_parts}|s{int(allow_shard_map)}"
         f"|c{hash(coeffs)}|b{backend}|K{n_partitions}|sch{schedule}"
         f"|j{int(jit_chunks)}|a{int(async_dispatch)}"
     )
@@ -89,6 +94,16 @@ def run_planner(
             cached_entry=entry,
         )
 
+    # feedback lookup (planner/feedback.py): measurements from earlier runs
+    # of this exact program, isolated per tenant.  A profile recorded
+    # against a different stats epoch is stale — the data changed — and is
+    # ignored rather than steering the plan with dead history.
+    profile = None
+    if feedback is not None:
+        profile = feedback.get(sem_fp, tenant=feedback_tenant)
+        if profile is not None and profile.epoch and profile.epoch != epoch:
+            profile = None
+
     with tr.span("plan.stats"):
         stats = collect_stats(db)
     # enumeration and costing happen together per candidate (plan_query
@@ -97,11 +112,17 @@ def run_planner(
         decision = plan_query(
             program, stats, n_parts=n_parts, coeffs=coeffs, allow_shard_map=allow_shard_map,
             executor=backend, n_partitions=n_partitions, schedule=schedule,
+            profile=profile,
         )
         es.set(
             n_enumerated=decision.n_enumerated,
             chosen_order=decision.chosen.order,
             chosen_cost=float(decision.chosen.cost),
+            replanned=profile is not None,
         )
+    decision.fingerprint = sem_fp
+    if profile is not None:
+        decision.observed = profile
+        decision.replanned = profile.decision_diff(decision.chosen)
     explain = render_explain(decision, name=program.name, cache_hit=False)
     return PlannerOutcome(decision.chosen.program, decision, explain, False, fp, epoch, cache)

@@ -4,8 +4,8 @@
 # model and pruned to the cheapest.
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.analysis import deps
 from repro.core import transforms as T
@@ -20,6 +20,7 @@ from repro.backends import (
 
 from .cardinality import CardinalityEstimator, LoopEstimate
 from .cost import CostCoefficients, CostModel
+from .feedback import ObservedProfile, filter_signature
 from .stats import DbStats
 
 AGG_METHODS = ("dense", "sort", "onehot", "kernel")
@@ -61,6 +62,19 @@ class Decision:
     # legality diagnostics (repro.analysis.deps): strategy-space regions the
     # dependence analysis rejected before pricing (shown by EXPLAIN)
     rejections: Tuple[str, ...] = ()
+    # -- feedback-loop bookkeeping (planner/feedback.py) ---------------------
+    # the estimates the chosen plan was priced on (``sel[...]``/``skew[...]``
+    # keys) — the drift trigger compares these against the run's measurements
+    estimates: Dict[str, float] = field(default_factory=dict)
+    # the ObservedProfile this decision consumed (None = open-loop plan);
+    # also the convergence guard: profile-informed plans never re-trigger
+    observed: Optional[object] = None
+    # EXPLAIN's ``replanned:`` line — how this decision differs from the one
+    # the profile was measured under (None = same decision or open loop)
+    replanned: Optional[str] = None
+    # semantic program fingerprint (cache.program_fingerprint) — the
+    # FeedbackStore key and the prefix for targeted cache invalidation
+    fingerprint: str = ""
 
     @property
     def n_enumerated(self) -> int:
@@ -127,6 +141,7 @@ def enumerate_candidates(
     n_partitions: Optional[int] = None,
     schedule: Optional[str] = None,
     rejections: Optional[List[str]] = None,
+    profile: Optional[ObservedProfile] = None,
 ) -> List[Candidate]:
     """Enumerate and price every plan in the strategy space.  Programs whose
     shape the vectorized lowering does not support are skipped (they would
@@ -141,8 +156,11 @@ def enumerate_candidates(
     The dependence analysis (repro.analysis.deps) gates the parallel regions
     of the space: when any accumulate op is not commutative+associative the
     K>1 / parallel≠'none' candidates are never priced, and a diagnostic is
-    appended to ``rejections`` (surfaced by EXPLAIN)."""
-    model = CostModel(stats, coeffs, backend=backend)
+    appended to ``rejections`` (surfaced by EXPLAIN).
+
+    ``profile`` (planner/feedback.py) substitutes measured selectivity /
+    row skew / jit hit rate for the static-stats estimates when pricing."""
+    model = CostModel(stats, coeffs, backend=backend, profile=profile)
     orders: List[Tuple[str, Program]] = [("as-written", program)]
     for k, variant in enumerate(T.join_orders(program)):
         orders.append((f"interchanged[{k}]", variant))
@@ -256,6 +274,34 @@ def enumerate_candidates(
     return out
 
 
+def _decision_estimates(est: CardinalityEstimator, chosen: Candidate) -> Dict[str, float]:
+    """The row-count estimates the chosen plan was priced on, keyed so
+    ``ObservedProfile.value_for`` can resolve each one to its measurement:
+    ``sel[<filter signature>]`` per filtered projection, ``skew[table.field]``
+    per partitioned aggregation/join key.  The drift trigger compares this
+    dict against the run's observations."""
+    out: Dict[str, float] = {}
+    try:
+        spec = extract_spec(chosen.program)
+    except UnsupportedProgram:
+        return out
+    K = chosen.n_partitions or 1
+    for fp in spec.filter_projects:
+        if fp.filter_pred is not None:
+            sig = filter_signature(fp.filter_pred, fp.table)
+            out[f"sel[{sig}]"] = est.selectivity(fp.filter_pred, fp.table)
+    if K > 1:
+        for agg in spec.aggs:
+            out[f"skew[{agg.table}.{agg.key_field}]"] = est.partition_row_skew(
+                agg.table, agg.key_field, K
+            )
+        for j in spec.joins:
+            out[f"skew[{j.probe_table}.{j.probe_fk}]"] = est.partition_row_skew(
+                j.probe_table, j.probe_fk, K
+            )
+    return out
+
+
 def plan_query(
     program: Program,
     stats: DbStats,
@@ -266,21 +312,28 @@ def plan_query(
     executor: Optional[str] = None,
     n_partitions: Optional[int] = None,
     schedule: Optional[str] = None,
+    profile: Optional[ObservedProfile] = None,
 ) -> Decision:
     """Pick the cheapest plan; on unsupported shapes fall back to the
-    as-written program with the pipeline's fixed defaults."""
-    est = CardinalityEstimator(stats)
+    as-written program with the pipeline's fixed defaults.
+
+    With a feedback ``profile`` the estimator and cost model prefer the
+    measured values, so ``Decision.estimates`` reflects what the plan was
+    *actually* priced on (est==observed after a replan — the fixed point
+    the drift trigger converges to)."""
+    est = CardinalityEstimator(stats, profile)
     rejections: List[str] = []
     try:
         cands = enumerate_candidates(
             program, stats, n_parts, coeffs, allow_shard_map=allow_shard_map,
             backend=backend, executor=executor, n_partitions=n_partitions, schedule=schedule,
-            rejections=rejections,
+            rejections=rejections, profile=profile,
         )
         chosen = cands[0]
         return Decision(
             chosen, cands, est.loop_estimates(chosen.program), stats.epoch,
             rejections=tuple(rejections),
+            estimates=_decision_estimates(est, chosen),
         )
     except UnsupportedProgram as e:
         illegal = bool(deps.merge_illegal_ops(deps.accumulate_ops(program.body)))

@@ -68,6 +68,28 @@ def render_explain(
     )
     for op, cost in c.breakdown:
         lines.append(f"    {op:<56s} cost≈{_fmt(cost)}")
+
+    # feedback block (planner/feedback.py): the measured profile this plan
+    # consumed, lined up est=/observed= per estimate, plus the decision
+    # delta vs the run the profile was measured under
+    prof = getattr(decision, "observed", None)
+    if prof is not None:
+        lines.append(f"  feedback (profile: {prof.n_runs} prior run(s)):")
+        for key in sorted(decision.estimates):
+            obs_v = prof.value_for(key)
+            if obs_v is None:
+                continue
+            lines.append(
+                f"    {key:<52s} est={decision.estimates[key]:.4g} observed={obs_v:.4g}"
+            )
+        lines.append(
+            f"    chunk_cost≈{prof.chunk_ms:.3f}ms"
+            f" jit_hit_rate={prof.jit_hit_rate * 100:.0f}%"
+            f" chunks={prof.n_chunks}"
+        )
+        if decision.replanned:
+            lines.append(f"  replanned: {decision.replanned}")
+
     if decision.fallback_reason:
         lines.append(f"  (fallback to fixed defaults: {decision.fallback_reason})")
 

@@ -1,0 +1,296 @@
+# Adaptive re-optimization (planner/feedback.py + engine wiring): profiles
+# distilled from measured chunk telemetry, the drift trigger that invalidates
+# cached plans, feedback-guided re-planning, and mid-run skew splitting.
+#
+# The workload generator exploits the partitioner's structure: hash_partition
+# multiplies by 0x9E3779B1 ≡ 1 (mod 8), so with K=8 a value lands on
+# partition ``v mod 8``.  Keys with EXACTLY uniform per-key counts but a
+# biased residue distribution look perfectly balanced to the stats collector
+# (most_common_frac = 1/n_keys → estimated skew 1.0) while one partition
+# actually receives most of the rows — the planner can only learn that from
+# the measured dispatch log, which is precisely what the feedback loop tests.
+import numpy as np
+import pytest
+
+from repro import QueryServer, Session
+from repro.backends.partitioned import SplitPolicy, hash_partition
+from repro.planner import (
+    FeedbackStore,
+    ObservedProfile,
+    drift_report,
+    extract_profile,
+    filter_signature,
+    program_fingerprint,
+)
+
+K = 8
+
+
+def _skewed_keys(n_keys: int, hot_frac: float = 0.6) -> np.ndarray:
+    """Distinct keys, ``hot_frac`` of them ≡ 0 (mod 8) → one hot partition."""
+    n_hot = int(n_keys * hot_frac)
+    hot = np.arange(0, 8 * n_hot, 8)
+    cold = np.array([x for x in range(1, 9 * n_keys) if x % 8][: n_keys - n_hot])
+    keys = np.concatenate([hot, cold])
+    assert len(keys) == n_keys
+    return keys
+
+
+def _skewed_table(n_keys=512, per_key=320, seed=0):
+    rng = np.random.default_rng(seed)
+    v = np.repeat(_skewed_keys(n_keys), per_key)
+    rng.shuffle(v)
+    w = rng.integers(0, 1000, len(v)).astype(np.int64)
+    return v.astype(np.int64), w
+
+
+def _session(**kw):
+    kw.setdefault("backend", "partitioned")
+    kw.setdefault("n_partitions", K)
+    return Session(**kw)
+
+
+Q = "SELECT v, SUM(w) FROM t GROUP BY v"
+
+
+def test_hash_collision_premise():
+    # the workload generator's foundation: multiplier ≡ 1 (mod 8)
+    keys = _skewed_keys(512)
+    parts = hash_partition(keys, K)
+    assert np.array_equal(parts, keys % K)
+    counts = np.bincount(parts, minlength=K)
+    assert counts[0] / counts.sum() == pytest.approx(0.6, abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Profile extraction
+# ---------------------------------------------------------------------------
+def test_profile_matches_dispatch_log():
+    v, w = _skewed_table()
+    s = _session(feedback=True)
+    s.register("t", v=v, w=w)
+    r = s.sql(Q)
+    log = r.plan.dispatch_log
+    assert log, "partitioned run must produce a dispatch log"
+
+    prof = s.feedback.get(program_fingerprint(r.program))
+    assert prof is not None and prof.n_runs == 1
+    # chunk telemetry distilled from the same log the plan exposes
+    assert prof.n_chunks == len(log)
+    assert prof.rows_scanned == sum(d.rows for d in log)
+    assert prof.chunk_ms == pytest.approx(
+        sum(d.t_ms for d in log) / len(log), rel=1e-9
+    )
+    assert prof.jit_hit_rate == pytest.approx(
+        1.0 - sum(1 for d in log if d.compiled) / len(log), rel=1e-9
+    )
+    # measured per-partition skew: max/mean of the hash layout's row counts
+    counts = np.bincount(hash_partition(v, K), minlength=K)
+    assert prof.row_skew["t.v"] == pytest.approx(
+        counts.max() / counts.mean(), rel=1e-6
+    )
+    assert prof.k == K and prof.schedule == r.decision.chosen.schedule
+
+
+def test_profile_observed_selectivity():
+    # a pure filter/project op reports emitted/scanned per filter signature
+    rng = np.random.default_rng(1)
+    v = rng.integers(0, 1000, 120_000).astype(np.int64)
+    w = rng.integers(0, 50, len(v)).astype(np.int64)
+    s = _session(feedback=True)
+    s.register("t", v=v, w=w)
+    q = "SELECT v, w FROM t WHERE v < 100"
+    r = s.sql(q)
+    prof = s.feedback.get(program_fingerprint(r.program))
+    assert prof is not None
+    sig = [k for k in prof.selectivity if k.startswith("t:")]
+    assert sig, f"no filter signature recorded: {prof.selectivity}"
+    assert prof.selectivity[sig[0]] == pytest.approx((v < 100).mean(), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Drift trigger and targeted invalidation
+# ---------------------------------------------------------------------------
+def test_drift_invalidates_only_matching_fingerprint():
+    v, w = _skewed_table()
+    s = _session(feedback=True)
+    s.register("t", v=v, w=w)
+    # scalar reduce: no skew/selectivity estimates, so it can never drift
+    neighbor = "SELECT SUM(w) FROM t"
+    # seed a neighboring cache entry, then trigger drift on Q
+    s.sql(neighbor)
+    n_before = s.plan_cache.stats()["entries"]
+    r1 = s.sql(Q)
+    m = s.metrics_registry
+    assert m.counter_total("replan.drift") == 1.0
+    # Q's plan was evicted; the neighbor's entry survived
+    st = s.plan_cache.stats()
+    assert st["entries"] == n_before
+    r2 = s.sql(Q)
+    assert not r2.cache_hit
+    assert r2.decision.observed is not None
+    # the neighbor still serves from cache
+    rn = s.sql(neighbor)
+    assert rn.cache_hit
+
+
+def test_replan_changes_decision_and_converges():
+    v, w = _skewed_table()
+    s = _session(feedback=True)
+    s.register("t", v=v, w=w)
+    r1 = s.sql(Q)
+    r2 = s.sql(Q)
+    r3 = s.sql(Q)
+    # run 1 plans open-loop on balanced-looking stats; run 2 consumes the
+    # measured skew and picks a different schedule
+    assert r1.decision.chosen.schedule == "static"
+    assert r2.decision.chosen.schedule != "static"
+    assert r2.decision.replanned and "schedule" in r2.decision.replanned
+    # EXPLAIN carries the observed stats and the replanned diff
+    ex = s.explain(Q)
+    assert "observed=" in ex and "replanned:" in ex
+    # fixed point: exactly one drift replan, run 3 reuses the new plan
+    m = s.metrics_registry
+    assert m.counter_total("replan.drift") == 1.0
+    assert r3.dispatch_hit
+    assert r3.decision.chosen.schedule == r2.decision.chosen.schedule
+
+
+def test_replanned_results_bit_identical():
+    v, w = _skewed_table()
+    oracle = _session()  # open-loop: plans once, never replans
+    oracle.register("t", v=v, w=w)
+    want = repr(oracle.sql(Q).results)
+
+    s = _session(feedback=True)
+    s.register("t", v=v, w=w)
+    for _ in range(3):  # covers open-loop, replanned and converged plans
+        assert repr(s.sql(Q).results) == want
+
+
+def test_zero_drift_zero_replans():
+    # uniform keys: observed skew ≈ estimated skew → the loop must not fire
+    rng = np.random.default_rng(2)
+    v = np.repeat(np.arange(512), 200)
+    rng.shuffle(v)
+    w = rng.integers(0, 100, len(v)).astype(np.int64)
+    s = _session(feedback=True)
+    s.register("t", v=v, w=w)
+    for _ in range(3):
+        s.sql(Q)
+    m = s.metrics_registry
+    assert m.counter_total("replan.profiles") >= 3.0
+    assert m.counter_total("replan.drift") == 0.0
+    assert m.counter_total("replan.splits") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Mid-run skew splitting
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("async_dispatch", [False, True], ids=["serial", "pool"])
+def test_midrun_split_bit_identical(async_dispatch):
+    rng = np.random.default_rng(3)
+    v = rng.integers(0, 1024, 200_000).astype(np.int64)
+    w = rng.integers(0, 100, len(v)).astype(np.int64)
+
+    oracle = _session(async_dispatch=async_dispatch)
+    oracle.register("t", v=v, w=w)
+    want = repr(oracle.sql(Q).results)
+
+    s = _session(feedback=True, async_dispatch=async_dispatch)
+    # threshold 0.0 flags every partition once min_completed chunks finish —
+    # the deterministic way to force splits without timing games
+    s._split_policy = SplitPolicy(threshold_factor=0.0, min_rows=1, min_completed=2)
+    s.register("t", v=v, w=w)
+    r = s.sql(Q)
+    assert s.metrics_registry.counter_total("replan.splits") > 0
+    assert repr(r.results) == want
+
+
+def test_midrun_split_disabled_without_feedback():
+    # open-loop sessions keep the historical behavior: no split policy
+    s = _session()
+    assert s._split_policy_for() is None
+    s2 = _session(feedback=True)
+    assert isinstance(s2._split_policy_for(), SplitPolicy)
+
+
+# ---------------------------------------------------------------------------
+# FeedbackStore semantics
+# ---------------------------------------------------------------------------
+def _mk_profile(fp, epoch="e1", **kw):
+    base = dict(
+        fingerprint=fp, epoch=epoch, n_runs=1, wall_ms=10.0, chunk_ms=1.0,
+        jit_hit_rate=0.5, n_chunks=8, rows_scanned=1000, selectivity={},
+        row_skew={"t.v": 2.0}, k=8, schedule="static", agg_method="kernel",
+        join_method="",
+    )
+    base.update(kw)
+    return ObservedProfile(**base)
+
+
+def test_store_bounded_lru():
+    store = FeedbackStore(capacity=4)
+    for i in range(10):
+        store.record(f"fp{i}", _mk_profile(f"fp{i}"))
+    assert len(store) == 4
+    assert store.get("fp0") is None and store.get("fp9") is not None
+
+
+def test_store_ewma_merge_and_epoch_replace():
+    store = FeedbackStore(alpha=0.5)
+    store.record("fp", _mk_profile("fp", chunk_ms=1.0))
+    merged = store.record("fp", _mk_profile("fp", chunk_ms=3.0))
+    assert merged.n_runs == 2
+    assert merged.chunk_ms == pytest.approx(2.0)  # 0.5*1 + 0.5*3
+    # a new stats epoch means the data changed: replace, don't blend
+    fresh = store.record("fp", _mk_profile("fp", epoch="e2", chunk_ms=9.0))
+    assert fresh.n_runs == 1 and fresh.chunk_ms == pytest.approx(9.0)
+
+
+def test_store_tenant_isolation():
+    store = FeedbackStore()
+    store.record("fp", _mk_profile("fp", chunk_ms=1.0), tenant="a")
+    store.record("fp", _mk_profile("fp", chunk_ms=5.0), tenant="b")
+    assert store.get("fp", tenant="a").chunk_ms == pytest.approx(1.0)
+    assert store.get("fp", tenant="b").chunk_ms == pytest.approx(5.0)
+    assert store.get("fp") is None  # default tenant never polluted
+
+
+def test_drift_report_band():
+    prof = _mk_profile("fp", row_skew={"t.v": 4.8})
+    est = {"skew[t.v]": 1.0}
+    assert drift_report(prof, est, band=2.0)
+    assert not drift_report(prof, est, band=10.0)
+    # observed inside the band → quiet
+    assert not drift_report(_mk_profile("fp", row_skew={"t.v": 1.5}), est, 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: shared store, per-tenant profiles
+# ---------------------------------------------------------------------------
+def test_server_shared_store_tenant_isolated():
+    v, w = _skewed_table(n_keys=256, per_key=60)
+    srv = QueryServer(n_partitions=K, feedback=True)
+    try:
+        srv.register("t", v=v, w=w)
+        srv.submit(Q, tenant="a")
+        srv.submit(Q, tenant="b")
+        sa, sb = srv.session("a"), srv.session("b")
+        assert sa.feedback is srv.feedback and sb.feedback is srv.feedback
+        fp = program_fingerprint(srv.submit(Q, tenant="a").program)
+        pa = srv.feedback.get(fp, tenant="a")
+        pb = srv.feedback.get(fp, tenant="b")
+        assert pa is not None and pb is not None and pa is not pb
+        assert pa.n_runs == 2 and pb.n_runs == 1
+    finally:
+        srv.close()
+
+
+def test_filter_signature_stable():
+    # same predicate → same signature; different table → different key
+    from repro.core.ir import BinOp, Const, FieldRef
+
+    pred = BinOp("<", FieldRef("t", "i", "v"), Const(100))
+    assert filter_signature(pred, "t") == filter_signature(pred, "t")
+    assert filter_signature(pred, "t") != filter_signature(pred, "u")
